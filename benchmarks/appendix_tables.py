@@ -1,0 +1,58 @@
+"""Paper Appendix B tables: the three sweep axes of the logistic-regression
+table — (i) nodes N at fixed per-node data, (ii) rows-per-node at fixed N,
+(iii) features at fixed rows — transpose vs consensus compute time."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.consensus import ConsensusLogistic
+from repro.core.oracles import logistic_objective, newton_logistic
+from repro.core.prox import make_logistic
+from repro.core.unwrapped import UnwrappedADMM
+from repro.data.synthetic import classification_problem
+
+from benchmarks.common import iters_to_tol, time_fn
+
+
+def _cell(N, m_per, n, het):
+    prob = classification_problem(jax.random.PRNGKey(7), N=N,
+                                  m_per_node=m_per, n=n, heterogeneity=het)
+    D2 = np.asarray(prob.D.reshape(-1, n))
+    l2 = np.asarray(prob.labels.reshape(-1))
+    obj_star = logistic_objective(D2, l2, newton_logistic(D2, l2))
+    tr = UnwrappedADMM(loss=make_logistic(), tau=0.1)
+    t_t, res_t = time_fn(lambda: tr.run(prob.D, prob.labels, iters=150),
+                         reps=1)
+    co = ConsensusLogistic(tau=0.5)
+    t_c, res_c = time_fn(lambda: co.run(prob.D, prob.labels, iters=100),
+                         reps=1)
+    it_t = iters_to_tol(res_t.history.objective, obj_star)
+    it_c = iters_to_tol(res_c.history.objective, obj_star)
+    return (t_t * it_t / 150, t_c * it_c / 100, it_t, it_c)
+
+
+def run(out_rows: list, quick: bool = False):
+    base_N, base_m, base_n = 4, 800, 60
+    rows = []
+    sweeps = {
+        "nodes": [(N, base_m, base_n) for N in ((2, 4) if quick
+                                                else (2, 4, 8))],
+        "rows": [(base_N, m, base_n) for m in ((400, 800) if quick
+                                               else (400, 800, 1600))],
+        "features": [(base_N, base_m, n) for n in ((30, 60) if quick
+                                                   else (30, 60, 120))],
+    }
+    for het_name, het in (("homo", 0.0), ("hetero", 1.0)):
+        axes = ["nodes"] if het_name == "hetero" and quick else sweeps
+        for axis in (sweeps if not quick else {"nodes": sweeps["nodes"]}):
+            for (N, m, n) in sweeps[axis]:
+                ct, cc, it, ic = _cell(N, m, n, het)
+                rows.append((het_name, axis, N, m, n, ct, cc))
+                out_rows.append(
+                    f"appendix_logreg_{het_name}_{axis}_N{N}_m{m}_F{n},"
+                    f"{ct*1e6:.0f},consensus={cc:.2f}s;"
+                    f"ratio={cc/max(ct,1e-9):.1f}x;iters={it}v{ic}")
+        if het_name == "homo" and quick:
+            break
+    return rows

@@ -1,0 +1,42 @@
+"""Shared benchmark utilities: timing, iterations-to-tolerance, and the
+paper-style 'total compute time' model.
+
+Methodology note (CPU container): absolute wall-times here are CPU numbers;
+what reproduces the paper is the STRUCTURE — iterations-to-convergence of
+each method, per-iteration cost, and their scaling in (N, m, n). We report
+measured per-iteration wall time x iterations (compute time), plus the
+analytic per-iteration FLOP model (repro.core.fit._flops_per_iter) evaluated
+at the paper's core counts.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, reps: int = 3, warmup: int = 1):
+    """Median wall time of fn(*args) after jit warmup."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def iters_to_tol(objs, obj_star: float, rel: float = 1e-3) -> int:
+    objs = np.asarray(objs)
+    thr = obj_star + rel * abs(obj_star)
+    hits = np.nonzero(objs <= thr)[0]
+    return int(hits[0]) + 1 if len(hits) else len(objs)
+
+
+def fmt_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,128 @@
+"""Paper Figure 1 (a/b/c): total compute time, transpose vs consensus, as a
+function of corpus size (= number of nodes x fixed per-node data).
+
+  fig1a: logistic regression, homogeneous data
+  fig1b: SVM, homogeneous data
+  fig1c: lasso, heterogeneous data
+
+Emulated node counts are scaled to CPU (paper: 48..7200 cores); the reported
+'compute' column is per-iteration wall time x iterations-to-tolerance, the
+paper's 'total compute time' notion. The 'paper-scale' column extrapolates
+the analytic FLOP model to the paper's configuration of Fig. 1.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.consensus import ConsensusLasso, ConsensusLogistic, ConsensusSVM
+from repro.core.fasta import transpose_reduction_lasso
+from repro.core import gram as gram_lib
+from repro.core.fit import _flops_per_iter
+from repro.core.oracles import (
+    lasso_objective,
+    logistic_objective,
+    newton_logistic,
+    svm_dual_cd,
+    svm_objective,
+)
+from repro.core.prox import make_hinge, make_logistic
+from repro.core.unwrapped import UnwrappedADMM
+from repro.data.synthetic import classification_problem, lasso_problem
+
+from benchmarks.common import iters_to_tol, time_fn
+
+NODE_COUNTS = (2, 4, 8)
+
+
+def _one_cell(problem: str, N: int, m_per: int, n: int, het: float):
+    key = jax.random.PRNGKey(N)
+    rows = []
+    if problem in ("logistic", "svm"):
+        prob = classification_problem(key, N=N, m_per_node=m_per, n=n,
+                                      heterogeneity=het)
+        D2 = np.asarray(prob.D.reshape(-1, n))
+        l2 = np.asarray(prob.labels.reshape(-1))
+        if problem == "logistic":
+            obj_star = logistic_objective(D2, l2, newton_logistic(D2, l2))
+            tr = UnwrappedADMM(loss=make_logistic(), tau=0.1)
+            t_tr, res_t = time_fn(
+                lambda: tr.run(prob.D, prob.labels, iters=150), reps=1)
+            co = ConsensusLogistic(tau=0.5)
+            t_co, res_c = time_fn(
+                lambda: co.run(prob.D, prob.labels, iters=150), reps=1)
+            objf = lambda x: logistic_objective(D2, l2, np.asarray(x))
+        else:
+            obj_star = svm_objective(
+                D2, l2, svm_dual_cd(D2, l2, 1.0, passes=800), 1.0)
+            tr = UnwrappedADMM(loss=make_hinge(1.0), tau=0.5, rho=1.0)
+            t_tr, res_t = time_fn(
+                lambda: tr.run(prob.D, prob.labels, iters=200), reps=1)
+            co = ConsensusSVM(C=1.0, tau=1.0, cd_passes=4)
+            t_co, res_c = time_fn(
+                lambda: co.run(prob.D, prob.labels, iters=100), reps=1)
+            objf = lambda x: svm_objective(D2, l2, np.asarray(x), 1.0)
+        it_t = iters_to_tol(res_t.history.objective, obj_star)
+        it_c = iters_to_tol(res_c.history.objective, obj_star)
+        n_iters_t = len(res_t.history.objective)
+        n_iters_c = len(res_c.history.objective)
+    else:  # lasso (transpose = §4 direct reduction + FASTA on central node)
+        prob = lasso_problem(key, N=N, m_per_node=m_per, n=n,
+                             heterogeneity=het)
+        Dflat = prob.D.reshape(-1, n)
+        bflat = prob.b.reshape(-1)
+        D2, b2 = np.asarray(Dflat), np.asarray(bflat)
+        mu = float(prob.mu)
+        G, c = gram_lib.gram_and_rhs_chunked(Dflat, bflat)
+        x_star = np.asarray(
+            transpose_reduction_lasso(G, c, mu, iters=4000).x)
+        obj_star = lasso_objective(D2, b2, x_star, mu)
+
+        def run_transpose():
+            G, c = gram_lib.gram_and_rhs_chunked(Dflat, bflat)
+            return transpose_reduction_lasso(G, c, mu, iters=400)
+
+        t_tr, res_t = time_fn(run_transpose, reps=1)
+        co = ConsensusLasso(mu=mu, tau=1.0)
+        t_co, res_c = time_fn(lambda: co.run(prob.D, prob.b, iters=400),
+                              reps=1)
+        it_t = iters_to_tol(res_t.objective, obj_star)
+        it_c = iters_to_tol(res_c.history.objective, obj_star)
+        n_iters_t, n_iters_c = len(res_t.objective), 400
+        objf = lambda x: lasso_objective(D2, b2, np.asarray(x), mu)
+
+    m = N * m_per
+    comp_t = t_tr * it_t / n_iters_t
+    comp_c = t_co * it_c / n_iters_c
+    # paper-scale analytic total-compute (FLOPs to tolerance), at this cell
+    fl_t = _flops_per_iter(problem, "transpose", N, m_per, n) * it_t
+    fl_c = _flops_per_iter(problem, "consensus", N, m_per, n) * it_c
+    return {
+        "N": N, "m": m, "iters_transpose": it_t, "iters_consensus": it_c,
+        "compute_s_transpose": comp_t, "compute_s_consensus": comp_c,
+        "flops_transpose": fl_t, "flops_consensus": fl_c,
+        "speedup_measured": comp_c / max(comp_t, 1e-12),
+        "speedup_flops": fl_c / max(fl_t, 1e-12),
+    }
+
+
+def run(out_rows: list, quick: bool = False):
+    cells = [
+        ("fig1a_logistic_homo", "logistic", 0.0, 1000, 80),
+        ("fig1b_svm_homo", "svm", 0.0, 800, 40),
+        ("fig1c_lasso_hetero", "lasso", 1.0, 1000, 80),
+    ]
+    counts = NODE_COUNTS[:2] if quick else NODE_COUNTS
+    results = {}
+    for name, problem, het, m_per, n in cells:
+        per_n = []
+        for N in counts:
+            r = _one_cell(problem, N, m_per, n, het)
+            per_n.append(r)
+            out_rows.append(
+                f"{name}_N{N},{r['compute_s_transpose']*1e6:.0f},"
+                f"speedup_measured={r['speedup_measured']:.1f}x;"
+                f"speedup_flops={r['speedup_flops']:.1f}x;"
+                f"iters={r['iters_transpose']}v{r['iters_consensus']}")
+        results[name] = per_n
+    return results

@@ -1,0 +1,73 @@
+"""§Roofline reporting: collate artifacts/dryrun/*.json into the per-cell
+three-term table (and the markdown block EXPERIMENTS.md embeds)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path("artifacts/dryrun")
+
+
+def load_cells(mesh: str = "16x16", art: Path = None):
+    ART_ = Path(art) if art else ART
+    cells = []
+    if not ART_.exists():
+        return cells
+    for p in sorted(ART_.glob("*.json")):
+        if "FAILED" in p.name or f"__{mesh}" not in p.name:
+            continue
+        c = json.loads(p.read_text())
+        if "roofline" not in c:      # admm fit cells have per-phase terms
+            continue
+        cells.append(c)
+    return cells
+
+
+def load_admm_cells():
+    out = []
+    if not ART.exists():
+        return out
+    for p in sorted(ART.glob("admm_*.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def markdown_table(cells) -> str:
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | "
+           "bottleneck | frac_of_bound | useful_ratio | peak_GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for c in cells:
+        t = c["roofline"]
+        peak = c["per_device"].get("peak_memory_bytes")
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"{t['bottleneck']} | {t['compute_fraction_of_bound']:.3f} | "
+            f"{c['useful_flop_ratio']:.2f} | "
+            f"{(peak or 0)/2**30:.1f} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def run(out_rows: list, quick: bool = False):
+    cells = load_cells()
+    for c in cells:
+        t = c["roofline"]
+        out_rows.append(
+            f"roofline_{c['arch']}_{c['shape']},0,"
+            f"bottleneck={t['bottleneck']};"
+            f"frac={t['compute_fraction_of_bound']:.3f}")
+    if cells:
+        worst = min(cells,
+                    key=lambda c: c["roofline"]["compute_fraction_of_bound"])
+        out_rows.append(
+            f"roofline_worst_cell,0,{worst['arch']}x{worst['shape']};"
+            f"frac={worst['roofline']['compute_fraction_of_bound']:.3f}")
+    return cells
+
+
+if __name__ == "__main__":
+    import sys
+    art = sys.argv[1] if len(sys.argv) > 1 else None
+    cells = load_cells(art=art)
+    print(markdown_table(cells))

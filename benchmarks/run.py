@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,...]``
+
+Prints ``name,us_per_call,derived`` CSV rows (one per measured cell).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = {
+    "fig1": "benchmarks.fig1_scaling",        # Fig 1 a/b/c scaling sweeps
+    "fig2": "benchmarks.fig2_convergence",    # Fig 2 a/b/c curves
+    "table1": "benchmarks.table1_star",       # Table 1 star-catalog sweep
+    "appendix": "benchmarks.appendix_tables", # Appendix B sweeps
+    "tau": "benchmarks.tau_calibration",      # §9 tuning protocol
+    "roofline": "benchmarks.roofline_report", # §Roofline collation
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes (CI-friendly)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of: " + ",".join(MODULES))
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else set(MODULES)
+
+    rows = ["name,us_per_call,derived"]
+    for key, modname in MODULES.items():
+        if key not in only:
+            continue
+        mod = __import__(modname, fromlist=["run"])
+        t0 = time.time()
+        try:
+            mod.run(rows, quick=args.quick)
+            rows.append(f"{key}_total,{(time.time()-t0)*1e6:.0f},ok")
+        except Exception as e:  # keep the harness going, report the failure
+            rows.append(f"{key}_total,0,FAILED:{type(e).__name__}:{e}")
+    print("\n".join(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper §9 stepsize-tuning protocol: tune tau on a reference instance and
+check the scaling rule across problem sizes (backs oracles.default_tau)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.oracles import logistic_objective, newton_logistic
+from repro.core.prox import make_logistic
+from repro.core.unwrapped import UnwrappedADMM
+from repro.data.synthetic import classification_problem
+
+from benchmarks.common import iters_to_tol
+
+
+def run(out_rows: list, quick: bool = False):
+    taus = (0.02, 0.05, 0.1, 0.25, 1.0)
+    sizes = ((4, 250),) if quick else ((4, 250), (8, 1000))
+    table = {}
+    for N, m_per in sizes:
+        prob = classification_problem(jax.random.PRNGKey(0), N=N,
+                                      m_per_node=m_per, n=20)
+        D2 = np.asarray(prob.D.reshape(-1, 20))
+        l2 = np.asarray(prob.labels.reshape(-1))
+        obj_star = logistic_objective(D2, l2, newton_logistic(D2, l2))
+        per_tau = {}
+        for tau in taus:
+            res = UnwrappedADMM(loss=make_logistic(), tau=tau).run(
+                prob.D, prob.labels, iters=300)
+            per_tau[tau] = iters_to_tol(res.history.objective, obj_star)
+        best = min(per_tau, key=per_tau.get)
+        table[(N, m_per)] = (best, per_tau)
+        out_rows.append(
+            f"tau_calibration_m{N*m_per},0,best_tau={best};"
+            f"iters={per_tau[best]}")
+    # m-independence of tau* for unwrapped ADMM (DESIGN.md §3 note)
+    bests = [v[0] for v in table.values()]
+    out_rows.append(
+        f"tau_calibration_summary,0,tau_star_stable={len(set(bests)) <= 2}")
+    return table

@@ -1,0 +1,65 @@
+"""Distributed end-to-end driver (the paper's kind of production run):
+row-shard a large synthetic corpus across 8 (virtual) devices, run
+transpose-reduction ADMM under shard_map — one n-vector all-reduce per
+iteration — and validate against the single-node oracle.
+
+    python examples/distributed_fit.py        (sets its own XLA device count)
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import DistributedUnwrappedADMM, shard_rows
+from repro.core.oracles import logistic_objective, newton_logistic
+from repro.core.prox import make_logistic
+from repro.data.synthetic import classification_problem
+
+
+def main():
+    ndev = len(jax.devices())
+    mesh = jax.make_mesh((ndev,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    print(f"devices: {ndev} (each is a paper 'node')")
+
+    N, m_per, n = ndev, 25_000, 200
+    prob = classification_problem(jax.random.PRNGKey(0), N=N,
+                                  m_per_node=m_per, n=n, heterogeneity=1.0)
+    Dflat = prob.D.reshape(-1, n)
+    lflat = prob.labels.reshape(-1)
+    print(f"corpus: {Dflat.shape[0]:,} x {n} "
+          f"({Dflat.size * 4 / 2**30:.2f} GiB), heterogeneous nodes")
+
+    solver = DistributedUnwrappedADMM(loss=make_logistic(), tau=0.1,
+                                      data_axes=("data",))
+    solve = jax.jit(solver.build(mesh, Dflat.shape[0], n, iters=80))
+    Dg = shard_rows(mesh, Dflat, ("data",))
+    lg = shard_rows(mesh, lflat, ("data",))
+    t0 = time.time()
+    x, objs, res = solve(Dg, lg)
+    jax.block_until_ready(x)
+    dt = time.time() - t0
+
+    D2, l2 = np.asarray(Dflat), np.asarray(lflat)
+    obj_star = logistic_objective(D2, l2, newton_logistic(D2, l2))
+    obj = float(objs[-1])
+    acc = float(np.mean(np.sign(D2 @ np.asarray(x)) == l2))
+    print(f"80 ADMM iterations in {dt:.1f}s; objective {obj:.1f} "
+          f"(optimum {obj_star:.1f}, gap {obj-obj_star:.2e}); "
+          f"train acc {acc:.3f}")
+    print("per-iteration network traffic: ONE all-reduce of "
+          f"{n} floats per node (the paper's O(n) claim).")
+
+
+if __name__ == "__main__":
+    main()

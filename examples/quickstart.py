@@ -1,0 +1,63 @@
+"""Quickstart: the paper in 60 seconds.
+
+Fits a lasso by §4 transpose reduction (Gram + single-node FASTA), checks
+the KKT certificate, and races unwrapped ADMM against consensus ADMM on a
+heterogeneous logistic problem (the paper's headline comparison).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gram_and_rhs_chunked, transpose_reduction_lasso
+from repro.core.fit import fit
+from repro.core.oracles import (
+    lasso_kkt_gap,
+    logistic_objective,
+    newton_logistic,
+)
+from repro.data.synthetic import classification_problem, lasso_problem
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+
+    # --- 1. Lasso via transpose reduction (paper §4) -----------------------
+    prob = lasso_problem(key, N=8, m_per_node=2000, n=100)
+    Dflat = prob.D.reshape(-1, 100)
+    print(f"lasso: D is {Dflat.shape[0]}x100 over 8 nodes, "
+          f"mu = {float(prob.mu):.2f} (10% rule)")
+    t0 = time.time()
+    G, c = gram_and_rhs_chunked(Dflat, prob.b.reshape(-1))   # ONE data pass
+    res = transpose_reduction_lasso(G, c, float(prob.mu), iters=2000)
+    dt = time.time() - t0
+    viol, sup = lasso_kkt_gap(np.asarray(Dflat),
+                              np.asarray(prob.b.reshape(-1)),
+                              np.asarray(res.x), float(prob.mu))
+    nnz = int((np.abs(np.asarray(res.x)) > 1e-6).sum())
+    print(f"  solved in {dt:.2f}s ({int(res.iters)} FASTA iters); "
+          f"KKT violation {viol:.1e}; support {nnz} (true 10)")
+
+    # --- 2. Unwrapped ADMM vs consensus on heterogeneous data (§10) --------
+    prob = classification_problem(key, N=8, m_per_node=1000, n=100,
+                                  heterogeneity=1.0)
+    D2 = np.asarray(prob.D.reshape(-1, 100))
+    l2 = np.asarray(prob.labels.reshape(-1))
+    obj_star = logistic_objective(D2, l2, newton_logistic(D2, l2))
+    for method in ("transpose", "consensus"):
+        t0 = time.time()
+        r = fit("logistic", prob.D, prob.labels, method=method, iters=150)
+        objs = np.asarray(r.objective_history)
+        hit = np.nonzero(objs <= obj_star * 1.001)[0]
+        it = int(hit[0]) + 1 if len(hit) else f">{len(objs)}"
+        print(f"  {method:10s}: {time.time()-t0:5.1f}s wall, "
+              f"iterations to 0.1% of optimum: {it}")
+    print("transpose reduction wins; the gap grows with heterogeneity "
+          "(paper Fig. 2b).")
+
+
+if __name__ == "__main__":
+    main()

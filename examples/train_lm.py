@@ -1,0 +1,30 @@
+"""End-to-end LM training driver on the full fault-tolerance stack:
+deterministic pipeline + atomic checkpoints + resume. Uses a reduced
+same-family config by default so it completes on CPU in minutes; pass
+--full for the real config (TPU-scale).
+
+    PYTHONPATH=src python examples/train_lm.py --arch rwkv6-1.6b --steps 200
+"""
+import sys
+
+from repro.launch import train
+
+
+def main():
+    argv = sys.argv[1:]
+    if "--arch" not in argv:
+        argv = ["--arch", "qwen3-8b"] + argv
+    if "--full" in argv:
+        argv.remove("--full")
+    else:
+        argv.append("--smoke")
+    if "--steps" not in argv:
+        argv += ["--steps", "200"]
+    if "--ckpt-dir" not in argv:
+        argv += ["--ckpt-dir", "/tmp/repro_train_lm_ckpt", "--ckpt-every",
+                 "50"]
+    train.main(argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Print the largest collectives of a one-layer unrolled train-step lowering
+— the §Perf hypothesis generator."""
+import argparse
+import dataclasses
+import re
+import sys
+
+import jax
+
+sys.path.insert(0, "src")
+import repro.configs as configs_lib  # noqa: E402
+from repro.launch.dryrun import build_cell  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.roofline.hlo import _OP_RE, _shape_bytes, _group_size, parse_collectives  # noqa: E402
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen3-8b")
+ap.add_argument("--shape", default="train_4k")
+ap.add_argument("--layers", type=int, default=1)
+ap.add_argument("--top", type=int, default=25)
+ap.add_argument("--microbatches", type=int, default=1)
+args = ap.parse_args()
+
+cfg = configs_lib.get(args.arch)
+kw = dict(num_layers=args.layers, scan_layers=False, unroll_inner=True)
+if cfg.family == "encdec":
+    kw["encoder_layers"] = args.layers
+cfg1 = dataclasses.replace(cfg, **kw)
+
+mesh = make_production_mesh(multi_pod=False)
+with jax.set_mesh(mesh):
+    jfn, a = build_cell(args.arch, args.shape, mesh,
+                        microbatches=args.microbatches, cfg_override=cfg1)
+    compiled = jfn.lower(*a).compile()
+    txt = compiled.as_text()
+
+ops = []
+for line in txt.splitlines():
+    m = _OP_RE.search(line)
+    if not m:
+        continue
+    out_shape, kind = m.group(1), m.group(2)
+    b = _shape_bytes(out_shape)
+    g = _group_size(line)
+    name = line.strip().split(" = ")[0]
+    ops.append((b, kind, g, out_shape[:70], name[:60]))
+
+ops.sort(reverse=True)
+total = sum(b for b, *_ in ops)
+print(f"== {args.arch} {args.shape} L={args.layers}: {len(ops)} collectives, "
+      f"sum(out bytes)={total/2**30:.2f} GiB")
+st = parse_collectives(txt)
+print(f"wire bytes: {st.wire_bytes/2**30:.2f} GiB  by kind: "
+      f"{ {k: round(v/2**30,2) for k,v in st.by_kind().items()} }")
+for b, kind, g, shape, name in ops[:args.top]:
+    print(f"{b/2**20:10.1f} MiB  {kind:18s} g={g:3d}  {shape}  {name}")
+
+ca = compiled.cost_analysis()
+print("flops:", f"{ca.get('flops',0):.3e}", "bytes:",
+      f"{ca.get('bytes accessed',0):.3e}")

@@ -1,0 +1,32 @@
+"""arctic-480b [moe] — 35L d7168 56H (GQA kv=8) d_ff=4864 vocab=32000,
+MoE 128 experts top-2 + dense residual [hf:Snowflake/snowflake-arctic-base].
+
+Memory plan: adam m/v at 480B params is ~3.8 TB f32 and does NOT fit
+256 x 16 GB; this config uses Adafactor (factored second moment) per
+DESIGN.md §6. kv_repeat=1: the GQA group is 56/8=7, so no valid repeat
+aligns 16-way TP — GSPMD pads the kv-head dim (a known imbalance, see
+EXPERIMENTS.md §Perf notes).
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-480b", family="moe",
+        num_layers=35, d_model=7168, num_heads=56, num_kv_heads=8,
+        head_dim=128, d_ff=4864, vocab_size=32000,
+        num_experts=128, experts_per_token=2, moe_d_ff=4864,
+        moe_dense_residual=True, capacity_factor=1.25,
+        kv_repeat=1, optimizer="adafactor",
+        fsdp=True, moe_impl="a2a",
+        skip_shapes=("long_500k",),   # pure full attention
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        config(), num_layers=2, d_model=64, num_heads=8, num_kv_heads=8,
+        head_dim=8, d_ff=96, moe_d_ff=96, vocab_size=256,
+        num_experts=8, experts_per_token=2, optimizer="adamw",
+    )

@@ -1,0 +1,36 @@
+"""The paper's contribution: unwrapped ADMM with transpose reduction."""
+from repro.core.prox import (
+    ProxLoss,
+    StackedProx,
+    make_hinge,
+    make_l1,
+    make_least_squares,
+    make_linf_ball,
+    make_logistic,
+    make_shifted_least_squares,
+    soft_threshold,
+)
+# NOTE: the submodule is ``repro.core.gram``; we deliberately do not re-export
+# the bare ``gram()`` function here so the submodule binding is not shadowed.
+from repro.core.gram import (
+    gram_and_rhs_chunked,
+    gram_chunked,
+    gram_factor,
+    gram_rhs,
+    gram_solve,
+)
+from repro.core.unwrapped import ADMMResult, UnwrappedADMM
+from repro.core.consensus import ConsensusLasso, ConsensusLogistic, ConsensusSVM
+from repro.core.fasta import Fasta, lasso_mu_max, transpose_reduction_lasso
+from repro.core.distributed import DistributedUnwrappedADMM, shard_rows
+from repro.core.fit import FitResult, fit
+
+__all__ = [
+    "ProxLoss", "StackedProx", "make_hinge", "make_l1", "make_least_squares",
+    "make_linf_ball", "make_logistic", "make_shifted_least_squares",
+    "soft_threshold", "gram_and_rhs_chunked", "gram_chunked",
+    "gram_factor", "gram_rhs", "gram_solve", "ADMMResult", "UnwrappedADMM",
+    "ConsensusLasso", "ConsensusLogistic", "ConsensusSVM", "Fasta",
+    "lasso_mu_max", "transpose_reduction_lasso", "DistributedUnwrappedADMM",
+    "shard_rows", "FitResult", "fit",
+]

@@ -1,0 +1,137 @@
+"""High-level model-fitting API — the paper's contribution as one call.
+
+``fit()`` dispatches on (problem, method):
+
+  problem: "lasso" | "logistic" | "svm" | "sparse_logistic"
+  method:  "transpose"  — the paper (unwrapped ADMM w/ transpose reduction,
+                          or the §4 direct Gram path for lasso)
+           "consensus"  — the Boyd baseline the paper compares against
+           "fasta"      — single-node forward-backward (lasso only)
+
+Single-process emulation takes node-stacked D (N, m_i, n). Multi-device
+takes a Mesh and row-sharded global arrays (see repro.core.distributed).
+This is also the entry point the LM framework uses for linear-probe /
+readout fitting on frozen transformer features (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import consensus as cons
+from repro.core import fasta as fasta_lib
+from repro.core import gram as gram_lib
+from repro.core import prox as prox_lib
+from repro.core.oracles import default_tau
+from repro.core.unwrapped import UnwrappedADMM
+
+Array = jax.Array
+
+
+class FitResult(NamedTuple):
+    x: Array
+    iters: int
+    objective_history: Optional[Array]
+    method: str
+    problem: str
+
+
+def _flops_per_iter(problem: str, method: str, N: int, mi: int, n: int) -> float:
+    """Analytic per-iteration FLOP model (used by the scaling benchmarks to
+    report paper-style 'total compute time' at core counts we do not emulate).
+    """
+    m = N * mi
+    if method == "transpose":
+        # d = D^T(y-lam): 2mn; Dx: 2mn; solve: 2n^2; prox: ~10m.
+        return 4.0 * m * n + 2.0 * n * n + 10.0 * m
+    # consensus per outer iter: inner solver dominated.
+    if problem == "lasso":
+        # cached factor solve per node: 2n^2 + 2 m_i n for rhs
+        return N * (2.0 * n * n) + 2.0 * m * n
+    if problem in ("logistic", "sparse_logistic"):
+        # Newton: per inner iter H build = m_i n^2, solve n^3/3; ~8 inner
+        return 8.0 * (m * n * n + N * n**3 / 3.0)
+    if problem == "svm":
+        # CD pass: O(m_i n) per pass * passes(4) + greedy grad O(m_i n)
+        return 8.0 * m * n
+    raise ValueError(problem)
+
+
+def fit(
+    problem: str,
+    D: Array,                      # (N, m_i, n) node-stacked
+    aux: Array,                    # labels or b, (N, m_i)
+    method: str = "transpose",
+    mu: Optional[float] = None,    # l1 weight (lasso / sparse_logistic)
+    C: float = 1.0,                # SVM hinge weight
+    tau: Optional[float] = None,
+    iters: int = 500,
+    record: bool = True,
+) -> FitResult:
+    N, mi, n = D.shape
+    m = N * mi
+    if tau is None and problem in ("lasso", "logistic", "svm", "sparse_logistic"):
+        tau = default_tau(
+            {"sparse_logistic": "logistic"}.get(problem, problem), m
+        )
+
+    if problem == "lasso":
+        assert mu is not None
+        if method == "transpose" or method == "fasta":
+            # §4: direct transpose reduction + single-node FASTA.
+            Dflat = D.reshape(m, n)
+            G, c = gram_lib.gram_and_rhs_chunked(Dflat, aux.reshape(m))
+            res = fasta_lib.transpose_reduction_lasso(G, c, mu, iters=iters)
+            return FitResult(res.x, int(res.iters), res.objective, method, problem)
+        if method == "consensus":
+            r = cons.ConsensusLasso(mu=mu, tau=tau).run(D, aux, iters)
+            return FitResult(r.z, int(r.iters), r.history.objective, method, problem)
+
+    if problem == "logistic":
+        if method == "transpose":
+            r = UnwrappedADMM(loss=prox_lib.make_logistic(), tau=tau).run(
+                D, aux, iters, record=record
+            )
+            hist = r.history.objective if r.history else None
+            return FitResult(r.x, int(r.iters), hist, method, problem)
+        if method == "consensus":
+            r = cons.ConsensusLogistic(tau=tau).run(D, aux, iters)
+            return FitResult(r.z, int(r.iters), r.history.objective, method, problem)
+
+    if problem == "sparse_logistic":
+        assert mu is not None
+        if method == "transpose":
+            # §7 stacking [I; D]: identity block rides on a virtual node.
+            Dflat = D.reshape(m, n)
+            D_hat = jnp.concatenate([jnp.eye(n, dtype=D.dtype), Dflat], 0)[None]
+            sp = prox_lib.StackedProx(
+                blocks=(prox_lib.make_l1(mu), prox_lib.make_logistic()),
+                sizes=(n, m),
+            )
+            aux_hat = jnp.concatenate([jnp.zeros((n,), aux.dtype), aux.reshape(m)])[
+                None
+            ]
+            r = UnwrappedADMM(loss=sp.as_loss("sparse_logistic"), tau=tau).run(
+                D_hat, aux_hat, iters, record=record
+            )
+            hist = r.history.objective if r.history else None
+            return FitResult(r.x, int(r.iters), hist, method, problem)
+        if method == "consensus":
+            r = cons.ConsensusLogistic(mu=mu, tau=tau).run(D, aux, iters)
+            return FitResult(r.z, int(r.iters), r.history.objective, method, problem)
+
+    if problem == "svm":
+        if method == "transpose":
+            r = UnwrappedADMM(loss=prox_lib.make_hinge(C), tau=tau, rho=1.0).run(
+                D, aux, iters, record=record
+            )
+            hist = r.history.objective if r.history else None
+            return FitResult(r.x, int(r.iters), hist, method, problem)
+        if method == "consensus":
+            r = cons.ConsensusSVM(C=C, tau=tau).run(D, aux, iters)
+            return FitResult(r.z, int(r.iters), r.history.objective, method, problem)
+
+    raise ValueError(f"unsupported (problem={problem}, method={method})")

@@ -1,0 +1,108 @@
+"""Transpose reduction: Gram-matrix computation (paper §4).
+
+The enabling observation of the paper: for tall D (m >> n),
+``D^T D = sum_i D_i^T D_i`` is only n x n. Each node builds its local Gram
+matrix by streaming row blocks; one all-reduce produces the global Gram.
+
+Three implementations with identical semantics:
+  * ``gram``            — one-shot jnp (oracle / small inputs).
+  * ``gram_chunked``    — lax.scan over row blocks; bounds live memory to one
+                          block, mirrors the HBM->VMEM streaming the Pallas
+                          kernel performs, and is what the distributed fitter
+                          uses under jit (XLA fuses the block matmuls).
+  * ``repro.kernels.gram.ops.gram`` — the Pallas TPU kernel (VMEM accumulator).
+
+Accumulation is always f32 (or f64 if inputs are f64): the Gram sum is a long
+reduction over up to ~1e9 rows, so bf16 inputs are up-cast per block.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _acc_dtype(dtype) -> jnp.dtype:
+    return jnp.float64 if dtype == jnp.float64 else jnp.float32
+
+
+def gram(D: Array) -> Array:
+    """D^T D in accumulation precision."""
+    Dc = D.astype(_acc_dtype(D.dtype))
+    return Dc.T @ Dc
+
+
+def gram_rhs(D: Array, b: Array) -> Array:
+    """D^T b in accumulation precision (the lasso RHS, paper §4)."""
+    acc = _acc_dtype(D.dtype)
+    return D.astype(acc).T @ b.astype(acc)
+
+
+@partial(jax.jit, static_argnames=("block_rows",))
+def gram_chunked(D: Array, block_rows: int = 1024) -> Array:
+    """Streaming D^T D over row blocks of size ``block_rows``.
+
+    Rows are zero-padded up to a block multiple — zero rows contribute nothing
+    to the Gram sum, so padding is exact (no masking needed).
+    """
+    m, n = D.shape
+    acc = _acc_dtype(D.dtype)
+    nblocks = -(-m // block_rows)
+    pad = nblocks * block_rows - m
+    Dp = jnp.pad(D, ((0, pad), (0, 0))) if pad else D
+    Dp = Dp.reshape(nblocks, block_rows, n)
+
+    def body(G, blk):
+        blk = blk.astype(acc)
+        return G + blk.T @ blk, None
+
+    G0 = jnp.zeros((n, n), acc)
+    G, _ = jax.lax.scan(body, G0, Dp)
+    return G
+
+
+@partial(jax.jit, static_argnames=("block_rows",))
+def gram_and_rhs_chunked(
+    D: Array, b: Array, block_rows: int = 1024
+) -> Tuple[Array, Array]:
+    """Fused streaming (D^T D, D^T b) — one pass over the data."""
+    m, n = D.shape
+    acc = _acc_dtype(D.dtype)
+    nblocks = -(-m // block_rows)
+    pad = nblocks * block_rows - m
+    Dp = jnp.pad(D, ((0, pad), (0, 0))) if pad else D
+    bp = jnp.pad(b, (0, pad)) if pad else b
+    Dp = Dp.reshape(nblocks, block_rows, n)
+    bp = bp.reshape(nblocks, block_rows)
+
+    def body(carry, blk):
+        G, c = carry
+        Db, bb = blk
+        Db = Db.astype(acc)
+        return (G + Db.T @ Db, c + Db.T @ bb.astype(acc)), None
+
+    init = (jnp.zeros((n, n), acc), jnp.zeros((n,), acc))
+    (G, c), _ = jax.lax.scan(body, init, (Dp, bp))
+    return G, c
+
+
+def gram_factor(G: Array, ridge: float = 0.0) -> Array:
+    """Cholesky factor of (G + ridge*I).
+
+    The paper stores the explicit inverse W = (sum_i D_i^T D_i)^{-1}; we keep
+    the Cholesky factorization instead (DESIGN.md §3) — same asymptotic cost,
+    better conditioning. ``ridge`` carries the (rho/tau) term for ridge-
+    regularized x-updates (SVM) and the +I block of the sparse stacking.
+    """
+    n = G.shape[0]
+    A = G + ridge * jnp.eye(n, dtype=G.dtype) if ridge else G
+    return jnp.linalg.cholesky(A)
+
+def gram_solve(L: Array, rhs: Array) -> Array:
+    """Solve (L L^T) x = rhs given the Cholesky factor L."""
+    z = jax.scipy.linalg.solve_triangular(L, rhs, lower=True)
+    return jax.scipy.linalg.solve_triangular(L.T, z, lower=False)

@@ -1,0 +1,206 @@
+"""Unwrapped ADMM with transpose reduction — paper Algorithms 1 & 2.
+
+Solves ``min_x rho/2 ||x||^2 + f(Dx)`` (rho=0 for plain ``min f(Dx)``) by
+splitting ``y = Dx``:
+
+    x^{k+1} = argmin_x rho/2||x||^2 + tau/2 ||Dx - y^k + lam^k||^2
+            = (D^T D + (rho/tau) I)^{-1} D^T (y^k - lam^k)          (global LS)
+    y^{k+1} = prox_f(D x^{k+1} + lam^k, 1/tau)                      (separable)
+    lam^{k+1} = lam^k + D x^{k+1} - y^{k+1}
+
+The x-update is the transpose-reduction step: only ``d = sum_i D_i^T(y_i -
+lam_i)`` crosses the network (an n-vector), and the n x n Gram factor is
+computed once at setup from ``sum_i D_i^T D_i`` (paper Alg. 2 lines 2-3).
+
+Data layout: ``D`` is ``(N, m_i, n)`` — N nodes, m_i rows each. N=1 recovers
+the single-node Alg. 1. This module is the *reference semantics*; the
+multi-device version (``repro.core.distributed``) runs the same math under
+``shard_map`` with a psum where this module sums over the node axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gram as gram_lib
+from repro.core.prox import ProxLoss
+
+Array = jax.Array
+
+
+class ADMMHistory(NamedTuple):
+    """Per-iteration telemetry (paper Fig. 2 curves + Theorems 1/2 checks)."""
+
+    objective: Array      # f(Dx^k) (+ rho/2||x||^2)
+    primal_res: Array     # ||D x^k - y^k||
+    dual_res: Array       # tau * ||D^T (y^k - y^{k-1})||  (Boyd dual residual)
+    grad_sq: Array        # ||D^T grad f(D x^k)||^2 if f smooth else nan
+    converged_at: Array   # first iteration k meeting Boyd's stopping rule
+
+
+class ADMMResult(NamedTuple):
+    x: Array
+    y: Array
+    lam: Array
+    iters: Array                 # iterations actually informative (stop point)
+    history: Optional[ADMMHistory]
+
+
+@dataclasses.dataclass(frozen=True)
+class UnwrappedADMM:
+    """Configured solver. ``loss`` acts on y with per-row aux (labels / b)."""
+
+    loss: ProxLoss
+    tau: float = 1.0
+    rho: float = 0.0              # ridge g(x) = rho/2 ||x||^2 (SVM: rho=1)
+    eps_rel: float = 1e-3         # paper §9 stopping constants
+    eps_abs: float = 1e-6
+    gram_block_rows: int = 1024
+
+    # -- setup (Alg. 2 lines 2-3): one Gram all-reduce + one factorization --
+    def setup(self, D: Array) -> Array:
+        N, mi, n = D.shape
+        G = jax.vmap(lambda Di: gram_lib.gram_chunked(Di, self.gram_block_rows))(
+            D
+        ).sum(axis=0)
+        ridge = self.rho / self.tau
+        return gram_lib.gram_factor(G, ridge=ridge)
+
+    # -- one iteration (Alg. 2 lines 5-8) --
+    def step(self, L: Array, D: Array, aux: Array, y: Array, lam: Array):
+        acc = y.dtype
+        # All nodes: d_i = D_i^T (y_i - lam_i); central: x = W sum_i d_i.
+        d = jnp.einsum("imn,im->n", D.astype(acc), y - lam)
+        x = gram_lib.gram_solve(L, d)
+        Dx = jnp.einsum("imn,n->im", D.astype(acc), x)
+        y_new = self.loss.prox(Dx + lam, 1.0 / self.tau, aux)
+        lam_new = lam + Dx - y_new
+        return x, Dx, y_new, lam_new
+
+    def _residuals(self, D, Dx, y_new, y_old, lam_new):
+        acc = y_new.dtype
+        r = jnp.linalg.norm((Dx - y_new).ravel())
+        s = self.tau * jnp.linalg.norm(
+            jnp.einsum("imn,im->n", D.astype(acc), y_new - y_old)
+        )
+        return r, s
+
+    def _tolerances(self, D, Dx, y, lam):
+        acc = y.dtype
+        m = Dx.size
+        n = D.shape[-1]
+        eps_pri = jnp.sqrt(m) * self.eps_abs + self.eps_rel * jnp.maximum(
+            jnp.linalg.norm(Dx.ravel()), jnp.linalg.norm(y.ravel())
+        )
+        dual_vec = self.tau * jnp.einsum("imn,im->n", D.astype(acc), lam)
+        eps_dual = jnp.sqrt(n) * self.eps_abs + self.eps_rel * jnp.linalg.norm(
+            dual_vec
+        )
+        return eps_pri, eps_dual
+
+    def _objective(self, x, Dx, aux):
+        obj = self.loss.value(Dx.ravel(), aux.ravel() if aux is not None else None)
+        if self.rho:
+            obj = obj + 0.5 * self.rho * jnp.sum(x * x)
+        return obj
+
+    # -- fixed-iteration driver with full telemetry (lax.scan) --
+    @partial(jax.jit, static_argnames=("self", "iters", "record"))
+    def run(
+        self,
+        D: Array,
+        aux: Optional[Array],
+        iters: int,
+        x0: Optional[Array] = None,
+        record: bool = True,
+    ) -> ADMMResult:
+        N, mi, n = D.shape
+        acc = gram_lib._acc_dtype(D.dtype)
+        L = self.setup(D)
+        y = jnp.zeros((N, mi), acc)
+        lam = jnp.zeros((N, mi), acc)
+        aux_r = aux.ravel() if aux is not None else None
+
+        def body(carry, _):
+            y, lam, k_conv, k = carry
+            x, Dx, y_new, lam_new = self.step(L, D, aux, y, lam)
+            r, s = self._residuals(D, Dx, y_new, y, lam_new)
+            eps_pri, eps_dual = self._tolerances(D, Dx, y_new, lam_new)
+            done = (r <= eps_pri) & (s <= eps_dual)
+            k_conv = jnp.where((k_conv < 0) & done, k, k_conv)
+            obj = self._objective(x, Dx, aux)
+            if self.loss.grad is not None:
+                # Theorem 2 diagnostic: ||d/dx f(Dx^k)||^2 = ||D^T grad f||^2.
+                g = self.loss.grad(Dx.ravel(), aux_r).reshape(Dx.shape)
+                gsq = jnp.sum(jnp.einsum("imn,im->n", D.astype(acc), g) ** 2)
+            else:
+                gsq = jnp.asarray(jnp.nan, acc)
+            hist = (obj, r, s, gsq, x)
+            return (y_new, lam_new, k_conv, k + 1), hist
+
+        init = (y, lam, jnp.asarray(-1, jnp.int32), jnp.asarray(0, jnp.int32))
+        (y, lam, k_conv, _), hist = jax.lax.scan(body, init, None, length=iters)
+        objs, rs, ss, gsqs, xs = hist
+        x = xs[-1]
+        history = (
+            ADMMHistory(objs, rs, ss, gsqs, k_conv) if record else None
+        )
+        iters_used = jnp.where(k_conv >= 0, k_conv + 1, iters)
+        return ADMMResult(x, y, lam, iters_used, history)
+
+    # -- early-stopping driver (lax.while_loop), deployment path --
+    @partial(jax.jit, static_argnames=("self", "max_iters"))
+    def solve(
+        self, D: Array, aux: Optional[Array], max_iters: int = 500
+    ) -> ADMMResult:
+        N, mi, n = D.shape
+        acc = gram_lib._acc_dtype(D.dtype)
+        L = self.setup(D)
+
+        def cond(state):
+            y, lam, k, done, _ = state
+            return (~done) & (k < max_iters)
+
+        def body(state):
+            y, lam, k, _, _ = state
+            x, Dx, y_new, lam_new = self.step(L, D, aux, y, lam)
+            r, s = self._residuals(D, Dx, y_new, y, lam_new)
+            eps_pri, eps_dual = self._tolerances(D, Dx, y_new, lam_new)
+            done = (r <= eps_pri) & (s <= eps_dual)
+            return (y_new, lam_new, k + 1, done, x)
+
+        y0 = jnp.zeros((N, mi), acc)
+        lam0 = jnp.zeros((N, mi), acc)
+        x0 = jnp.zeros((n,), acc)
+        state = (y0, lam0, jnp.asarray(0, jnp.int32), jnp.asarray(False), x0)
+        y, lam, k, done, x = jax.lax.while_loop(cond, body, state)
+        return ADMMResult(x, y, lam, k, None)
+
+
+# ---------------------------------------------------------------------------
+# Sparse stacking helpers (paper §7): D_hat = [I; D]
+# ---------------------------------------------------------------------------
+
+def sparse_unwrapped_lasso_matrices(D: Array, b: Array, mu: float):
+    """Build the stacked system for sparse fitting min mu|x| + f(Dx).
+
+    Returns (D_hat, labels_hat) where D_hat = [I; D] with the identity block
+    assigned to a dedicated "node" N+1 (paper eq. 15) and a StackedProx-ready
+    layout. For the (N, m_i, n) layout we return flat 2-D arrays; callers
+    embed the identity rows on the central node.
+    """
+    N, mi, n = D.shape
+    Dflat = D.reshape(N * mi, n)
+    D_hat = jnp.concatenate([jnp.eye(n, dtype=D.dtype), Dflat], axis=0)
+    return D_hat
+
+
+def flat_to_nodes(D2: Array, N: int) -> Array:
+    """(m, n) -> (N, m/N, n); m must divide evenly (pad upstream)."""
+    m, n = D2.shape
+    assert m % N == 0, f"rows {m} not divisible by {N} nodes"
+    return D2.reshape(N, m // N, n)

@@ -1,0 +1,81 @@
+"""Deterministic sharded data pipeline.
+
+Synthetic-token LM stream with the properties the fault-tolerance layer
+needs: (a) every (step, shard) batch is a pure function of (seed, step) — no
+pipeline state files; (b) restart at step k reproduces exactly the batches a
+non-interrupted run would have seen; (c) elastic re-sharding (different DP
+size) re-partitions the same global batch, so restarts on a different mesh
+consume identical global data.
+
+A host-side prefetch thread keeps ``prefetch`` batches ready — the CPU-side
+straggler mitigation for the synchronous TPU step (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TokenPipeline:
+    def __init__(self, *, vocab_size: int, global_batch: int, seq_len: int,
+                 seed: int = 0, frontend: str = "none", d_model: int = 0,
+                 mrope: bool = False):
+        self.vocab = vocab_size
+        self.B = global_batch
+        self.S = seq_len
+        self.seed = seed
+        self.frontend = frontend
+        self.d_model = d_model
+        self.mrope = mrope
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """Global batch for ``step`` — pure function of (seed, step)."""
+        rng = np.random.default_rng((self.seed, step))
+        # Markov-ish synthetic stream: mixture of ngram-copy and uniform.
+        toks = rng.integers(0, self.vocab, (self.B, self.S + 1), np.int32)
+        copy_mask = rng.random((self.B, self.S + 1)) < 0.3
+        toks[:, 1:][copy_mask[:, 1:]] = toks[:, :-1][copy_mask[:, 1:]]
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if self.frontend == "vision":
+            emb = rng.standard_normal(
+                (self.B, self.S, self.d_model), np.float32) * 0.02
+            batch = {"embeds": emb.astype(jnp.bfloat16),
+                     "labels": toks[:, 1:],
+                     "positions": np.broadcast_to(
+                         np.arange(self.S, dtype=np.int32),
+                         (3, self.B, self.S)).copy()}
+        elif self.frontend == "audio":
+            emb = rng.standard_normal(
+                (self.B, self.S, self.d_model), np.float32) * 0.02
+            batch["enc_embeds"] = emb.astype(jnp.bfloat16)
+        return batch
+
+    def shard_iterator(self, start_step: int, shardings=None,
+                       prefetch: int = 2) -> Iterator:
+        """Yields device-placed batches from ``start_step`` with a host
+        prefetch thread."""
+        q: queue.Queue = queue.Queue(maxsize=prefetch)
+        stop = threading.Event()
+
+        def producer():
+            step = start_step
+            while not stop.is_set():
+                b = self.batch_at(step)
+                if shardings is not None:
+                    b = {k: jax.device_put(v, shardings[k])
+                         for k, v in b.items()}
+                q.put((step, b))
+                step += 1
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        try:
+            while True:
+                yield q.get()
+        finally:
+            stop.set()

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: FUSED unwrapped-ADMM iteration (§Perf, beyond-paper).
+
+The paper's per-iteration body touches D twice when written as separate ops
+(Dx, then D^T(y-lam)) and XLA's per-operand accounting cannot merge the
+reads. This kernel streams each (bm x n) row-panel of D HBM->VMEM ONCE and
+does everything with it while it is resident:
+
+    Dx_b   = D_b @ x            (MXU; x stays in VMEM, n <= ~2k)
+    y_b    = prox_f(Dx_b + lam_b)   (VPU, in-register Newton/bisection)
+    lam_b' = lam_b + Dx_b - y_b
+    d     += D_b^T (y_b - lam_b')   (MXU; n-vector f32 VMEM accumulator)
+
+Per-iteration HBM traffic drops from 2 x bytes(D) + small to
+1 x bytes(D) + small — and with bf16 D residency (f32 in-register upcast,
+like the Gram kernel) the memory-bound iteration term shrinks ~4x vs the
+f32 2-pass baseline. The d accumulator lives across the row grid in the
+output block (constant index_map), psum'd outside per paper Alg. 2 line 6.
+
+Vector operands ride as (m, 1) columns; the (bm, 1) blocks are lane-padded
+on TPU — acceptable since D's (bm, n) tiles dominate the traffic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.prox.prox import _prox_body
+
+
+def _kernel(x_ref, d_in_ref, lam_ref, aux_ref, y_out_ref, lam_out_ref,
+            d_out_ref, *, kind: str, delta: float):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        d_out_ref[...] = jnp.zeros_like(d_out_ref)
+
+    Db = d_in_ref[...].astype(jnp.float32)          # (bm, n)
+    x = x_ref[...].astype(jnp.float32)              # (1, n)
+    lam = lam_ref[...].astype(jnp.float32)          # (bm, 1)
+    aux = aux_ref[...].astype(jnp.float32)
+    Dx = jax.lax.dot_general(
+        Db, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (bm, 1)
+    z = Dx + lam
+    y = _prox_body(kind, z, delta, aux, newton_iters=3)
+    lam_new = lam + Dx - y
+    y_out_ref[...] = y
+    lam_out_ref[...] = lam_new
+    # d += D_b^T (y - lam')   -> (1, n) accumulator row
+    d_out_ref[...] += jax.lax.dot_general(
+        (y - lam_new), Db, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (1, n)
+
+
+def admm_iter_pallas(D, aux, y, lam, x, *, kind: str, delta: float,
+                     block_m: int = 1024, interpret: bool = False):
+    """D: (m, n); aux/y/lam: (m,); x: (n,). m % block_m == 0 (ops pads).
+    Returns (y', lam', d) with d = D^T(y'-lam') accumulated in f32."""
+    m, n = D.shape
+    assert m % block_m == 0
+    grid = (m // block_m,)
+    col = lambda v: v.reshape(m, 1)
+    kernel = functools.partial(_kernel, kind=kind, delta=float(delta))
+    y_new, lam_new, d = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),          # x (replicated)
+            pl.BlockSpec((block_m, n), lambda i: (i, 0)),    # D row panel
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),    # lam
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),    # aux
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),    # y'
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),    # lam'
+            pl.BlockSpec((1, n), lambda i: (0, 0)),          # d (accumulated)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x.reshape(1, n), D, col(lam), col(aux))
+    return y_new.reshape(m), lam_new.reshape(m), d.reshape(n)

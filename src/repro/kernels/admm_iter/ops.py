@@ -1,0 +1,28 @@
+"""Jitted wrapper for the fused ADMM-iteration kernel (pads rows; zero-pad
+rows contribute nothing to d since their y' - lam' is forced to 0 via
+aux=0/lam=0/D=0 rows: prox(0)=0 for every supported kind at z=0 with l=0)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.admm_iter.admm_iter import admm_iter_pallas
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "delta", "block_m", "interpret"))
+def admm_iter(D, aux, y, lam, x, *, kind: str, delta: float,
+              block_m: int = 1024, interpret: bool = False):
+    m, n = D.shape
+    pad = (-m) % block_m
+    if pad:
+        D = jnp.pad(D, ((0, pad), (0, 0)))
+        aux = jnp.pad(aux, (0, pad))
+        y = jnp.pad(y, (0, pad))
+        lam = jnp.pad(lam, (0, pad))
+    y_new, lam_new, d = admm_iter_pallas(
+        D, aux, y, lam, x, kind=kind, delta=delta, block_m=block_m,
+        interpret=interpret)
+    return y_new[:m], lam_new[:m], d

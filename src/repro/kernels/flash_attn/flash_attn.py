@@ -1,0 +1,126 @@
+"""Pallas TPU flash attention (forward), causal + GQA — the transformer
+prefill/train hot-spot for the 8 attention-based assigned architectures.
+
+TPU-native points (DESIGN.md §7):
+  * Grid (B, Hq, Sq/bq, Skv/bk), kv innermost — TPU grids run sequentially
+    (last dim fastest), so the f32 running statistics (m, l) and the output
+    accumulator persist in VMEM scratch across the kv sweep and are
+    re-initialized when ik == 0. One q tile stays VMEM-resident per sweep.
+  * Causality is exploited at BLOCK granularity: kv blocks strictly above
+    the diagonal are skipped (no MXU work, loads dead) — ~2x FLOP cut; only
+    diagonal-straddling blocks pay the elementwise iota mask.
+  * GQA is an index-map fact (kv head = q head // group), not a materialized
+    jnp.repeat: kv tiles are fetched once per q-head group position.
+  * All softmax statistics in f32 regardless of I/O dtype (bf16-safe).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, block_q: int, block_k: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    n_k = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Causal block skip: process only blocks with k_start <= q_end.
+    q_end = (iq + 1) * block_q - 1
+    k_start = ik * block_k
+    should_run = (k_start <= q_end) if causal else True
+
+    @pl.when(should_run)
+    def _run():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                     # (bq, bk)
+        if causal:
+            # Mask only on diagonal-straddling blocks.
+            q_pos = iq * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0
+            )
+            k_pos = ik * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1
+            )
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_scr[:, :1]                         # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)                # (bq, 1)
+        l_new = corr * l_scr[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = corr * acc_scr[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[:, :1] = m_new
+        l_scr[:, :1] = l_new
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[:, :1], 1e-30)
+        o_ref[0, 0, :, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D). Sq % bq == Skv % bk == 0."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0 and Sq % block_q == 0 and Skv % block_k == 0
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=float(scale), causal=causal,
+        block_q=block_q, block_k=block_k,
+    )
+    grid = (B, Hq, Sq // block_q, Skv // block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, D), lambda b, h, iq, ik: (b, h // group, ik, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, D), lambda b, h, iq, ik: (b, h // group, ik, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 128), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, D), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,88 @@
+"""Jitted public wrapper for flash attention with an XLA (chunked online-
+softmax) fallback used on non-TPU backends and in the dry-run path (Pallas
+custom-calls do not lower on the CPU host backend; the chunked fallback has
+the same O(S) memory profile so compile-time memory analysis stays honest)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.flash_attn import flash_attention_pallas
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "scale", "block_q", "block_k", "impl")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    impl: str = "xla",          # "pallas" | "pallas_interpret" | "xla"
+) -> jax.Array:
+    if impl == "pallas":
+        return flash_attention_pallas(
+            q, k, v, causal=causal, scale=scale,
+            block_q=block_q, block_k=block_k, interpret=False,
+        )
+    if impl == "pallas_interpret":
+        return flash_attention_pallas(
+            q, k, v, causal=causal, scale=scale,
+            block_q=block_q, block_k=block_k, interpret=True,
+        )
+    return chunked_attention_xla(
+        q, k, v, causal=causal, scale=scale, chunk_q=block_q
+    )
+
+
+def chunked_attention_xla(q, k, v, *, causal, scale=None, chunk_q=512,
+                          window: int = 0, unroll: bool = False):
+    """Query-chunked online-softmax attention in pure lax — O(Sq/ck * Sk)
+    peak score memory instead of O(Sq*Sk). GQA by head grouping.
+    window > 0 adds a local band: q attends to k in (q_pos-window, q_pos]."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    rep = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    if Sq % chunk_q:
+        chunk_q = Sq  # degenerate small case
+    nq = Sq // chunk_q
+    qf = q.reshape(B, Hkv, rep, nq, chunk_q, D)
+
+    def per_chunk(iq, qc):
+        # qc: (B, Hkv, rep, cq, D)
+        s = jnp.einsum(
+            "bhrqd,bhkd->bhrqk", qc.astype(jnp.float32), k.astype(jnp.float32)
+        ) * scale
+        if causal or window:
+            q_pos = iq * chunk_q + jnp.arange(chunk_q)
+            k_pos = jnp.arange(Skv)
+            mask = jnp.ones((chunk_q, Skv), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        o = jnp.einsum("bhrqk,bhkd->bhrqd", p, v.astype(jnp.float32))
+        return o / jnp.sum(p, axis=-1, keepdims=True)
+
+    if unroll:
+        # Cost-extraction mode: python loop so cost_analysis sees every chunk.
+        chunks = [per_chunk(i, qf[:, :, :, i]) for i in range(nq)]
+        out = jnp.stack(chunks, axis=0)
+    else:
+        out = jax.lax.map(
+            lambda args: per_chunk(*args),
+            (jnp.arange(nq), jnp.moveaxis(qf, 3, 0)),
+        )  # (nq, B, Hkv, rep, cq, D)
+    out = jnp.moveaxis(out, 0, 3).reshape(B, Hq, Sq, D)
+    return out.astype(q.dtype)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for causal/GQA flash attention."""
+import jax.numpy as jnp
+
+
+def mha_ref(q, k, v, *, causal: bool, scale: float | None = None):
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D); GQA via head repeat.
+
+    f32 softmax math; returns (B, Hq, Sq, D) in q.dtype.
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0
+    rep = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    kf = jnp.repeat(k, rep, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, rep, axis=1).astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    if causal:
+        Skv = k.shape[2]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

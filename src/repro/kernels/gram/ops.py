@@ -1,0 +1,77 @@
+"""Jitted public wrapper for the Gram kernel: padding, symmetry restore,
+fused RHS (append b as an extra column: Gram([D | b]) contains D^T D, D^T b
+and b^T b in one data pass), and interpret-mode fallback for CPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gram.gram import gram_pallas
+
+def _pad_to(x, mult, axis):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "symmetric_skip", "interpret")
+)
+def gram(
+    D: jax.Array,
+    *,
+    block_m: int = 512,
+    block_n: int = 256,
+    symmetric_skip: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """D^T D, f32, any (m, n) — pads to block multiples (exact for Gram)."""
+    m, n = D.shape
+    Dp = _pad_to(_pad_to(D, block_m, 0), block_n, 1)
+    G = gram_pallas(
+        Dp,
+        block_m=block_m,
+        block_n=block_n,
+        symmetric_skip=symmetric_skip,
+        interpret=interpret,
+    )
+    if symmetric_skip:
+        # Mirror the computed upper-triangular blocks. Using block-level skip,
+        # every full block strictly below the diagonal is garbage; rebuild
+        # from the upper triangle (element-wise: the diagonal blocks are full).
+        bn = block_n
+        nb = Dp.shape[1] // bn
+        bi = jnp.arange(Dp.shape[1]) // bn
+        upper = bi[:, None] <= bi[None, :]         # block-upper mask
+        G = jnp.where(upper, G, G.T)
+    return G[:n, :n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "interpret")
+)
+def gram_with_rhs(
+    D: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 512,
+    block_n: int = 256,
+    interpret: bool = False,
+):
+    """One-pass (D^T D, D^T b) by appending b as column n (paper §4 setup)."""
+    m, n = D.shape
+    Db = jnp.concatenate([D, b[:, None].astype(D.dtype)], axis=1)
+    G = gram(
+        Db,
+        block_m=block_m,
+        block_n=block_n,
+        symmetric_skip=True,
+        interpret=interpret,
+    )
+    return G[:n, :n], G[:n, n]

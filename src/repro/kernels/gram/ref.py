@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the Gram kernel."""
+import jax.numpy as jnp
+
+
+def gram_ref(D):
+    """D^T D with f32 accumulation (f64 passes through)."""
+    acc = jnp.float64 if D.dtype == jnp.float64 else jnp.float32
+    Dc = D.astype(acc)
+    return Dc.T @ Dc
+
+
+def gram_with_rhs_ref(D, b):
+    """(D^T D, D^T b) — the §4 cached quantities."""
+    acc = jnp.float64 if D.dtype == jnp.float64 else jnp.float32
+    Dc = D.astype(acc)
+    bc = b.astype(acc)
+    return Dc.T @ Dc, Dc.T @ bc

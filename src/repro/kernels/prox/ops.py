@@ -1,0 +1,46 @@
+"""Jitted wrapper for the fused prox/lambda kernel: 1-D streams of any
+length are padded and tiled to the (rows, 1024) lane layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.prox.prox import prox_update_pallas
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "delta", "newton_iters", "block_rows", "interpret"),
+)
+def prox_update(
+    Dx: jax.Array,
+    lam: jax.Array,
+    aux: jax.Array | None,
+    *,
+    kind: str,
+    delta: float,
+    newton_iters: int = 3,
+    block_rows: int = 256,
+    interpret: bool = False,
+):
+    """y = prox_f(Dx + lam, delta); lam' = lam + Dx - y, fused. 1-D inputs."""
+    (m,) = Dx.shape
+    lanes = 1024
+    tile = block_rows * lanes
+    pad = (-m) % tile
+    if aux is None:
+        aux = jnp.zeros_like(Dx)
+
+    def _prep(v):
+        return jnp.pad(v, (0, pad)).reshape(-1, lanes)
+
+    # Padded tail: aux=0 is safe for every kind (logistic prox at l=0 returns
+    # z; hinge/l1/ls are well-defined) — the tail is sliced away below.
+    y, lam_new = prox_update_pallas(
+        _prep(Dx), _prep(lam), _prep(aux),
+        kind=kind, delta=delta, newton_iters=newton_iters,
+        block_rows=block_rows, interpret=interpret,
+    )
+    return y.reshape(-1)[:m], lam_new.reshape(-1)[:m]

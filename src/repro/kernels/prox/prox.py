@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: fused ADMM y/lambda update (paper Alg. 2 lines 7-8).
+
+Fuses three elementwise passes (z = Dx + lam; y = prox_f(z, delta);
+lam' = lam + Dx - y) into a single HBM read/write sweep — on TPU this step is
+pure VPU work and strictly memory-bound, so fusion cuts its HBM traffic from
+(3 reads + 2 writes) x m to (3 reads + 2 writes) x m in ONE kernel launch
+with no intermediate z/y round-trips (XLA usually fuses too, but here the
+fusion is guaranteed and the logistic prox's 8-step Newton iteration stays
+in-register, replacing the paper's CPU lookup table — DESIGN.md §3).
+
+Layout: 1-D stream reshaped to (rows, 1024) lanes; grid over row-blocks.
+All math f32 in-register regardless of the I/O dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _prox_body(kind: str, z, delta: float, aux, newton_iters: int,
+               bisect_iters: int = 40):
+    if kind == "logistic":
+        # Branch-free bisection on the monotone phi' over [z-d, z+d], then a
+        # Newton polish — all unrolled in-register on the VPU (undamped
+        # Newton oscillates for large delta; see core/prox.py).
+        lo = z - delta
+        hi = z + delta
+        for _ in range(bisect_iters):
+            mid = 0.5 * (lo + hi)
+            pos = (-aux * jax.nn.sigmoid(-aux * mid)
+                   + (mid - z) / delta) > 0
+            lo = jnp.where(pos, lo, mid)
+            hi = jnp.where(pos, mid, hi)
+        y = 0.5 * (lo + hi)
+        for _ in range(newton_iters):
+            s = jax.nn.sigmoid(-aux * y)
+            g = -aux * s + (y - z) / delta
+            h = s * (1.0 - s) + 1.0 / delta
+            y = y - jnp.clip(g / h, -delta, delta)
+        return y
+    if kind == "hinge":
+        return z + aux * jnp.maximum(jnp.minimum(1.0 - aux * z, delta), 0.0)
+    if kind == "l1":
+        return jnp.sign(z) * jnp.maximum(jnp.abs(z) - delta, 0.0)
+    if kind == "least_squares":
+        return (z + delta * aux) / (1.0 + delta)
+    raise ValueError(kind)
+
+
+def _kernel(dx_ref, lam_ref, aux_ref, y_ref, lam_out_ref, *, kind, delta,
+            newton_iters):
+    dx = dx_ref[...].astype(jnp.float32)
+    lam = lam_ref[...].astype(jnp.float32)
+    aux = aux_ref[...].astype(jnp.float32) if aux_ref is not None else None
+    z = dx + lam
+    y = _prox_body(kind, z, delta, aux, newton_iters)
+    y_ref[...] = y.astype(y_ref.dtype)
+    lam_out_ref[...] = (lam + dx - y).astype(lam_out_ref.dtype)
+
+
+def prox_update_pallas(
+    Dx: jax.Array,
+    lam: jax.Array,
+    aux: jax.Array,
+    *,
+    kind: str,
+    delta: float,
+    newton_iters: int = 3,
+    block_rows: int = 256,
+    lanes: int = 1024,
+    interpret: bool = False,
+):
+    """Inputs are (rows, lanes)-shaped streams (ops.py reshapes/pads)."""
+    rows, l = Dx.shape
+    assert l == lanes and rows % block_rows == 0
+    grid = (rows // block_rows,)
+    kernel = functools.partial(
+        _kernel, kind=kind, delta=float(delta), newton_iters=newton_iters
+    )
+    spec = pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(Dx.shape, jnp.float32),
+            jax.ShapeDtypeStruct(Dx.shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(Dx, lam, aux)

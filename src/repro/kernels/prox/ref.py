@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the fused prox/lambda update (paper Alg. 2 lines 7-8)."""
+import jax
+import jax.numpy as jnp
+
+
+def _prox(kind, z, delta, aux, newton_iters=3, bisect_iters=40):
+    if kind == "logistic":
+        # bisection on the monotone phi' over [z-d, z+d], Newton polish
+        # (mirrors repro.core.prox.logistic_prox_newton).
+        dphi = lambda y: -aux * jax.nn.sigmoid(-aux * y) + (y - z) / delta
+        lo, hi = z - delta, z + delta
+        for _ in range(bisect_iters):
+            mid = 0.5 * (lo + hi)
+            pos = dphi(mid) > 0
+            lo = jnp.where(pos, lo, mid)
+            hi = jnp.where(pos, mid, hi)
+        y = 0.5 * (lo + hi)
+        for _ in range(newton_iters):
+            s = jax.nn.sigmoid(-aux * y)
+            g = -aux * s + (y - z) / delta
+            h = s * (1.0 - s) + 1.0 / delta
+            y = y - jnp.clip(g / h, -delta, delta)
+        return y
+    if kind == "hinge":
+        return z + aux * jnp.maximum(jnp.minimum(1.0 - aux * z, delta), 0.0)
+    if kind == "l1":
+        return jnp.sign(z) * jnp.maximum(jnp.abs(z) - delta, 0.0)
+    if kind == "least_squares":
+        return (z + delta * aux) / (1.0 + delta)
+    raise ValueError(kind)
+
+
+def prox_update_ref(kind, Dx, lam, aux, delta, newton_iters=8):
+    """y = prox_f(Dx + lam, delta); lam' = lam + Dx - y. f32 math."""
+    Dxf = Dx.astype(jnp.float32)
+    lamf = lam.astype(jnp.float32)
+    auxf = aux.astype(jnp.float32) if aux is not None else None
+    z = Dxf + lamf
+    y = _prox(kind, z, jnp.float32(delta), auxf, newton_iters)
+    return y, lamf + Dxf - y

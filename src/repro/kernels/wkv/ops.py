@@ -1,0 +1,19 @@
+"""Jitted wrapper for the WKV kernel (clamps log-decay like the model)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv.wkv import wkv_pallas
+
+WKV_LOG_CLAMP = -5.0   # keep in sync with repro.models.rwkv6
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv(r, k, v, w_log, u, *, chunk: int = 16, interpret: bool = False):
+    w_log = jnp.maximum(w_log.astype(jnp.float32), WKV_LOG_CLAMP)
+    return wkv_pallas(r.astype(jnp.float32), k.astype(jnp.float32),
+                      v.astype(jnp.float32), w_log, u.astype(jnp.float32),
+                      chunk=chunk, interpret=interpret)

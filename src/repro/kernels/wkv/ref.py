@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the WKV kernel: the exact per-step recurrence."""
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, w_log, u):
+    """r/k/v/w_log: (T, hd) single head; u: (hd,). Per-step form:
+        y_t = r_t (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Returns (y (T, hd), S_final (hd, hd)). f32."""
+    T, hd = r.shape
+    S = jnp.zeros((hd, hd), jnp.float32)
+    ys = []
+    w = jnp.exp(w_log.astype(jnp.float32))
+    for t in range(T):
+        kv = jnp.outer(k[t], v[t])
+        ys.append(r[t] @ (S + u[:, None] * kv))
+        S = w[t][:, None] * S + kv
+    return jnp.stack(ys), S

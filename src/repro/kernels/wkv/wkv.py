@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: RWKV-6 WKV with VMEM-resident state (§Perf rwkv cell).
+
+The XLA chunked form (models/rwkv6.py) must round-trip the (hd x hd)
+per-head state S through HBM on every chunk-scan step — at chunk 16 that is
+T/16 state read+writes per head per layer, the dominant term of the rwkv
+train cell's memory-bound roofline. Here S lives in a VMEM scratch across
+the whole sequence sweep:
+
+  grid (B, H, T/Lc), chunk index innermost (TPU grids run sequentially, so
+  the scratch persists across the chunk sweep and re-initializes at c == 0).
+  Per chunk: the separable-decay intra matmul pair (same math as
+  rwkv6._wkv_chunked_matmul, log-decay pre-clamped by the caller), the
+  state contribution r~ @ S, and the in-place state update
+  S <- diag(e^{cum_Lc}) S + kk^T v — all MXU work on (Lc, hd) tiles.
+
+HBM traffic per layer: read r/k/v/w once + write y once — the state never
+leaves VMEM. Projected memory term for the rwkv6-1.6b train cell:
+~2.6 s vs 14.6 s XLA-form (EXPERIMENTS.md §Perf R2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_scr, *,
+                chunk: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    rc = r_ref[0, 0].astype(jnp.float32)          # (Lc, hd)
+    kc = k_ref[0, 0].astype(jnp.float32)
+    vc = v_ref[0, 0].astype(jnp.float32)
+    wc = w_ref[0, 0].astype(jnp.float32)          # log-decay, <= 0 (clamped)
+    u = u_ref[0].astype(jnp.float32)              # (hd,)
+
+    cum = jnp.cumsum(wc, axis=0)
+    cum_prev = cum - wc
+    r_t = rc * jnp.exp(cum_prev)
+    k_t = kc * jnp.exp(-cum)
+    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+    A = jax.lax.dot_general(
+        r_t, k_t, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * mask
+    diag = jnp.sum(rc * u[None, :] * kc, axis=-1)
+    y = jax.lax.dot_general(
+        A, vc, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) + diag[:, None] * vc
+    y = y + jax.lax.dot_general(
+        r_t, s_scr[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    # state update (stays in VMEM)
+    kk = kc * jnp.exp(cum[-1][None, :] - cum)
+    s_scr[...] = jnp.exp(cum[-1])[:, None] * s_scr[...] + jax.lax.dot_general(
+        kk, vc, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def wkv_pallas(r, k, v, w_log, u, *, chunk: int = 16,
+               interpret: bool = False):
+    """r/k/v/w_log: (B, H, T, hd); u: (H, hd). T % chunk == 0.
+    Returns y: (B, H, T, hd) f32. Log-decay must be pre-clamped (the model
+    applies WKV_LOG_CLAMP) so exp factors stay in f32 range."""
+    B, H, T, hd = r.shape
+    assert T % chunk == 0
+    grid = (B, H, T // chunk)
+    kernel = functools.partial(_wkv_kernel, chunk=chunk)
+    blk = pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[blk, blk, blk, blk,
+                  pl.BlockSpec((1, hd), lambda b, h, c: (h, 0))],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct((B, H, T, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w_log, u)

@@ -1,0 +1,119 @@
+"""Dry-run cells for the PAPER'S OWN workload: distributed transpose-
+reduction ADMM at production scale, lowered on the production mesh.
+
+Cells (rows sharded over every mesh axis — each chip is a paper 'node'):
+  star_f32   GSC-II scale: m=950,272,000 rows x n=307 features, f32
+             (the paper's 1.8 TB Table-1 dataset; 4.56 GB/chip)
+  star_bf16  beyond-paper: bf16 data residency, f32 Gram/solve accumulation
+             (halves the memory-bound iteration term; DESIGN.md §3 numerics)
+  fig1_bf16  Fig-1 scale: m=368,640,000 x n=2000, bf16 (5.8 GB/chip)
+
+Two programs are lowered per cell:
+  setup: G = psum_i(D_i^T D_i); Cholesky factor          (one-off)
+  iter:  d = psum_i(D_i^T (y_i - lam_i)); x = solve(L,d);
+         y,lam = fused prox update                        (per ADMM iteration)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import gram as gram_lib
+from repro.core.prox import make_logistic
+
+CELLS = {
+    "star_f32": dict(m=950_272_000, n=307, dtype=jnp.float32),
+    "star_bf16": dict(m=950_272_000, n=307, dtype=jnp.bfloat16),
+    "fig1_bf16": dict(m=368_640_000, n=2000, dtype=jnp.bfloat16),
+}
+
+
+def build_fit_cell(name: str, mesh, tau: float = 0.1):
+    spec = CELLS[name]
+    m, n, dtype = spec["m"], spec["n"], spec["dtype"]
+    axes = tuple(mesh.axis_names)            # every chip is a 'node'
+    nshards = mesh.size
+    assert m % nshards == 0
+    loss = make_logistic()
+
+    def setup_local(D_loc):
+        # one-shot Gram here (not the scan-chunked form) so the dry-run's
+        # cost_analysis counts the FLOPs; production uses the Pallas kernel
+        # with identical semantics (f32 accumulation).
+        G = gram_lib.gram(D_loc)
+        G = jax.lax.psum(G, axes)
+        return gram_lib.gram_factor(G)
+
+    def iter_local(D_loc, aux_loc, y, lam, L):
+        """Baseline Alg.2 iteration: TWO streaming passes over D
+        (d = D^T(y-lam), then Dx)."""
+        acc = jnp.float32
+        d = jax.lax.psum(D_loc.astype(acc).T @ (y - lam), axes)
+        x = gram_lib.gram_solve(L, d)
+        Dx = D_loc.astype(acc) @ x
+        y_new = loss.prox(Dx + lam, 1.0 / tau, aux_loc)
+        lam_new = lam + Dx - y_new
+        obj = jax.lax.psum(loss.value(y_new, aux_loc), axes)
+        return x, y_new, lam_new, obj
+
+    def fused_iter_local(D_loc, aux_loc, y, lam, x, n_blocks: int = 8):
+        """§Perf beyond-paper: ONE pass over D per iteration.
+
+        Reorder Alg. 2 around the row-block stream: for each tile D_b
+        (loaded once), compute Dx_b with the incoming x, the y_b/lam_b
+        prox updates, and accumulate d_b = D_b^T (y_b - lam_b) — then one
+        psum + solve produce the NEXT x. Identical iterates, half the HBM
+        traffic of the 2-pass baseline (the memory term IS the bottleneck).
+        Blocks are a python loop so cost_analysis counts every pass.
+        """
+        acc = jnp.float32
+        m_loc = D_loc.shape[0]
+        bs = m_loc // n_blocks
+        d = jnp.zeros((n,), acc)
+        y_out, lam_out = [], []
+        obj = jnp.zeros((), acc)
+        for b in range(n_blocks):
+            # static slices: alias into D (no copy), unlike dynamic_slice
+            Db = D_loc[b * bs:(b + 1) * bs].astype(acc)
+            yb = y[b * bs:(b + 1) * bs]
+            lb = lam[b * bs:(b + 1) * bs]
+            ab = aux_loc[b * bs:(b + 1) * bs]
+            Dx_b = Db @ x
+            y_b = loss.prox(Dx_b + lb, 1.0 / tau, ab)
+            l_b = lb + Dx_b - y_b
+            d = d + Db.T @ (y_b - l_b)
+            obj = obj + loss.value(y_b, ab)
+            y_out.append(y_b)
+            lam_out.append(l_b)
+        d = jax.lax.psum(d, axes)
+        obj = jax.lax.psum(obj, axes)
+        return (d, jnp.concatenate(y_out), jnp.concatenate(lam_out), obj)
+
+    setup = jax.shard_map(
+        setup_local, mesh=mesh,
+        in_specs=(P(axes, None),), out_specs=P(), check_vma=False)
+    one_iter = jax.shard_map(
+        iter_local, mesh=mesh,
+        in_specs=(P(axes, None), P(axes), P(axes), P(axes), P()),
+        out_specs=(P(), P(axes), P(axes), P()), check_vma=False)
+    fused_iter = jax.shard_map(
+        fused_iter_local, mesh=mesh,
+        in_specs=(P(axes, None), P(axes), P(axes), P(axes), P()),
+        out_specs=(P(), P(axes), P(axes), P()), check_vma=False)
+
+    ns_rows = NamedSharding(mesh, P(axes, None))
+    ns_vec = NamedSharding(mesh, P(axes))
+    ns_rep = NamedSharding(mesh, P())
+    D_in = jax.ShapeDtypeStruct((m, n), dtype, sharding=ns_rows)
+    aux_in = jax.ShapeDtypeStruct((m,), jnp.float32, sharding=ns_vec)
+    y_in = jax.ShapeDtypeStruct((m,), jnp.float32, sharding=ns_vec)
+    L_in = jax.ShapeDtypeStruct((n, n), jnp.float32, sharding=ns_rep)
+    x_in = jax.ShapeDtypeStruct((n,), jnp.float32, sharding=ns_rep)
+    return {
+        "setup": (jax.jit(setup), (D_in,)),
+        "iter": (jax.jit(one_iter, donate_argnums=(2, 3)),
+                 (D_in, aux_in, y_in, y_in, L_in)),
+        "fused_iter": (jax.jit(fused_iter, donate_argnums=(2, 3)),
+                       (D_in, aux_in, y_in, y_in, x_in)),
+    }

@@ -1,0 +1,92 @@
+"""ShapeDtypeStruct stand-ins for every model input, per (arch x shape) cell.
+
+Shapes (LM-family, per assignment):
+  train_4k    : seq 4096,    global_batch 256   -> train_step
+  prefill_32k : seq 32768,   global_batch 32    -> prefill
+  decode_32k  : cache 32768, global_batch 128   -> serve_step (1 new token)
+  long_500k   : state 524288, global_batch 1    -> serve_step (sub-quadratic
+                families only; skips recorded per-config in skip_shapes)
+
+Modality frontends are STUBS per the assignment: [vlm] cells get precomputed
+patch embeddings + 3-stream M-RoPE position ids; [audio] cells get frame
+embeddings for the encoder. No device memory is allocated here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.decode import init_caches
+from repro.models.model import init_params
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _train_or_prefill_inputs(cfg: ModelConfig, B: int, S: int, *,
+                             with_labels: bool) -> Dict[str, Any]:
+    batch: Dict[str, Any] = {}
+    i32 = jnp.int32
+    if cfg.frontend == "vision":
+        batch["embeds"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+        batch["positions"] = sds((3, B, S), i32)
+        if with_labels:
+            batch["labels"] = sds((B, S), i32)
+    elif cfg.frontend == "audio" or cfg.family == "encdec":
+        # encoder frames stub at the same length as the decoder tokens
+        batch["enc_embeds"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = sds((B, S), i32)
+        if with_labels:
+            batch["labels"] = sds((B, S), i32)
+    else:
+        batch["tokens"] = sds((B, S), i32)
+        if with_labels:
+            batch["labels"] = sds((B, S), i32)
+    return batch
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """Returns {"kind": train|prefill|decode, ...ShapeDtypeStructs...}."""
+    meta = SHAPES[shape_name]
+    B, S = meta["batch"], meta["seq"]
+    kind = meta["kind"]
+    if shape_name in cfg.skip_shapes:
+        raise ValueError(f"{cfg.name} skips {shape_name} "
+                         f"(see DESIGN.md §Arch-applicability)")
+    if kind == "train":
+        return {"kind": "train",
+                "batch": _train_or_prefill_inputs(cfg, B, S,
+                                                  with_labels=True)}
+    if kind == "prefill":
+        return {"kind": "prefill",
+                "batch": _train_or_prefill_inputs(cfg, B, S,
+                                                  with_labels=False),
+                "s_max": S}
+    if kind == "decode":
+        # one new token against a seq-long cache/state
+        s_enc = 4096 if cfg.family == "encdec" else 0
+        caches = jax.eval_shape(
+            lambda: init_caches(cfg, B, S, s_enc=s_enc, dtype=jnp.bfloat16))
+        return {"kind": "decode",
+                "tokens": sds((B,), jnp.int32),
+                "pos": sds((), jnp.int32),
+                "caches": caches}
+    raise ValueError(kind)
+
+
+def abstract_params(cfg: ModelConfig, seed: int = 0):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    key = jax.random.PRNGKey(seed)
+    return jax.eval_shape(lambda: init_params(cfg, key))

@@ -1,0 +1,30 @@
+"""Production mesh definition.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (required by the dry-run contract).
+
+Topology: TPU v5e pods of 256 chips arranged (data=16, model=16); the
+multi-pod mesh prepends a 'pod' axis (DCN) for 2 pods = 512 chips. The
+'model' axis carries TP/EP (ICI-local); ('pod','data') carry DP and the
+ADMM row-sharding.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests/examples (e.g. (4,2) on 8 host devices)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )

@@ -1,0 +1,102 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs real steps on the local device(s) (use --smoke for reduced configs on
+CPU; the production mesh path is exercised by dryrun.py). Integrates the
+full fault-tolerance loop: deterministic data pipeline, periodic atomic
+checkpoints (background thread), resume-from-latest, and failure injection
+for the restart tests.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs_lib
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import TokenPipeline
+from repro.models.model import init_params
+from repro.optim.optimizers import make_optimizer
+from repro.runtime.steps import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--die-at-step", type=int, default=-1,
+                    help="failure injection: SIGKILL self at this step")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = configs_lib.get_smoke(args.arch) if args.smoke \
+        else configs_lib.get(args.arch)
+    opt = make_optimizer(cfg.optimizer, lr=args.lr,
+                         total_steps=max(args.steps, 2))
+    step_fn = jax.jit(make_train_step(cfg, opt,
+                                      microbatches=args.microbatches),
+                      donate_argnums=(0, 1))
+
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, global_batch=args.batch,
+                         seq_len=args.seq, seed=args.seed,
+                         frontend=cfg.frontend, d_model=cfg.d_model,
+                         mrope=cfg.mrope)
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt_state = opt.init(params)
+    if ckpt and ckpt.latest_step() is not None:
+        (params, opt_state), extra = ckpt.restore((params, opt_state))
+        start = extra["step"] + 1
+        print(f"[resume] restored step {extra['step']}, continuing at {start}",
+              flush=True)
+
+    losses = []
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(step).items()}
+        params, opt_state, metrics = step_fn(
+            params, opt_state, batch, jnp.asarray(step, jnp.int32))
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0):.1f}s)", flush=True)
+        if ckpt and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step, (params, opt_state), extra={"step": step},
+                      background=True)
+        if args.die_at_step == step:
+            print(f"[failure-injection] SIGKILL at step {step}", flush=True)
+            if ckpt:
+                ckpt.wait()
+            os.kill(os.getpid(), signal.SIGKILL)
+    if ckpt:
+        ckpt.wait()  # drain any background save before the final one
+        if ckpt.latest_step() != args.steps - 1:
+            ckpt.save(args.steps - 1, (params, opt_state),
+                      extra={"step": args.steps - 1})
+        ckpt.wait()
+    print(f"[done] final loss {losses[-1]:.4f} (first {losses[0]:.4f})",
+          flush=True)
+    return losses
+
+
+if __name__ == "__main__":
+    main()

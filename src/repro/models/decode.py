@@ -1,0 +1,349 @@
+"""Serving path: prefill (build caches) + single-token decode steps.
+
+Cache layouts (per homogeneous segment, leading L axis, scan-carried):
+  attn / moe / cross : k,v (L,B,Smax,Hkv_eff,hd) — rotated keys cached
+                       cross adds xk,xv (L,B,Senc,Hkv_eff,hd), built once
+  attn_local         : ring buffers k,v (L,B,window,Hkv_eff,hd); a slot s at
+                       step pos holds position p = pos - ((pos - s) % window)
+                       (validity derived, nothing stored)
+  rwkv               : S (L,B,H,hd,hd), tmix_x/cmix_x (L,B,d) — O(1) state,
+                       which is what makes long_500k runnable for this family
+  rec (RG-LRU)       : h (L,B,lw), conv tail (L,B,W-1,lw)
+
+Sharding: cache batch on ('pod','data'), kv-heads/state channels on 'model'.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.ops import chunked_attention_xla
+from repro.models import griffin as griffin_lib
+from repro.models import rwkv6 as rwkv_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import _project_qkv, attention_decode, rmsnorm, mlp
+from repro.models import moe as moe_lib
+from repro.models.model import (
+    embed_tokens,
+    layer_kinds,
+    segment_structure,
+)
+from repro.sharding.util import DP, shard
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, kind: str, count: int, B: int, s_max: int,
+               s_enc: int = 0, dtype=jnp.bfloat16) -> Dict[str, Array]:
+    hd = cfg.head_dim
+    Hkv = cfg.kv_heads_eff
+    if kind in ("attn", "moe"):
+        shape = (count, B, s_max, Hkv, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if kind == "cross":
+        shape = (count, B, s_max, Hkv, hd)
+        xshape = (count, B, s_enc, Hkv, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+                "xk": jnp.zeros(xshape, dtype), "xv": jnp.zeros(xshape, dtype)}
+    if kind == "attn_local":
+        w = min(cfg.window_size, s_max)
+        shape = (count, B, w, Hkv, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if kind == "rwkv":
+        H = cfg.d_model // cfg.rwkv_head_dim
+        rhd = cfg.rwkv_head_dim
+        return {
+            "S": jnp.zeros((count, B, H, rhd, rhd), jnp.float32),
+            "tmix_x": jnp.zeros((count, B, cfg.d_model), jnp.float32),
+            "cmix_x": jnp.zeros((count, B, cfg.d_model), jnp.float32),
+        }
+    if kind == "rec":
+        return {
+            "h": jnp.zeros((count, B, cfg.lru_width), jnp.float32),
+            "conv": jnp.zeros((count, B, cfg.conv_width - 1, cfg.lru_width),
+                              jnp.float32),
+        }
+    raise ValueError(kind)
+
+
+def init_caches(cfg: ModelConfig, B: int, s_max: int, s_enc: int = 0,
+                dtype=jnp.bfloat16):
+    return [
+        init_cache(cfg, kind, count, B, s_max, s_enc, dtype)
+        for kind, count in segment_structure(layer_kinds(cfg))
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer decode step
+# ---------------------------------------------------------------------------
+
+def _local_attn_decode(params, cfg: ModelConfig, x, cache_k, cache_v, pos):
+    """Ring-buffer windowed decode. cache_k/v: (B, W, Hkv, hd)."""
+    B = x.shape[0]
+    W = cache_k.shape[1]
+    hd = cfg.head_dim
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    slot = jnp.mod(pos, W)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cache_v.dtype), slot, axis=1)
+    # slot s holds position p = pos - ((pos - s) mod W); valid iff p >= 0.
+    s_idx = jnp.arange(W)
+    p_slot = pos - jnp.mod(pos - s_idx, W)
+    valid = p_slot >= 0
+    Hkv = cfg.kv_heads_eff
+    rep = cfg.num_heads // Hkv
+    qg = q.reshape(B, 1, Hkv, rep, hd).astype(jnp.float32)
+    s = jnp.einsum("bqhrd,bshd->bhrqs", qg, cache_k.astype(jnp.float32))
+    s = s / jnp.sqrt(1.0 * hd)
+    s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhrqs,bshd->bqhrd", p, cache_v.astype(jnp.float32))
+    o = o.reshape(B, 1, cfg.num_heads * hd).astype(cfg.compute_dtype)
+    out = o @ params["wo"].astype(cfg.compute_dtype)
+    return out, cache_k, cache_v
+
+
+def _block_step(params, cfg: ModelConfig, kind: str, x: Array,
+                cache: Dict[str, Array], pos) -> Tuple[Array, Dict]:
+    """x: (B, 1, d) -> (x', cache'). cache holds ONE layer (no L axis)."""
+    eps = cfg.norm_eps
+    cdt = cfg.compute_dtype
+    new_cache = dict(cache)
+    if kind in ("attn", "moe", "cross", "attn_local"):
+        h_in = rmsnorm(x, params["ln1"], eps)
+        if kind == "attn_local":
+            h, ck, cv = _local_attn_decode(
+                params["attn"], cfg, h_in, cache["k"], cache["v"], pos)
+        else:
+            h, ck, cv = attention_decode(
+                params["attn"], cfg, h_in, cache["k"], cache["v"], pos)
+        new_cache["k"], new_cache["v"] = ck, cv
+        x = x + h
+        if kind == "cross":
+            xa = params["xattn"]
+            B = x.shape[0]
+            hd = cfg.head_dim
+            q = (rmsnorm(x, params["ln_x"], eps) @ xa["wq"].astype(cdt))
+            q = q.reshape(B, 1, cfg.num_heads, hd)
+            Hkv = cfg.kv_heads_eff
+            rep = cfg.num_heads // Hkv
+            qg = q.reshape(B, 1, Hkv, rep, hd).astype(jnp.float32)
+            s = jnp.einsum("bqhrd,bshd->bhrqs", qg,
+                           cache["xk"].astype(jnp.float32))
+            s = s / jnp.sqrt(1.0 * hd)
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhrqs,bshd->bqhrd", p,
+                           cache["xv"].astype(jnp.float32))
+            o = o.reshape(B, 1, cfg.num_heads * hd).astype(cdt)
+            x = x + o @ xa["wo"].astype(cdt)
+        ff_in = rmsnorm(x, params["ln2"], eps)
+        if kind == "moe":
+            h, _ = moe_lib.moe_ffn(params["moe"], cfg, ff_in)
+        else:
+            h = mlp(params["mlp"], ff_in, cdt)
+        x = x + h
+    elif kind == "rwkv":
+        xt = rmsnorm(x[:, 0], params["ln1"], eps)
+        h, last_t, S = rwkv_lib.time_mix_step(
+            params["tmix"], cfg, xt, cache["tmix_x"], cache["S"])
+        x = x + h[:, None]
+        xc = rmsnorm(x[:, 0], params["ln2"], eps)
+        h, last_c = rwkv_lib.channel_mix_step(
+            params["cmix"], cfg, xc, cache["cmix_x"])
+        x = x + h[:, None]
+        new_cache.update(S=S, tmix_x=last_t, cmix_x=last_c)
+    elif kind == "rec":
+        h, (hl, tail) = griffin_lib.recurrent_block_step(
+            params["rec"], cfg, rmsnorm(x[:, 0], params["ln1"], eps),
+            (cache["h"], cache["conv"]))
+        x = x + h[:, None]
+        h = mlp(params["mlp"], rmsnorm(x, params["ln2"], eps), cdt)
+        x = x + h
+        new_cache.update(h=hl, conv=tail)
+    else:
+        raise ValueError(kind)
+    return x, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, caches, *, tokens: Array,
+                pos) -> Tuple[Array, list]:
+    """tokens: (B,) int32; pos: scalar int32 position. -> (logits (B,V), caches)."""
+    x = embed_tokens(params, cfg, tokens[:, None])
+    x = shard(x, DP, None, "model")
+    seg_meta = segment_structure(layer_kinds(cfg))
+    new_caches = []
+    for (kind, count), stacked, cache in zip(seg_meta, params["blocks"],
+                                             caches):
+        def body(xc, layer, _kind=kind):
+            lp, lc = layer
+            xo, nc = _block_step(lp, cfg, _kind, xc, lc, pos)
+            return shard(xo, DP, None, "model"), nc
+
+        if cfg.scan_layers and count > 1:
+            x, nc = jax.lax.scan(body, x, (stacked, cache))
+        else:
+            ncs = []
+            for li in range(count):
+                lp = jax.tree.map(lambda a: a[li], stacked)
+                lc = jax.tree.map(lambda a: a[li], cache)
+                x, c1 = body(x, (lp, lc))
+                ncs.append(c1)
+            nc = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+        new_caches.append(nc)
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["lm_head"] if "lm_head" in params else params["embed"].T
+    logits = (h[:, 0].astype(jnp.float32)
+              @ head.astype(jnp.float32))
+    logits = shard(logits, DP, "model")
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward that also fills the attention caches
+# ---------------------------------------------------------------------------
+
+def _block_prefill(params, cfg: ModelConfig, kind: str, x: Array,
+                   positions, s_max: int, enc_out=None,
+                   attn_impl: str = "xla", cache_dtype=jnp.bfloat16):
+    """Full-sequence block that also returns this layer's cache content."""
+    eps = cfg.norm_eps
+    cdt = cfg.compute_dtype
+    B, S, d = x.shape
+    cache: Dict[str, Array] = {}
+    if kind in ("attn", "moe", "cross", "attn_local"):
+        h_in = rmsnorm(x, params["ln1"], eps)
+        q, k, v = _project_qkv(params["attn"], cfg, h_in, positions)
+        window = cfg.window_size if kind == "attn_local" else 0
+        o = chunked_attention_xla(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True, window=window,
+            unroll=cfg.unroll_inner)
+        o = o.transpose(0, 2, 1, 3).reshape(B, S, -1)
+        x = x + o @ params["attn"]["wo"].astype(cdt)
+        if kind == "attn_local":
+            W = min(cfg.window_size, s_max)
+            # Ring layout: slot = pos % W for the last W positions.
+            last_pos = positions[..., -W:] if S >= W else positions
+            kw = k[:, -W:] if S >= W else k
+            vw = v[:, -W:] if S >= W else v
+            slots = jnp.mod(jnp.arange(S)[-W:] if S >= W else jnp.arange(S), W)
+            ck = jnp.zeros((B, W, cfg.kv_heads_eff, cfg.head_dim), cache_dtype)
+            cv = jnp.zeros_like(ck)
+            ck = ck.at[:, slots].set(kw.astype(ck.dtype))
+            cv = cv.at[:, slots].set(vw.astype(cv.dtype))
+            cache["k"], cache["v"] = ck, cv
+        else:
+            pad = s_max - S
+            cache["k"] = jnp.pad(
+                k.astype(cache_dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cache["v"] = jnp.pad(
+                v.astype(cache_dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kind == "cross":
+            xa = params["xattn"]
+            Se = enc_out.shape[1]
+            hd = cfg.head_dim
+            xk = (enc_out @ xa["wk"].astype(cdt)).reshape(
+                B, Se, cfg.kv_heads_eff, hd)
+            xv = (enc_out @ xa["wv"].astype(cdt)).reshape(
+                B, Se, cfg.kv_heads_eff, hd)
+            hq = (rmsnorm(x, params["ln_x"], eps) @ xa["wq"].astype(cdt))
+            hq = hq.reshape(B, S, cfg.num_heads, hd)
+            o = chunked_attention_xla(
+                hq.transpose(0, 2, 1, 3), xk.transpose(0, 2, 1, 3),
+                xv.transpose(0, 2, 1, 3), causal=False,
+                unroll=cfg.unroll_inner)
+            o = o.transpose(0, 2, 1, 3).reshape(B, S, -1)
+            x = x + o @ xa["wo"].astype(cdt)
+            cache["xk"] = xk.astype(cache_dtype)
+            cache["xv"] = xv.astype(cache_dtype)
+        ff_in = rmsnorm(x, params["ln2"], eps)
+        if kind == "moe":
+            if cfg.moe_impl == "a2a":
+                from repro.models.moe_a2a import moe_ffn_a2a
+                h, _ = moe_ffn_a2a(params["moe"], cfg, ff_in)
+            else:
+                h, _ = moe_lib.moe_ffn(params["moe"], cfg, ff_in)
+        else:
+            h = mlp(params["mlp"], ff_in, cdt)
+        x = x + h
+    elif kind == "rwkv":
+        h, (last_t, S_final) = rwkv_lib.time_mix(
+            params["tmix"], cfg, rmsnorm(x, params["ln1"], eps))
+        x = x + h
+        hc, last_c = rwkv_lib.channel_mix(params["cmix"], cfg,
+                                          rmsnorm(x, params["ln2"], eps))
+        x = x + hc
+        cache["S"] = S_final
+        cache["tmix_x"] = last_t
+        cache["cmix_x"] = last_c
+    elif kind == "rec":
+        h, (hl, tail) = griffin_lib.recurrent_block(
+            params["rec"], cfg, rmsnorm(x, params["ln1"], eps))
+        x = x + h
+        x = x + mlp(params["mlp"], rmsnorm(x, params["ln2"], eps), cdt)
+        cache["h"] = hl.astype(jnp.float32)
+        cache["conv"] = tail.astype(jnp.float32)
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
+def prefill(params, cfg: ModelConfig, *, tokens=None, embeds=None,
+            positions=None, enc_embeds=None, s_max: int,
+            attn_impl: str = "xla", cache_dtype=jnp.bfloat16):
+    """Run the prompt, return (last-token logits (B,V), caches)."""
+    if embeds is None:
+        embeds = embed_tokens(params, cfg, tokens)
+    B, S, d = embeds.shape
+    if positions is None:
+        base = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        positions = jnp.broadcast_to(base, (3, B, S)) if cfg.mrope else base
+    x = shard(embeds, DP, None, "model")
+
+    enc_out = None
+    if cfg.encoder_layers:
+        from repro.models.model import _run_stack  # encoder has no cache
+        Be, Se, _ = enc_embeds.shape
+        enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (Be, Se))
+        enc_x = shard(enc_embeds.astype(cfg.compute_dtype), DP, None, "model")
+        enc_x, _ = _run_stack(
+            params["enc_blocks"],
+            segment_structure(layer_kinds(cfg, "encoder")),
+            cfg, enc_x, enc_pos, causal=False, attn_impl=attn_impl)
+        enc_out = rmsnorm(enc_x, params["enc_norm"], cfg.norm_eps)
+
+    seg_meta = segment_structure(layer_kinds(cfg))
+    caches = []
+    for (kind, count), stacked in zip(seg_meta, params["blocks"]):
+        def body(xc, layer_params, _kind=kind):
+            xo, c = _block_prefill(layer_params, cfg, _kind, xc, positions,
+                                   s_max, enc_out=enc_out,
+                                   attn_impl=attn_impl,
+                                   cache_dtype=cache_dtype)
+            return shard(xo, DP, None, "model"), c
+
+        if cfg.scan_layers and count > 1:
+            x, cache = jax.lax.scan(body, x, stacked)
+        else:
+            cs = []
+            for li in range(count):
+                lp = jax.tree.map(lambda a: a[li], stacked)
+                x, c1 = body(x, lp)
+                cs.append(c1)
+            cache = jax.tree.map(lambda *xs: jnp.stack(xs), *cs)
+        caches.append(cache)
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["lm_head"] if "lm_head" in params else params["embed"].T
+    logits = h[:, -1].astype(jnp.float32) @ head.astype(jnp.float32)
+    return shard(logits, DP, "model"), caches

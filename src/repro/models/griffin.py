@@ -1,0 +1,104 @@
+"""Griffin / RecurrentGemma (arXiv:2402.19427) — RG-LRU + local attention.
+
+Recurrent block: gated branch (GeLU) x (conv1d width-4 -> RG-LRU) -> out proj.
+RG-LRU:  r_t = sigmoid(W_a x_t); i_t = sigmoid(W_i x_t)
+         a_t = exp(-c * softplus(Lambda) * r_t)            (c = 8)
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+The sequence form uses jax.lax.associative_scan (parallel prefix over the
+affine maps h -> a h + b) — O(log S) depth on TPU; decode is a single affine
+step, O(1) state (+ width-4 conv tail, + 2048-token local-attn window), which
+is what makes the long_500k cell runnable for this family.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+Array = jax.Array
+LRU_C = 8.0
+
+
+def init_recurrent_block(key, cfg: ModelConfig):
+    d, lw = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    dt = cfg.param_dtype
+    return {
+        "w_gate": dense_init(ks[0], (d, lw), dt),
+        "w_x": dense_init(ks[1], (d, lw), dt),
+        "conv_w": dense_init(ks[2], (cfg.conv_width, lw), dt, scale=0.5),
+        "conv_b": jnp.zeros((lw,), dt),
+        "lru_lambda": jnp.ones((lw,), dt) * 0.7,   # softplus -> a ~ decay
+        "w_a": dense_init(ks[3], (lw, lw), dt),
+        "w_i": dense_init(ks[4], (lw, lw), dt),
+        "w_out": dense_init(ks[5], (lw, d), dt),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, tail: Array | None = None):
+    """Depthwise causal conv, width W. x: (B,S,lw); w: (W,lw).
+    tail: (B, W-1, lw) previous context (decode) or None (zeros)."""
+    B, S, lw = x.shape
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((B, W - 1, lw), x.dtype)
+    # caches store the tail in f32; keep the conv in compute dtype
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)  # (B, S+W-1, lw)
+    out = sum(
+        xp[:, i:i + S, :] * w[i][None, None, :] for i in range(W)
+    ) + b[None, None, :]
+    return out, xp[:, -(W - 1):, :]
+
+
+def rg_lru(p, x: Array, h0: Array | None = None):
+    """x: (B,S,lw) conv output. Returns (y, h_last). f32 scan math."""
+    B, S, lw = x.shape
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32))
+    log_a = -LRU_C * jax.nn.softplus(p["lru_lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    if h0 is not None:
+        # Fold the carried state in as a virtual step 0.
+        a0 = jnp.ones((B, 1, lw), jnp.float32)
+        aa = jnp.concatenate([a0, a], axis=1)
+        bb = jnp.concatenate([h0.astype(jnp.float32)[:, None], gated], axis=1)
+    else:
+        aa, bb = a, gated
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    A, Bc = jax.lax.associative_scan(combine, (aa, bb), axis=1)
+    h = Bc if h0 is None else Bc[:, 1:]
+    return h.astype(x.dtype), h[:, -1]
+
+
+def recurrent_block(p, cfg: ModelConfig, x: Array,
+                    state: Tuple[Array, Array] | None = None):
+    """x: (B,S,d). state = (h_lru (B,lw), conv_tail (B,W-1,lw)) or None.
+    Returns (out, new_state)."""
+    cdt = cfg.compute_dtype
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(cdt))
+    u = x @ p["w_x"].astype(cdt)
+    h0, tail = state if state is not None else (None, None)
+    u, new_tail = _causal_conv(u, p["conv_w"].astype(cdt),
+                               p["conv_b"].astype(cdt), tail)
+    y, h_last = rg_lru(p, u, h0)
+    out = (gate * y) @ p["w_out"].astype(cdt)
+    # states are carried in f32 across steps (cache dtype), output in cdt
+    return out, (h_last.astype(jnp.float32), new_tail.astype(jnp.float32))
+
+
+def recurrent_block_step(p, cfg: ModelConfig, x: Array,
+                         state: Tuple[Array, Array]):
+    """One-token decode. x: (B, d); state as above with conv tail (B,W-1,lw)."""
+    out, new_state = recurrent_block(p, cfg, x[:, None, :], state)
+    return out[:, 0], new_state

@@ -1,0 +1,206 @@
+"""Shared transformer layers: RMSNorm, RoPE/M-RoPE, SwiGLU, GQA attention
+(train: flash / chunked online-softmax; serve: KV-cache decode step).
+
+Parameters are plain dict pytrees; init functions take an rng key and return
+arrays in ``param_dtype``. Compute is in ``compute_dtype`` (bf16 on TPU) with
+f32 for norms/softmax statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.ops import flash_attention, chunked_attention_xla
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) == 2 else shape[-2]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: Array, w: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float,
+               mrope_sections: Optional[Tuple[int, int, int]] = None) -> Array:
+    """x: (B, S, H, hd). positions: (B, S) int32, or (3, B, S) for M-RoPE.
+
+    M-RoPE (qwen2-vl): the hd/2 rotary frequencies are split into
+    (temporal, height, width) sections; each section takes its angle from the
+    corresponding position stream. Text tokens carry identical t/h/w
+    positions, reducing M-RoPE to 1-D RoPE exactly.
+    """
+    B, S, H, hd = x.shape
+    inv = rope_freqs(hd, theta)                       # (hd/2,)
+    if positions.ndim == 3:
+        assert mrope_sections is not None
+        assert sum(mrope_sections) == hd // 2, (mrope_sections, hd)
+        sec = jnp.concatenate([
+            jnp.full((s,), i, jnp.int32)
+            for i, s in enumerate(mrope_sections)
+        ])                                            # (hd/2,) section id
+        pos = positions.astype(jnp.float32)           # (3, B, S)
+        angle = pos[sec, :, :].transpose(1, 2, 0) * inv[None, None, :]
+    else:
+        angle = positions.astype(jnp.float32)[..., None] * inv[None, None, :]
+    cos = jnp.cos(angle)[:, :, None, :]               # (B, S, 1, hd/2)
+    sin = jnp.sin(angle)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(k1, (d, ff), dtype),
+        "w3": dense_init(k2, (d, ff), dtype),
+        "w2": dense_init(k3, (ff, d), dtype),
+    }
+
+
+def mlp(params, x: Array, cdt) -> Array:
+    h = jax.nn.silu(x @ params["w1"].astype(cdt)) * (x @ params["w3"].astype(cdt))
+    return h @ params["w2"].astype(cdt)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    hd = cfg.head_dim
+    kq, kk, kv, ko, kn = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(kq, (d, cfg.num_heads * hd), cfg.param_dtype),
+        "wk": dense_init(kk, (d, cfg.kv_heads_eff * hd), cfg.param_dtype),
+        "wv": dense_init(kv, (d, cfg.kv_heads_eff * hd), cfg.param_dtype),
+        "wo": dense_init(ko, (cfg.num_heads * hd, d), cfg.param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), cfg.param_dtype)
+        p["k_norm"] = jnp.zeros((hd,), cfg.param_dtype)
+    return p
+
+
+def _project_qkv(params, cfg: ModelConfig, x: Array, positions: Array):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    cdt = cfg.compute_dtype
+    q = (x @ params["wq"].astype(cdt)).reshape(B, S, cfg.num_heads, hd)
+    k = (x @ params["wk"].astype(cdt)).reshape(B, S, cfg.kv_heads_eff, hd)
+    v = (x @ params["wv"].astype(cdt)).reshape(B, S, cfg.kv_heads_eff, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    sections = cfg.mrope_sections if cfg.mrope else None
+    q = apply_rope(q, positions, cfg.rope_theta, sections)
+    k = apply_rope(k, positions, cfg.rope_theta, sections)
+    return q, k, v
+
+
+def attention(params, cfg: ModelConfig, x: Array, positions: Array, *,
+              causal: bool = True, window: int = 0,
+              kv_override: Optional[Tuple[Array, Array]] = None,
+              attn_impl: str = "xla") -> Array:
+    """Full-sequence attention (train / prefill / encoder).
+
+    kv_override: (k, v) already projected — used by cross-attention.
+    window > 0: local attention |q - k| < window (griffin).
+    """
+    B, S, _ = x.shape
+    if kv_override is None:
+        q, k, v = _project_qkv(params, cfg, x, positions)
+    else:
+        # Cross-attention: no RoPE on q/k (positions are heterogeneous).
+        cdt = cfg.compute_dtype
+        hd = cfg.head_dim
+        q = (x @ params["wq"].astype(cdt)).reshape(B, S, cfg.num_heads, hd)
+        if cfg.qk_norm:
+            q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k, v = kv_override
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if attn_impl.startswith("pallas") and window == 0:
+        o = flash_attention(qt, kt, vt, causal=causal, impl=attn_impl)
+    else:
+        # unroll mode uses larger q-chunks purely to bound the number of
+        # unrolled iterations (total score bytes are chunk-invariant).
+        o = chunked_attention_xla(qt, kt, vt, causal=causal, window=window,
+                                  chunk_q=2048 if cfg.unroll_inner else 512,
+                                  unroll=cfg.unroll_inner)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    return o @ params["wo"].astype(cfg.compute_dtype)
+
+
+def attention_decode(params, cfg: ModelConfig, x: Array, cache_k: Array,
+                     cache_v: Array, pos: Array, *, window: int = 0):
+    """One decode step. x: (B, 1, d); cache_k/v: (B, Smax, Hkv_eff, hd);
+    pos: scalar int32 — current position (same for the whole batch).
+
+    Returns (out, cache_k, cache_v) with the caches updated at ``pos``.
+    """
+    B = x.shape[0]
+    hd = cfg.head_dim
+    if cfg.mrope:
+        positions = jnp.full((3, B, 1), pos, jnp.int32)  # text: t=h=w
+    else:
+        positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cache_k.dtype), pos, axis=1
+    )
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cache_v.dtype), pos, axis=1
+    )
+    Smax = cache_k.shape[1]
+    Hkv = cfg.kv_heads_eff
+    rep = cfg.num_heads // Hkv
+    qg = q.reshape(B, 1, Hkv, rep, hd).astype(jnp.float32)
+    kf = cache_k.astype(jnp.float32)
+    vf = cache_v.astype(jnp.float32)
+    s = jnp.einsum("bqhrd,bshd->bhrqs", qg, kf) / jnp.sqrt(1.0 * hd)
+    idx = jnp.arange(Smax)
+    mask = idx[None, :] <= pos
+    if window:
+        mask = mask & (idx[None, :] > pos - window)
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhrqs,bshd->bqhrd", p, vf)
+    o = o.reshape(B, 1, cfg.num_heads * hd).astype(cfg.compute_dtype)
+    return o @ params["wo"].astype(cfg.compute_dtype), cache_k, cache_v

@@ -1,0 +1,386 @@
+"""Unified LM covering all assigned families: init / forward / loss /
+prefill / decode, with scan-over-layers, remat, and logical sharding specs.
+
+Param pytree layout (scanned stacks carry a leading L dim):
+  {embed, blocks | groups+tail, final_norm, lm_head [, enc_blocks, enc_norm]}
+
+Activation sharding: batch on ('pod','data'); attention heads / FFN hidden /
+experts / vocab on 'model'; the saved residual stream between scanned layers
+is additionally sharded on 'model' along d_model (sequence-parallel-style
+memory saving — see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import griffin as griffin_lib
+from repro.models import moe as moe_lib
+from repro.models import rwkv6 as rwkv_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    attention,
+    attention_decode,
+    dense_init,
+    init_attention,
+    init_mlp,
+    mlp,
+    rmsnorm,
+)
+from repro.sharding.util import DP, shard
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply (one layer)
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, kind: str):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": jnp.zeros((d,), cfg.param_dtype),
+                         "ln2": jnp.zeros((d,), cfg.param_dtype)}
+    if kind == "attn":
+        p["attn"] = init_attention(ks[0], cfg)
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, cfg.param_dtype)
+    elif kind == "moe":
+        p["attn"] = init_attention(ks[0], cfg)
+        p["moe"] = moe_lib.init_moe(ks[1], cfg)
+    elif kind == "rwkv":
+        p["tmix"] = rwkv_lib.init_time_mix(ks[0], cfg)
+        p["cmix"] = rwkv_lib.init_channel_mix(ks[1], cfg)
+    elif kind == "rec":
+        p["rec"] = griffin_lib.init_recurrent_block(ks[0], cfg)
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, cfg.param_dtype)
+    elif kind == "attn_local":
+        p["attn"] = init_attention(ks[0], cfg)
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, cfg.param_dtype)
+    elif kind == "cross":  # encoder-decoder decoder layer
+        p["attn"] = init_attention(ks[0], cfg)
+        p["ln_x"] = jnp.zeros((d,), cfg.param_dtype)
+        p["xattn"] = init_attention(ks[1], cfg)
+        p["mlp"] = init_mlp(ks[2], d, cfg.d_ff, cfg.param_dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _apply_block(params, cfg: ModelConfig, kind: str, x: Array,
+                 positions: Array, *, causal: bool = True,
+                 enc_out: Optional[Array] = None,
+                 enc_positions: Optional[Array] = None,
+                 attn_impl: str = "xla") -> Tuple[Array, Array]:
+    """Returns (x_out, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    eps = cfg.norm_eps
+
+    tp = cfg.parallelism == "tp"
+
+    def gather_in(v):
+        # §Perf H1: one explicit all-gather per block half; every projection
+        # then consumes the same replicated tensor (no per-matmul re-gather).
+        return shard(v, cfg.dp_axes, None, None) \
+            if (cfg.sp_collectives and tp) else v
+
+    def scatter_out(h):
+        # reduce-scatter block output into the d-sharded residual (TP only)
+        return shard(h, cfg.dp_axes, None, "model") \
+            if (cfg.sp_collectives and tp) else h
+
+    if kind in ("attn", "moe", "attn_local", "cross"):
+        window = cfg.window_size if kind == "attn_local" else 0
+        h = attention(params["attn"], cfg,
+                      gather_in(rmsnorm(x, params["ln1"], eps)),
+                      positions, causal=causal, window=window,
+                      attn_impl=attn_impl)
+        h = scatter_out(h)
+        x = x + h
+        if kind == "cross":
+            # cross-attention: kv from encoder output (own projections).
+            xa = params["xattn"]
+            cdt = cfg.compute_dtype
+            B, Se, _ = enc_out.shape
+            hd = cfg.head_dim
+            k = (enc_out @ xa["wk"].astype(cdt)).reshape(
+                B, Se, cfg.kv_heads_eff, hd
+            )
+            v = (enc_out @ xa["wv"].astype(cdt)).reshape(
+                B, Se, cfg.kv_heads_eff, hd
+            )
+            h = attention(xa, cfg, rmsnorm(x, params["ln_x"], eps),
+                          positions, causal=False, kv_override=(k, v),
+                          attn_impl=attn_impl)
+            x = x + h
+        ff_in = gather_in(rmsnorm(x, params["ln2"], eps))
+        if kind == "moe":
+            if cfg.moe_impl == "a2a":
+                from repro.models.moe_a2a import moe_ffn_a2a
+                h, aux = moe_ffn_a2a(params["moe"], cfg,
+                                     rmsnorm(x, params["ln2"], eps))
+            else:
+                h, aux = moe_lib.moe_ffn(params["moe"], cfg, ff_in)
+        else:
+            h = mlp(params["mlp"], ff_in, cfg.compute_dtype)
+        h = scatter_out(h)
+        x = x + h
+    elif kind == "rwkv":
+        h, _state = rwkv_lib.time_mix(
+            params["tmix"], cfg, gather_in(rmsnorm(x, params["ln1"], eps)))
+        h = scatter_out(h)
+        x = x + h
+        h, _ = rwkv_lib.channel_mix(
+            params["cmix"], cfg, gather_in(rmsnorm(x, params["ln2"], eps)))
+        h = scatter_out(h)
+        x = x + h
+    elif kind == "rec":
+        h, _ = griffin_lib.recurrent_block(
+            params["rec"], cfg, gather_in(rmsnorm(x, params["ln1"], eps)))
+        h = scatter_out(h)
+        x = x + h
+        h = mlp(params["mlp"], gather_in(rmsnorm(x, params["ln2"], eps)),
+                cfg.compute_dtype)
+        h = scatter_out(h)
+        x = x + h
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def layer_kinds(cfg: ModelConfig, role: str = "decoder") -> Tuple[str, ...]:
+    """Per-layer kind list for the given config."""
+    if role == "encoder":
+        return ("attn",) * cfg.encoder_layers
+    if cfg.family == "dense":
+        return ("attn",) * cfg.num_layers
+    if cfg.family == "moe":
+        return ("moe",) * cfg.num_layers
+    if cfg.family == "rwkv6":
+        return ("rwkv",) * cfg.num_layers
+    if cfg.family == "griffin":
+        pat = cfg.pattern or ("rec", "rec", "attn_local")
+        return tuple(pat[i % len(pat)] for i in range(cfg.num_layers))
+    if cfg.family == "encdec":
+        return ("cross",) * cfg.num_layers
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def segment_structure(kinds: Tuple[str, ...]) -> Tuple[Tuple[str, int], ...]:
+    """Maximal homogeneous runs of layer kinds: ((kind, count), ...).
+    STATIC metadata — kept out of the param pytree (strings are not leaves)."""
+    segs = []
+    i = 0
+    while i < len(kinds):
+        j = i
+        while j < len(kinds) and kinds[j] == kinds[i]:
+            j += 1
+        segs.append((kinds[i], j - i))
+        i = j
+    return tuple(segs)
+
+
+def _stack_init(key, cfg, kinds: Tuple[str, ...]):
+    """Init a (possibly heterogeneous) stack as a list of stacked segment
+    pytrees (leading L axis per segment), matching segment_structure(kinds)."""
+    segs = segment_structure(kinds)
+    out = []
+    keys = jax.random.split(key, len(kinds))
+    i = 0
+    for kind, count in segs:
+        seg_keys = jnp.stack(keys[i:i + count])
+        out.append(jax.vmap(lambda k: _init_block(k, cfg, kind))(seg_keys))
+        i += count
+    return out
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    k_emb, k_blocks, k_enc, k_head = jax.random.split(key, 4)
+    d = cfg.d_model
+    params: Dict[str, Any] = {
+        "embed": dense_init(k_emb, (cfg.vocab_size, d), cfg.param_dtype,
+                            scale=1.0),
+        "final_norm": jnp.zeros((d,), cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, (d, cfg.vocab_size),
+                                       cfg.param_dtype)
+    params["blocks"] = _stack_init(k_blocks, cfg, layer_kinds(cfg))
+    if cfg.encoder_layers:
+        params["enc_blocks"] = _stack_init(
+            k_enc, cfg, layer_kinds(cfg, "encoder")
+        )
+        params["enc_norm"] = jnp.zeros((d,), cfg.param_dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill / encoder)
+# ---------------------------------------------------------------------------
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat == "none":
+        return None
+    if cfg.remat == "dots":
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _run_stack(segments, seg_meta, cfg: ModelConfig, x: Array,
+               positions: Array, *, causal: bool, enc_out=None,
+               enc_positions=None, attn_impl: str = "xla"):
+    """Scan each homogeneous segment over its stacked layers."""
+    aux_total = jnp.zeros((), jnp.float32)
+    policy = _remat_policy(cfg)
+    for (kind, count), stacked in zip(seg_meta, segments):
+        bnd_model = "model" if cfg.parallelism == "tp" else None
+
+        def one_layer(carry, layer_params, _kind=kind):
+            xc, aux = carry
+            xc = shard(xc, cfg.dp_axes, None, bnd_model)
+            xo, a = _apply_block(
+                layer_params, cfg, _kind, xc, positions, causal=causal,
+                enc_out=enc_out, enc_positions=enc_positions,
+                attn_impl=attn_impl,
+            )
+            xo = shard(xo, cfg.dp_axes, None, bnd_model)
+            return (xo, aux + a), None
+
+        body = one_layer
+        if policy is not None:
+            body = jax.checkpoint(one_layer, policy=policy,
+                                  prevent_cse=False, static_argnums=())
+        if cfg.scan_layers and count > 1:
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), stacked)
+        else:
+            for li in range(count):
+                lp = jax.tree.map(lambda a: a[li], stacked)
+                (x, aux_total), _ = body((x, aux_total), lp)
+    return x, aux_total
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens: Array) -> Array:
+    e = params["embed"].astype(cfg.compute_dtype)
+    return jnp.take(e, tokens, axis=0)
+
+
+def forward(params, cfg: ModelConfig, *, tokens: Optional[Array] = None,
+            embeds: Optional[Array] = None,
+            positions: Optional[Array] = None,
+            enc_embeds: Optional[Array] = None,
+            attn_impl: str = "xla") -> Tuple[Array, Array]:
+    """Returns (final hidden states (B,S,d), aux_loss). Decoder-causal.
+
+    encdec: enc_embeds (stub audio frames) run through the encoder; the
+    decoder cross-attends to the encoder output.
+    """
+    if embeds is None:
+        embeds = embed_tokens(params, cfg, tokens)
+    B, S, d = embeds.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = shard(embeds, cfg.dp_axes, None,
+              "model" if cfg.parallelism == "tp" else None)
+
+    enc_out = None
+    enc_positions = None
+    if cfg.encoder_layers:
+        assert enc_embeds is not None
+        Be, Se, _ = enc_embeds.shape
+        enc_positions = jnp.broadcast_to(
+            jnp.arange(Se, dtype=jnp.int32), (Be, Se)
+        )
+        enc_x = shard(enc_embeds.astype(cfg.compute_dtype), cfg.dp_axes,
+                      None, "model" if cfg.parallelism == "tp" else None)
+        enc_x, _ = _run_stack(
+            params["enc_blocks"],
+            segment_structure(layer_kinds(cfg, "encoder")),
+            cfg, enc_x, enc_positions, causal=False, attn_impl=attn_impl,
+        )
+        enc_out = rmsnorm(enc_x, params["enc_norm"], cfg.norm_eps)
+
+    x, aux = _run_stack(
+        params["blocks"], segment_structure(layer_kinds(cfg)),
+        cfg, x, positions, causal=True,
+        enc_out=enc_out, enc_positions=enc_positions, attn_impl=attn_impl,
+    )
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+# ---------------------------------------------------------------------------
+# Loss: chunked, vocab-sharded cross-entropy (+ router aux + z-loss)
+# ---------------------------------------------------------------------------
+
+def chunked_cross_entropy(h: Array, lm_head: Array, labels: Array,
+                          chunk: int = 512, z_coef: float = 1e-4,
+                          unroll: bool = False, dp_axes=DP,
+                          vocab_axis="model"):
+    """h: (B,S,d) final hiddens; lm_head: (d,V) vocab-sharded; labels (B,S).
+
+    The (chunk, V) logits are formed per chunk in f32 and never stored
+    (jax.checkpoint recomputes them in backward) — peak logits memory is
+    B*chunk*V/shards instead of B*S*V/shards. The gold logit is read via a
+    one-hot contraction, NOT take_along_axis: on a vocab-sharded logits
+    tensor the gather would force GSPMD to all-gather the full vocab dim,
+    while the one-hot product reduces locally and psums a scalar per token.
+    """
+    B, S, d = h.shape
+    V = lm_head.shape[1]
+    nchunks = S // chunk if S % chunk == 0 else 1
+    if S % chunk != 0:
+        chunk = S
+    hs = h.reshape(B, nchunks, chunk, d).swapaxes(0, 1)
+    ls = labels.reshape(B, nchunks, chunk).swapaxes(0, 1)
+
+    @functools.partial(jax.checkpoint, policy=None, prevent_cse=False)
+    def one(carry, hl):
+        hc, lc = hl
+        logits = (hc.astype(jnp.float32) @ lm_head.astype(jnp.float32))
+        logits = shard(logits, dp_axes, None, vocab_axis)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(lc, V, dtype=jnp.float32)
+        onehot = shard(onehot, dp_axes, None, vocab_axis)
+        gold = jnp.sum(logits * onehot, axis=-1)
+        nll = (lse - gold).sum()
+        zl = (lse ** 2).sum()
+        return (carry[0] + nll, carry[1] + zl), None
+
+    if unroll:
+        nll = jnp.zeros(())
+        zl = jnp.zeros(())
+        for c in range(nchunks):
+            (nll, zl), _ = one((nll, zl), (hs[c], ls[c]))
+    else:
+        (nll, zl), _ = jax.lax.scan(
+            one, (jnp.zeros(()), jnp.zeros(())), (hs, ls))
+    ntok = B * S
+    return nll / ntok + z_coef * zl / ntok
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, Array],
+            attn_impl: str = "xla") -> Tuple[Array, Dict[str, Array]]:
+    h, aux = forward(
+        params, cfg,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        positions=batch.get("positions"),
+        enc_embeds=batch.get("enc_embeds"),
+        attn_impl=attn_impl,
+    )
+    lm_head = params["lm_head"] if "lm_head" in params \
+        else params["embed"].T
+    ce = chunked_cross_entropy(
+        h, lm_head, batch["labels"],
+        chunk=2048 if cfg.unroll_inner else 512,
+        unroll=cfg.unroll_inner, dp_axes=cfg.dp_axes,
+        vocab_axis="model" if cfg.parallelism == "tp" else None)
+    total = ce + cfg.router_aux_coef * aux
+    return total, {"ce": ce, "aux": aux}

@@ -1,0 +1,130 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+Dispatch is SORT-BASED (gather/scatter), not one-hot-einsum: tokens are
+ordered by destination expert with a stable argsort, assigned a rank within
+their expert queue, and dropped beyond capacity C = T*k/E * capacity_factor.
+Expert compute is then a dense (E, C, d) batched matmul over gathered rows.
+
+Why not the GShard one-hot einsum: (a) the (T, E, C) dispatch tensor is
+O(T^2)-ish at 4k x 256 shapes, and (b) XLA's cost model counts the one-hot
+contraction as real FLOPs, poisoning the roofline analysis this framework
+reports. Gathers/scatters are data movement; the counted FLOPs are exactly
+the active-expert matmuls (6*N_active*D accounting stays honest).
+
+Sharding: tokens on ('pod','data'), experts on 'model' (EP). The baseline
+path leaves resharding to GSPMD via sharding constraints; the explicit
+all-to-all shard_map EP path is the §Perf hillclimb variant (see
+repro/models/moe_a2a.py).
+
+Covers olmoe-1b-7b (64e top-8) and arctic-480b (128e top-2 + dense residual).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, init_mlp, mlp
+from repro.sharding.util import shard
+
+Array = jax.Array
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, ffm, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    kr, k1, k2, k3, kd = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(kr, (d, E), jnp.float32),  # router kept f32
+        "we1": dense_init(k1, (E, d, ffm), cfg.param_dtype),
+        "we3": dense_init(k2, (E, d, ffm), cfg.param_dtype),
+        "we2": dense_init(k3, (E, ffm, d), cfg.param_dtype),
+    }
+    if cfg.moe_dense_residual:
+        p["dense"] = init_mlp(kd, d, cfg.d_ff, cfg.param_dtype)
+    return p
+
+
+def route_topk(logits: Array, k: int) -> Tuple[Array, Array, Array]:
+    """(T, E) router logits -> (weights (T,k), experts (T,k), aux loss)."""
+    E = logits.shape[-1]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+    # Switch-style load-balance loss: E * <f_e, p_e>.
+    me = jnp.mean(probs, axis=0)
+    fe = jnp.zeros((E,), jnp.float32).at[topi.reshape(-1)].add(1.0)
+    fe = fe / jnp.maximum(jnp.sum(fe), 1.0)
+    aux = E * jnp.sum(me * fe)
+    return topw, topi, aux
+
+
+def moe_ffn(params, cfg: ModelConfig, x: Array, *,
+            capacity_override: Optional[int] = None) -> Tuple[Array, Array]:
+    """x: (B, S, d) -> (out, aux_loss). Sort-based capacity dispatch."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    xt = x.reshape(T, d)
+    cdt = cfg.compute_dtype
+
+    logits = xt.astype(jnp.float32) @ params["router"]          # (T, E)
+    topw, topi, aux = route_topk(logits, k)
+
+    C = capacity_override or int(max(1, round(T * k / E * cfg.capacity_factor)))
+
+    # ---- sort by expert, rank within expert, drop beyond capacity ----
+    e_flat = topi.reshape(-1)                                   # (T*k,)
+    w_flat = topw.reshape(-1)
+    t_flat = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    order = jnp.argsort(e_flat, stable=True)                    # token-priority
+    e_s, w_s, t_s = e_flat[order], w_flat[order], t_flat[order]
+    counts = jnp.bincount(e_s, length=E)
+    starts = jnp.cumsum(counts) - counts                        # exclusive
+    rank = jnp.arange(T * k, dtype=jnp.int32) - starts[e_s]
+    keep = rank < C
+    # Over-capacity entries are routed to the out-of-range slot E*C and
+    # silently dropped by mode="drop" (never clobber a kept slot).
+    slot = jnp.where(keep, e_s * C + rank, E * C)               # (T*k,)
+
+    # (E*C,) gather grid; sentinel row T => zero input, scatter no-op target.
+    grid_tok = jnp.full((E * C,), T, jnp.int32).at[slot].set(t_s, mode="drop")
+    grid_w = jnp.zeros((E * C,), jnp.float32).at[slot].set(w_s, mode="drop")
+
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    expert_in = xt_pad[grid_tok].reshape(E, C, d)               # gather
+    expert_in = shard(expert_in, "model", None, None)
+    h = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", expert_in, params["we1"].astype(cdt))
+    ) * jnp.einsum("ecd,edf->ecf", expert_in, params["we3"].astype(cdt))
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["we2"].astype(cdt))
+    expert_out = expert_out.reshape(E * C, d) * grid_w[:, None].astype(cdt)
+
+    out = jnp.zeros((T + 1, d), cdt).at[grid_tok].add(expert_out)[:T]
+
+    if cfg.moe_dense_residual:
+        out = out + mlp(params["dense"], xt, cdt)
+    return out.reshape(B, S, d), aux.astype(jnp.float32)
+
+
+def moe_ffn_dense_ref(params, cfg: ModelConfig, x: Array) -> Array:
+    """No-capacity dense reference (every token gets its exact top-k mix);
+    used by tests to validate the dispatch path with a large capacity."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    xt = x.reshape(-1, d)
+    cdt = cfg.compute_dtype
+    logits = xt.astype(jnp.float32) @ params["router"]
+    topw, topi, _ = route_topk(logits, k)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xt, params["we1"].astype(cdt))) \
+        * jnp.einsum("td,edf->tef", xt, params["we3"].astype(cdt))
+    every = jnp.einsum("tef,efd->ted", h, params["we2"].astype(cdt))  # (T,E,d)
+    w_full = jnp.zeros((xt.shape[0], E), jnp.float32)
+    w_full = jax.vmap(lambda w, i, row: row.at[i].add(w))(
+        topw, topi, w_full
+    )
+    out = jnp.einsum("te,ted->td", w_full.astype(cdt), every)
+    if cfg.moe_dense_residual:
+        out = out + mlp(params["dense"], xt, cdt)
+    return out.reshape(B, S, d)

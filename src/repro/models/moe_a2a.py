@@ -1,0 +1,165 @@
+"""Explicit all-to-all Expert Parallelism for the MoE FFN (§Perf, MoE cells).
+
+The baseline sort-based dispatch (moe.py) leaves resharding to GSPMD, which
+lowers the cross-shard gather/scatter into huge all-reduces/all-gathers
+(~60 GiB wire per arctic layer — see EXPERIMENTS.md §Perf). This module is
+the production path: a DeepSeek-/GShard-style two-hop dispatch under
+shard_map where tokens travel point-to-point:
+
+  1. tokens are FULLY sharded over ('data','model'): each device routes its
+     own T_dev tokens; experts are sharded over 'model' (E_loc per rank);
+  2. token copies are packed into per-destination-rank capacity buffers
+     (Csend slots each) and exchanged with ONE all_to_all over 'model'
+     (intra-ICI-row; nothing crosses the data/pod axes);
+  3. each rank runs its local experts as dense (E_loc, C_loc, d) GEMMs;
+  4. a reverse all_to_all returns outputs in the SAME buffer layout, so the
+     source rank combines them with its saved slot mapping and top-k weights.
+
+Wire per layer per device ~= 2 x Csend x M x d x dtype  (the two a2a hops)
+ = 2 x (T_dev·k·cf) x d — independent of E, and ~30x less than the GSPMD
+baseline for arctic. Dropping beyond capacity matches the baseline's
+capacity-factor semantics (two-stage: per-destination and per-expert).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import mlp
+from repro.models.moe import route_topk
+
+Array = jax.Array
+
+
+def moe_ffn_a2a_local(params, cfg: ModelConfig, x_loc: Array, *,
+                      axis: str = "model",
+                      send_cf: float = None,
+                      recv_cf: float = None) -> Tuple[Array, Array]:
+    """Local (shard_map) body. x_loc: (T_dev, d). Experts of ``params`` are
+    the LOCAL shard (E_loc, d, ffm). Returns (out (T_dev, d), aux)."""
+    T, d = x_loc.shape
+    if send_cf is None:
+        send_cf = cfg.capacity_factor
+    if recv_cf is None:
+        recv_cf = max(1.25 * cfg.capacity_factor, 1.5)
+    M = jax.lax.axis_size(axis)
+    E = cfg.num_experts
+    k = cfg.experts_per_token
+    E_loc = E // M
+    cdt = cfg.compute_dtype
+
+    logits = x_loc.astype(jnp.float32) @ params["router"]
+    topw, topi, aux = route_topk(logits, k)
+    aux = jax.lax.pmean(aux, axis)
+
+    # ---- stage 1: pack per-destination-rank capacity buffers -------------
+    dest = topi.reshape(-1) // E_loc                     # (T*k,) rank id
+    e_local = (topi.reshape(-1) % E_loc).astype(jnp.int32)
+    w_flat = topw.reshape(-1)
+    t_flat = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    order = jnp.argsort(dest, stable=True)
+    dest_s, e_s, w_s, t_s = dest[order], e_local[order], w_flat[order], \
+        t_flat[order]
+    counts = jnp.bincount(dest_s, length=M)
+    starts = jnp.cumsum(counts) - counts
+    rank_slot = jnp.arange(T * k, dtype=jnp.int32) - starts[dest_s]
+    Csend = int(max(1, round(T * k / M * send_cf)))
+    keep = rank_slot < Csend
+    slot = jnp.where(keep, dest_s * Csend + rank_slot, M * Csend)
+
+    grid_tok = jnp.full((M * Csend,), T, jnp.int32).at[slot].set(
+        t_s, mode="drop")
+    grid_e = jnp.full((M * Csend,), E_loc, jnp.int32).at[slot].set(
+        e_s, mode="drop")
+    grid_w = jnp.zeros((M * Csend,), jnp.float32).at[slot].set(
+        w_s, mode="drop")
+
+    x_pad = jnp.concatenate([x_loc, jnp.zeros((1, d), x_loc.dtype)], 0)
+    buf_x = x_pad[grid_tok].reshape(M, Csend, d)
+    buf_e = grid_e.reshape(M, Csend)
+
+    # ---- hop 1: tokens to the ranks that own their experts ---------------
+    recv_x = jax.lax.all_to_all(buf_x, axis, 0, 0, tiled=False)
+    recv_e = jax.lax.all_to_all(buf_e[..., None], axis, 0, 0,
+                                tiled=False)[..., 0]
+
+    # ---- local second-stage dispatch to E_loc experts --------------------
+    R = M * Csend
+    rx = recv_x.reshape(R, d)
+    re = recv_e.reshape(R)                                # E_loc = invalid
+    order2 = jnp.argsort(re, stable=True)
+    re_s = re[order2]
+    counts2 = jnp.bincount(re_s, length=E_loc + 1)   # last bin: pad slots
+    starts2 = jnp.cumsum(counts2) - counts2          # exclusive
+    rank2 = jnp.arange(R, dtype=jnp.int32) - starts2[re_s]
+    C_loc = int(max(1, round(R / max(E_loc, 1) * recv_cf)))
+    keep2 = (re_s < E_loc) & (rank2 < C_loc)
+    slot2 = jnp.where(keep2, re_s * C_loc + rank2, E_loc * C_loc)
+    src2 = order2  # position in the a2a buffer
+
+    grid2 = jnp.full((E_loc * C_loc,), R, jnp.int32).at[slot2].set(
+        src2, mode="drop")
+    rx_pad = jnp.concatenate([rx, jnp.zeros((1, d), rx.dtype)], 0)
+    expert_in = rx_pad[grid2].reshape(E_loc, C_loc, d)
+
+    h = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", expert_in, params["we1"].astype(cdt))
+    ) * jnp.einsum("ecd,edf->ecf", expert_in, params["we3"].astype(cdt))
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["we2"].astype(cdt))
+
+    # scatter expert outputs back to buffer order, reverse hop
+    out_buf = jnp.zeros((R + 1, d), cdt).at[grid2].add(
+        expert_out.reshape(E_loc * C_loc, d))[:R]
+    back = jax.lax.all_to_all(out_buf.reshape(M, Csend, d), axis, 0, 0,
+                              tiled=False)
+
+    # combine at source with the saved slot mapping + top-k weights
+    contrib = back.reshape(M * Csend, d) * grid_w[:, None].astype(cdt)
+    out = jnp.zeros((T + 1, d), cdt).at[grid_tok].add(contrib)[:T]
+
+    if cfg.moe_dense_residual:
+        out = out + mlp(params["dense"], x_loc, cdt)
+    return out, aux
+
+
+def moe_ffn_a2a(params, cfg: ModelConfig, x: Array) -> Tuple[Array, Array]:
+    """Global wrapper: shard_map the a2a EP body over the active mesh.
+    x: (B, S, d) with batch on the DP axes; tokens get fully sharded by
+    additionally splitting S over 'model'. Falls back to the GSPMD path
+    when no mesh (unit tests) or S does not divide."""
+    from jax.sharding import PartitionSpec as P
+    from repro.models.moe import moe_ffn
+    mesh = jax.sharding.get_abstract_mesh()
+    B, S, d = x.shape
+    if (mesh is None or mesh.empty or "model" not in mesh.axis_names
+            or S % mesh.shape["model"] != 0):
+        return moe_ffn(params, cfg, x)
+    dp = tuple(a for a in cfg.dp_axes if a in mesh.axis_names
+               and a != "model")
+    all_axes = tuple(a for a in mesh.axis_names)
+
+    pspec = {
+        "router": P(),
+        "we1": P("model", None, None),
+        "we3": P("model", None, None),
+        "we2": P("model", None, None),
+    }
+    if cfg.moe_dense_residual:
+        pspec["dense"] = {"w1": P(), "w3": P(), "w2": P()}
+
+    def body(p, xl):
+        Bl, Sl, _ = xl.shape
+        out, aux = moe_ffn_a2a_local(p, cfg, xl.reshape(Bl * Sl, d))
+        aux = jax.lax.pmean(aux, tuple(a for a in all_axes if a != "model"))
+        return out.reshape(Bl, Sl, d), aux
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(pspec, P(dp, "model", None)),
+        out_specs=(P(dp, "model", None), P()),
+        check_vma=False,
+    )
+    return fn(params, x)

@@ -1,0 +1,287 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892) — attention-free, data-dependent decay.
+
+Time-mix: per-head matrix-valued state S in R^{hd x hd} evolving as
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,   y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+with per-channel data-dependent decay w_t in (0,1) produced by a low-rank MLP
+(ddlerp token-shift mixing for r/k/v/g/w as in the paper).
+
+The sequence form is CHUNKED (GLA-style): within a chunk of length Lc the
+intra-chunk part is a masked score contraction with exact per-channel decay
+factors exp(cum_{t-1} - cum_s) (exponent always <= 0 — numerically safe; the
+naive k/P_s form overflows), and the inter-chunk part flows through the
+carried state. lax.scan over chunks => O(S/Lc) sequential steps on TPU with
+dense MXU work inside, O(1) state for 500k-token decode (the long_500k cell).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+Array = jax.Array
+
+# Per-step log-decay floor. exp factors inside a chunk are bounded by
+# exp(chunk * |log w|); with chunk=16 and floor -5 the worst factor is e^80
+# < f32 max. Semantically free: w < e^-5 retains 0.7% per step — state is
+# gone either way (the fla/GLA kernels apply the same style of clamp).
+WKV_LOG_CLAMP = -5.0
+
+
+def init_time_mix(key, cfg: ModelConfig):
+    d = cfg.d_model
+    r = cfg.rwkv_lora_rank
+    H = d // cfg.rwkv_head_dim
+    ks = jax.random.split(key, 10)
+    dt = cfg.param_dtype
+    return {
+        "maa_base": jnp.zeros((5, d), dt),              # w,k,v,r,g mix biases
+        "maa_w1": dense_init(ks[0], (d, 5 * r), dt),
+        "maa_w2": dense_init(ks[1], (5, r, d), dt, scale=1.0 / r ** 0.5),
+        "decay_base": jnp.full((d,), -2.0, dt),
+        "decay_w1": dense_init(ks[2], (d, 2 * r), dt),
+        "decay_w2": dense_init(ks[3], (2 * r, d), dt, scale=1.0 / r ** 0.5),
+        "bonus": jnp.zeros((H, cfg.rwkv_head_dim), dt),  # u
+        "wr": dense_init(ks[4], (d, d), dt),
+        "wk": dense_init(ks[5], (d, d), dt),
+        "wv": dense_init(ks[6], (d, d), dt),
+        "wg": dense_init(ks[7], (d, d), dt),
+        "wo": dense_init(ks[8], (d, d), dt),
+        "gn_scale": jnp.ones((d,), dt),
+        "gn_bias": jnp.zeros((d,), dt),
+    }
+
+
+def init_channel_mix(key, cfg: ModelConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+    return {
+        "mu_k": jnp.zeros((d,), dt),
+        "mu_r": jnp.zeros((d,), dt),
+        "wk": dense_init(k1, (d, ff), dt),
+        "wv": dense_init(k2, (ff, d), dt),
+        "wr": dense_init(k3, (d, d), dt),
+    }
+
+
+def _wkv_chunked(r, k, v, w_log, u, chunk: int, unroll: bool = False):
+    """Per-head chunked WKV. r/k/v: (T, hd); w_log: (T, hd) (= log w < 0);
+    u: (hd,). Returns (y: (T, hd), S_final). f32 math. ``unroll`` replaces
+    the chunk scan with a python loop (dry-run cost extraction)."""
+    T, hd = r.shape
+    assert T % chunk == 0
+    nc = T // chunk
+    rs = r.reshape(nc, chunk, hd)
+    ks = k.reshape(nc, chunk, hd)
+    vs = v.reshape(nc, chunk, hd)
+    ws = w_log.reshape(nc, chunk, hd)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)   # strictly lower
+
+    def body(S, inp):
+        rc, kc, vc, wc = inp                                # (Lc, hd)
+        cum = jnp.cumsum(wc, axis=0)                        # inclusive
+        cum_prev = cum - wc                                 # cum_{t-1}
+        # intra: A[t,s] = sum_d r[t]k[s] exp(cum_prev[t]-cum[s]), s<t
+        expo = cum_prev[:, None, :] - cum[None, :, :]       # (t,s,hd) <= 0
+        expo = jnp.where(mask[:, :, None], expo, -jnp.inf)
+        A = jnp.sum(rc[:, None, :] * kc[None, :, :] * jnp.exp(expo), axis=-1)
+        diag = jnp.sum(rc * u[None, :] * kc, axis=-1)       # (Lc,)
+        y = A @ vc + diag[:, None] * vc
+        # inter: y += (r ⊙ exp(cum_prev)) @ S
+        y = y + (rc * jnp.exp(cum_prev)) @ S
+        # carry: S' = diag(exp(cum_T)) S + sum_s (k_s ⊙ exp(cum_T - cum_s)) v_s^T
+        decay_T = jnp.exp(cum[-1])[:, None]                 # (hd,1)
+        kk = kc * jnp.exp(cum[-1][None, :] - cum)           # (Lc, hd)
+        S_new = decay_T * S + kk.T @ vc
+        return S_new, y
+
+    S0 = jnp.zeros((hd, hd), jnp.float32)
+    if unroll:
+        S, ys_list = S0, []
+        for c in range(nc):
+            S, yc = body(S, (rs[c], ks[c], vs[c], ws[c]))
+            ys_list.append(yc)
+        return jnp.stack(ys_list).reshape(T, hd), S
+    S_final, ys = jax.lax.scan(body, S0, (rs, ks, vs, ws))
+    return ys.reshape(T, hd), S_final
+
+
+def _wkv_chunked_matmul(r, k, v, w_log, u, chunk: int, unroll: bool = False):
+    """§Perf H2 — separable-decay MXU form of the chunked WKV.
+
+    The exact form resolves exp(cum_{t-1} - cum_s) per channel inside the
+    score sum, materializing a (Lc, Lc, hd) tensor per chunk — ~Lc x more
+    HBM traffic than the matmuls need. Because the decay factor separates,
+        A[t,s] = sum_d (r[t,d] e^{cum[t-1,d]}) (k[s,d] e^{-cum[s,d]}),
+    the intra-chunk part is a single (Lc,hd)x(hd,Lc) GEMM after scaling
+    r and k by per-chunk decay factors. e^{-cum} grows with chunk depth, so
+    the chunk is short (16) and the per-step log-decay is floored at
+    WKV_LOG_CLAMP (see above) — exponents stay within f32 range.
+    """
+    T, hd = r.shape
+    assert T % chunk == 0
+    nc = T // chunk
+    rs = r.reshape(nc, chunk, hd)
+    ks = k.reshape(nc, chunk, hd)
+    vs = v.reshape(nc, chunk, hd)
+    ws = w_log.reshape(nc, chunk, hd)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)   # strictly lower
+
+    def body(S, inp):
+        rc, kc, vc, wc = inp                                # (Lc, hd)
+        cum = jnp.cumsum(wc, axis=0)                        # inclusive, <= 0
+        cum_prev = cum - wc
+        r_t = rc * jnp.exp(cum_prev)                        # <= |r|
+        k_t = kc * jnp.exp(-cum)                            # bounded e^{5Lc}
+        A = jnp.where(mask, r_t @ k_t.T, 0.0)               # (Lc, Lc)
+        diag = jnp.sum(rc * u[None, :] * kc, axis=-1)
+        y = A @ vc + diag[:, None] * vc + r_t @ S
+        decay_T = jnp.exp(cum[-1])[:, None]
+        kk = kc * jnp.exp(cum[-1][None, :] - cum)
+        S_new = decay_T * S + kk.T @ vc
+        return S_new, y
+
+    S0 = jnp.zeros((hd, hd), jnp.float32)
+    if unroll:
+        S, ys_list = S0, []
+        for c in range(nc):
+            S, yc = body(S, (rs[c], ks[c], vs[c], ws[c]))
+            ys_list.append(yc)
+        return jnp.stack(ys_list).reshape(T, hd), S
+    S_final, ys = jax.lax.scan(body, S0, (rs, ks, vs, ws))
+    return ys.reshape(T, hd), S_final
+
+
+def time_mix(p, cfg: ModelConfig, x: Array, x_prev_last: Array | None = None):
+    """x: (B, S, d). Token shift uses the previous position (zero/state at 0).
+    Returns (out, (last_x, S_final)) — the carries used by decode."""
+    B, S, d = x.shape
+    H = d // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    cdt = cfg.compute_dtype
+    xf = x.astype(jnp.float32)
+    prev0 = jnp.zeros((B, 1, d), jnp.float32) if x_prev_last is None \
+        else x_prev_last[:, None, :].astype(jnp.float32)
+    x_prev = jnp.concatenate([prev0, xf[:, :-1]], axis=1)
+    xw, xk, xv, xr, xg = _ddlerp_simple(p, xf, x_prev)
+
+    r = (xr.astype(cdt) @ p["wr"].astype(cdt)).reshape(B, S, H, hd)
+    k = (xk.astype(cdt) @ p["wk"].astype(cdt)).reshape(B, S, H, hd)
+    v = (xv.astype(cdt) @ p["wv"].astype(cdt)).reshape(B, S, H, hd)
+    g = xg.astype(cdt) @ p["wg"].astype(cdt)
+    w_log = -jnp.exp(
+        p["decay_base"].astype(jnp.float32)
+        + jnp.tanh(xw @ p["decay_w1"].astype(jnp.float32))
+        @ p["decay_w2"].astype(jnp.float32)
+    ).reshape(B, S, H, hd)                                   # log w < 0
+    w_log = jnp.maximum(w_log, WKV_LOG_CLAMP)
+    u = p["bonus"].astype(jnp.float32)
+    wkv_fn = _wkv_chunked_matmul if cfg.wkv_impl == "matmul" \
+        else _wkv_chunked
+
+    def per_bh(rb, kb, vb, wb, ub):
+        return wkv_fn(
+            rb.astype(jnp.float32), kb.astype(jnp.float32),
+            vb.astype(jnp.float32), wb, ub, cfg.wkv_chunk,
+            unroll=cfg.unroll_inner,
+        )
+
+    # vmap over batch (broadcast u) and heads
+    y, S_final = jax.vmap(
+        jax.vmap(per_bh, in_axes=(1, 1, 1, 1, 0), out_axes=(1, 0)),  # heads
+        in_axes=(0, 0, 0, 0, None),
+    )(r, k, v, w_log, u)                  # y: (B, S, H, hd); S: (B, H, hd, hd)
+    y = y.reshape(B, S, d)
+    # per-head GroupNorm then gate
+    yh = y.reshape(B, S, H, hd)
+    mean = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(B, S, d) * p["gn_scale"] + p["gn_bias"]
+    out = (y.astype(cdt) * jax.nn.silu(g)) @ p["wo"].astype(cdt)
+    return out, (xf[:, -1, :], S_final)
+
+
+def _ddlerp_simple(p, x, x_prev):
+    """ddlerp as in RWKV6: shared tanh bottleneck, per-stream low-rank out."""
+    dx = x_prev - x
+    base = p["maa_base"].astype(jnp.float32)                 # (5, d)
+    w1 = p["maa_w1"].astype(jnp.float32)                     # (d, 5r)
+    w2 = p["maa_w2"].astype(jnp.float32)                     # (5, r, d)
+    r5 = w1.shape[1] // 5
+    xx = x + dx * base[0][None, None]                        # shift seed
+    z = jnp.tanh(xx @ w1).reshape(*x.shape[:-1], 5, r5)      # (B,S,5,r)
+    mod = jnp.einsum("bsir,ird->bsid", z, w2)                # (B,S,5,d)
+    mix = base[None, None] + mod
+    return tuple(x + dx * mix[:, :, i] for i in range(5))
+
+
+def channel_mix(p, cfg: ModelConfig, x: Array,
+                x_prev_last: Array | None = None):
+    B, S, d = x.shape
+    cdt = cfg.compute_dtype
+    xf = x.astype(jnp.float32)
+    prev0 = jnp.zeros((B, 1, d), jnp.float32) if x_prev_last is None \
+        else x_prev_last[:, None, :].astype(jnp.float32)
+    x_prev = jnp.concatenate([prev0, xf[:, :-1]], axis=1)
+    dx = x_prev - xf
+    xk = (xf + dx * p["mu_k"]).astype(cdt)
+    xr = (xf + dx * p["mu_r"]).astype(cdt)
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"].astype(cdt)))
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(cdt)) * (kk @ p["wv"].astype(cdt))
+    return out, xf[:, -1, :]
+
+
+# ---------------------------------------------------------------------------
+# Decode (single step) — O(1) state: (last_x_tmix, last_x_cmix, S (H,hd,hd))
+# ---------------------------------------------------------------------------
+
+def time_mix_step(p, cfg: ModelConfig, x: Array, last_x: Array, S: Array):
+    """x: (B, d); last_x: (B, d); S: (B, H, hd, hd). Returns (out, last, S')."""
+    B, d = x.shape
+    H = d // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    cdt = cfg.compute_dtype
+    xf = x.astype(jnp.float32)
+    xw, xk, xv, xr, xg = (
+        t[:, 0] for t in _ddlerp_simple(
+            p, xf[:, None, :], last_x.astype(jnp.float32)[:, None, :]
+        )
+    )
+    r = (xr.astype(cdt) @ p["wr"].astype(cdt)).reshape(B, H, hd)
+    k = (xk.astype(cdt) @ p["wk"].astype(cdt)).reshape(B, H, hd)
+    v = (xv.astype(cdt) @ p["wv"].astype(cdt)).reshape(B, H, hd)
+    g = xg.astype(cdt) @ p["wg"].astype(cdt)
+    w = jnp.exp(jnp.maximum(-jnp.exp(
+        p["decay_base"].astype(jnp.float32)
+        + jnp.tanh(xw @ p["decay_w1"].astype(jnp.float32))
+        @ p["decay_w2"].astype(jnp.float32)
+    ), WKV_LOG_CLAMP)).reshape(B, H, hd)
+    u = p["bonus"].astype(jnp.float32)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    kv = kf[..., :, None] * vf[..., None, :]                 # (B,H,hd,hd)
+    y = jnp.einsum("bhk,bhkv->bhv", rf, S + u[None, :, :, None] * kv)
+    S_new = w[..., None] * S + kv
+    yh = y.reshape(B, H, hd)
+    mean = jnp.mean(yh, -1, keepdims=True)
+    var = jnp.var(yh, -1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + 64e-5)
+    yd = yh.reshape(B, d) * p["gn_scale"] + p["gn_bias"]
+    out = (yd.astype(cdt) * jax.nn.silu(g)) @ p["wo"].astype(cdt)
+    return out, xf, S_new
+
+
+def channel_mix_step(p, cfg: ModelConfig, x: Array, last_x: Array):
+    cdt = cfg.compute_dtype
+    xf = x.astype(jnp.float32)
+    dx = last_x.astype(jnp.float32) - xf
+    xk = (xf + dx * p["mu_k"]).astype(cdt)
+    xr = (xf + dx * p["mu_r"]).astype(cdt)
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"].astype(cdt)))
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(cdt)) * (kk @ p["wv"].astype(cdt))
+    return out, xf

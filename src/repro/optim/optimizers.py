@@ -1,0 +1,132 @@
+"""Optimizers: AdamW and Adafactor, as pure pytree transforms.
+
+No optax dependency — state pytrees are plain dicts so checkpointing and
+ZeRO-1 sharding (repro.sharding.specs.zero1_spec) stay trivial. Params are
+f32 (compute casts to bf16 at use); grads arrive f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _cosine_lr(lr, step, warmup, total):
+    # (step+1)/warmup: never a dead zero-lr first step
+    warm = jnp.minimum((step + 1.0) / max(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    return lr * warm * (0.1 + 0.9 * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def schedule(self, step):
+        return _cosine_lr(self.lr, step, self.warmup_steps, self.total_steps)
+
+    def update(self, grads, state, params, step):
+        lr = self.schedule(step)
+        t = (step + 1).astype(jnp.float32) if hasattr(step, "astype") \
+            else float(step + 1)
+        gs, treedef = jax.tree.flatten(grads)
+        ms = treedef.flatten_up_to(state["m"])
+        vs = treedef.flatten_up_to(state["v"])
+        ps = treedef.flatten_up_to(params)
+        new_p, new_m, new_v = [], [], []
+        for g, m, v, p in zip(gs, ms, vs, ps):
+            gf = g.astype(jnp.float32)
+            m1 = self.b1 * m + (1 - self.b1) * gf
+            v1 = self.b2 * v + (1 - self.b2) * gf * gf
+            mh = m1 / (1 - self.b1 ** t)
+            vh = v1 / (1 - self.b2 ** t)
+            upd = mh / (jnp.sqrt(vh) + self.eps)
+            p1 = p.astype(jnp.float32) * (1 - lr * self.weight_decay) - lr * upd
+            new_p.append(p1.astype(p.dtype))
+            new_m.append(m1)
+            new_v.append(v1)
+        return (jax.tree.unflatten(treedef, new_p),
+                {"m": jax.tree.unflatten(treedef, new_m),
+                 "v": jax.tree.unflatten(treedef, new_v)})
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    """Factored second moment (Shazeer & Stern 2018), no first moment —
+    the memory plan for arctic-480b (DESIGN.md §6): O(rows+cols) state per
+    matrix instead of O(rows*cols)."""
+
+    lr: float = 1e-3
+    decay: float = 0.8          # beta2_t = 1 - t^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+    def init(self, params):
+        def per_leaf(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        return {"f": jax.tree.map(per_leaf, params)}
+
+    def schedule(self, step):
+        return self.lr * jnp.minimum(
+            (step + 1.0) / max(self.warmup_steps, 1), 1.0)
+
+    def update(self, grads, state, params, step):
+        lr = self.schedule(step)
+        t = (step + 1).astype(jnp.float32) if hasattr(step, "astype") \
+            else float(step + 1)
+        beta2 = 1.0 - t ** (-self.decay)
+        gs, treedef = jax.tree.flatten(grads)
+        fs = treedef.flatten_up_to(state["f"])
+        ps = treedef.flatten_up_to(params)
+        new_p, new_f = [], []
+        for g, f, p in zip(gs, fs, ps):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + self.eps
+            if p.ndim >= 2:
+                vr = beta2 * f["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * f["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(
+                    jnp.mean(vr, axis=-1, keepdims=True), self.eps)
+                v_est = (vr[..., :, None] * vc[..., None, :]) \
+                    / denom[..., None]
+                u = gf / jnp.sqrt(v_est + self.eps)
+                f1 = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * f["v"] + (1 - beta2) * g2
+                u = gf / jnp.sqrt(v + self.eps)
+                f1 = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + self.eps)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            new_p.append((p.astype(jnp.float32) - lr * u).astype(p.dtype))
+            new_f.append(f1)
+        return (jax.tree.unflatten(treedef, new_p),
+                {"f": jax.tree.unflatten(treedef, new_f)})
+
+
+def make_optimizer(name: str, **kw):
+    if name == "adamw":
+        return AdamW(**kw)
+    if name == "adafactor":
+        return Adafactor(**kw)
+    raise ValueError(name)

@@ -1,0 +1,86 @@
+"""Train / serve step builders (the functions the dry-run lowers).
+
+train_step: loss -> grads -> optimizer update, with optional gradient
+accumulation over microbatches (lax.scan; peak activation memory is one
+microbatch). serve_step: one decode token against the KV/state caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.decode import decode_step
+from repro.models.model import loss_fn
+from repro.optim.optimizers import make_optimizer
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)
+    ))
+
+
+def make_train_step(cfg: ModelConfig, optimizer=None, *, microbatches: int = 1,
+                    attn_impl: str = "xla", clip_norm: float = 1.0):
+    if optimizer is None:
+        optimizer = make_optimizer(cfg.optimizer)
+
+    def train_step(params, opt_state, batch, step):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, batch, attn_impl=attn_impl),
+                has_aux=True,
+            )(params)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+
+            # mrope positions are (3, B, S): microbatch along axis 1.
+            mb = {}
+            for k, v in batch.items():
+                if k == "positions" and v.ndim == 3:
+                    # (3,B,S) -> (mb, 3, B/mb, S)
+                    mb[k] = v.reshape(
+                        v.shape[0], microbatches, -1, v.shape[-1]
+                    ).swapaxes(0, 1)
+                else:
+                    mb[k] = split(v)
+
+            def one(carry, microbatch):
+                g_acc, l_acc, a_acc = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    lambda p: loss_fn(p, cfg, microbatch,
+                                      attn_impl=attn_impl),
+                    has_aux=True,
+                )(params)
+                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                return (g_acc, l_acc + loss, a_acc + metrics["aux"]), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                one, (g0, jnp.zeros(()), jnp.zeros(())), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = {"ce": loss, "aux": aux / microbatches}
+
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        params, opt_state = optimizer.update(grads, opt_state, params, step)
+        out_metrics = {"loss": loss, "grad_norm": gnorm, **metrics}
+        return params, opt_state, out_metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, caches, tokens, pos):
+        return decode_step(params, cfg, caches, tokens=tokens, pos=pos)
+    return serve_step

@@ -1,0 +1,193 @@
+"""Parameter / optimizer-state / batch PartitionSpec rules.
+
+Megatron-style TP on 'model' (attention heads, FFN hidden, experts, vocab),
+DP on ('pod','data'), and ZeRO-1: optimizer state additionally sharded over
+the DP axes along the first divisible unsharded dim.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from repro.sharding.util import DP, filter_spec
+
+# Base (unstacked) spec per leaf name; leading dims (scan L, expert E pre-
+# existing in shapes below) are part of the listed spec where relevant.
+_BASE = {
+    # embeddings / head: shard vocab-or-feature on 'model'
+    "embed": P(None, "model"),
+    "lm_head": P(None, "model"),
+    "final_norm": P(),
+    "enc_norm": P(),
+    # attention
+    "wq": P(None, "model"),
+    "wk": P(None, "model"),
+    "wv": P(None, "model"),
+    "wo": P("model", None),
+    "q_norm": P(),
+    "k_norm": P(),
+    # mlp
+    "w1": P(None, "model"),
+    "w3": P(None, "model"),
+    "w2": P("model", None),
+    # moe (E, d, ff) — experts on 'model' (EP)
+    "router": P(),
+    "we1": P("model", None, None),
+    "we3": P("model", None, None),
+    "we2": P("model", None, None),
+    # rwkv time-mix / channel-mix
+    "wr": P(None, "model"),
+    "wg": P(None, "model"),
+    "maa_base": P(),
+    "maa_w1": P(),
+    "maa_w2": P(),
+    "decay_base": P(),
+    "decay_w1": P(),
+    "decay_w2": P(),
+    "bonus": P(),
+    "gn_scale": P(),
+    "gn_bias": P(),
+    "mu_k": P(),
+    "mu_r": P(),
+    # griffin
+    "w_gate": P(None, "model"),
+    "w_x": P(None, "model"),
+    "conv_w": P(None, "model"),
+    "conv_b": P("model"),
+    "lru_lambda": P("model"),
+    "w_a": P(None, "model"),
+    "w_i": P(None, "model"),
+    "w_out": P("model", None),
+    # norms
+    "ln1": P(),
+    "ln2": P(),
+    "ln_x": P(),
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, DictKey):
+            return str(entry.key)
+    return ""
+
+
+def param_spec(params, parallelism: str = "tp") -> Any:
+    """PartitionSpec pytree matching ``params`` (handles stacked L dims by
+    left-padding the base spec with None). parallelism="fsdp" strips the
+    'model' (TP) entries — params are then sharded over the DP axes by
+    zero1_spec instead (§Perf H3)."""
+
+    def per_leaf(path, leaf):
+        name = _leaf_name(path)
+        base = _BASE.get(name, P())
+        if parallelism == "fsdp":
+            base = P(*(None if e == "model" else e for e in base))
+        pad = leaf.ndim - len(base)
+        assert pad >= 0, (name, leaf.shape, base)
+        return P(*([None] * pad), *base)
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params)
+
+
+def zero1_spec(pspec_tree, params, mesh: Mesh, axes=DP) -> Any:
+    """Optimizer-state spec: param spec + DP sharding on the first unsharded
+    dim whose size divides the DP axis product (ZeRO-1)."""
+    dp_axes = tuple(a for a in axes if a in mesh.axis_names)
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+
+    def per_leaf(spec, leaf):
+        if dp_size <= 1:
+            return spec
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        for i, (e, dim) in enumerate(zip(entries, leaf.shape)):
+            if e is None and dim % dp_size == 0:
+                entries[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+                return P(*entries)
+        return P(*entries)
+
+    return jax.tree.map(per_leaf, pspec_tree, params)
+
+
+def axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    size = 1
+    for n in names:
+        if n in mesh.axis_names:
+            size *= mesh.shape[n]
+    return size
+
+
+def divisible_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop axis names whose mesh size does not divide the dim (explicit
+    input shardings must tile evenly; e.g. batch=1 long-context decode, or
+    8 kv heads on 16-way TP)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for e, dim in zip(entries, shape):
+        out.append(e if dim % axis_size(mesh, e) == 0 else None)
+    return P(*out)
+
+
+def batch_spec(batch_shapes: Dict[str, Any], mesh: Optional[Mesh] = None,
+               axes=DP) -> Dict[str, P]:
+    """Inputs: batch dim on the DP axes (all mesh axes under fsdp
+    parallelism). mrope positions (3,B,S) shard dim 1."""
+    out = {}
+    for k, v in batch_shapes.items():
+        nd = v.ndim if hasattr(v, "ndim") else len(v.shape)
+        if k == "positions" and nd == 3:
+            spec = P(None, axes, None)
+        else:
+            spec = P(axes, *([None] * (nd - 1)))
+        if mesh is not None:
+            spec = divisible_spec(spec, v.shape, mesh)
+        out[k] = spec
+    return out
+
+
+def to_named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, filter_spec(s, mesh.axis_names)),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def cache_spec(caches, mesh: Optional[Mesh] = None) -> Any:
+    """KV/state caches: dim0 is L (replicated), batch on DP, heads/channels
+    on 'model'. When the kv-head count does not divide the TP size (GQA-8 on
+    TP16 without kv_repeat), the sharding falls back to the head_dim axis;
+    non-divisible batch (long-context batch=1) falls back to replication.
+    """
+
+    def per_leaf(path, leaf):
+        name = _leaf_name(path)
+        if name in ("k", "v", "xk", "xv"):       # (L,B,S,Hkv,hd)
+            spec = P(None, DP, None, "model", None)
+            if mesh is not None and leaf.shape[3] % axis_size(
+                    mesh, "model") != 0:
+                spec = P(None, DP, None, None, "model")  # shard head_dim
+        elif name == "S":                         # (L,B,H,hd,hd)
+            spec = P(None, DP, "model", None, None)
+        elif name in ("tmix_x", "cmix_x"):        # (L,B,d)
+            spec = P(None, DP, None)
+        elif name == "h":                         # (L,B,lw)
+            spec = P(None, DP, "model")
+        elif name == "conv":                      # (L,B,W-1,lw)
+            spec = P(None, DP, None, "model")
+        else:
+            spec = P(*([None] * leaf.ndim))
+        if mesh is not None:
+            spec = divisible_spec(spec, leaf.shape, mesh)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(per_leaf, caches)

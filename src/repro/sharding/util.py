@@ -1,0 +1,47 @@
+"""Mesh-aware sharding helpers.
+
+Model code annotates activations with *logical* PartitionSpecs; ``shard()``
+applies them only when a mesh is in context and silently drops axis names the
+current mesh does not have — so the same model code runs unsharded in unit
+tests, 2-D sharded on one pod, and 3-D sharded multi-pod.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical data-parallel axes in priority order; ('pod','data') on the
+# multi-pod mesh collapses to ('data',) on a single pod.
+DP = ("pod", "data")
+MODEL = "model"
+
+
+def _filter_entry(entry, axis_names):
+    if entry is None:
+        return None
+    if isinstance(entry, str):
+        return entry if entry in axis_names else None
+    # tuple of axes
+    kept = tuple(a for a in entry if a in axis_names)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def filter_spec(spec: P, axis_names) -> P:
+    return P(*(_filter_entry(e, axis_names) for e in spec))
+
+
+def shard(x: jax.Array, *entries) -> jax.Array:
+    """with_sharding_constraint(x, P(*entries)) if a mesh is active."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or not mesh.axis_names:
+        return x
+    spec = filter_spec(P(*entries), mesh.axis_names)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def named_sharding(mesh: Mesh, *entries) -> NamedSharding:
+    return NamedSharding(mesh, filter_spec(P(*entries), mesh.axis_names))

@@ -1,0 +1,98 @@
+"""Serving correctness: prefill + decode must continue exactly where the
+full forward pass would, for every family (f32 caches for exactness; bf16
+caches bounded drift)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.config import ModelConfig
+from repro.models.decode import decode_step, init_caches, prefill
+from repro.models.model import forward, init_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+COMMON = dict(num_layers=4, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+              vocab_size=128, compute_dtype=jnp.float32, rwkv_head_dim=16,
+              rwkv_lora_rank=4, wkv_chunk=4, lru_width=64, window_size=8)
+
+CFGS = [
+    ModelConfig(name="dense", family="dense", qk_norm=True, **COMMON),
+    ModelConfig(name="moe", family="moe", num_experts=4, experts_per_token=2,
+                capacity_factor=8.0, **COMMON),
+    ModelConfig(name="rwkv", family="rwkv6", **COMMON),
+    ModelConfig(name="grif", family="griffin",
+                pattern=("rec", "rec", "attn_local"), **COMMON),
+    ModelConfig(name="encdec", family="encdec", encoder_layers=2, **COMMON),
+    ModelConfig(name="vlm", family="dense", mrope=True,
+                mrope_sections=(2, 3, 3), **COMMON),
+]
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: c.name)
+def test_prefill_decode_matches_forward(cfg):
+    key = jax.random.PRNGKey(0)
+    B, S, SMAX = 2, 12, 20
+    params = init_params(cfg, key)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S + 4), 0, 128)
+    kw = {}
+    if cfg.family == "encdec":
+        kw["enc_embeds"] = jax.random.normal(jax.random.PRNGKey(2),
+                                             (B, 8, 64))
+    fw_kw = dict(kw)
+    if cfg.mrope:
+        fw_kw["positions"] = jnp.broadcast_to(
+            jnp.arange(S + 4, dtype=jnp.int32), (3, B, S + 4))
+    h, _ = forward(params, cfg, tokens=tokens, **fw_kw)
+    head = params["lm_head"] if "lm_head" in params else params["embed"].T
+    full_logits = h.astype(jnp.float32) @ head.astype(jnp.float32)
+
+    pf_kw = dict(kw)
+    if cfg.mrope:
+        pf_kw["positions"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32), (3, B, S))
+    lg, caches = prefill(params, cfg, tokens=tokens[:, :S], s_max=SMAX,
+                         cache_dtype=jnp.float32, **pf_kw)
+    errs = [float(jnp.max(jnp.abs(lg - full_logits[:, S - 1])))]
+    for t in range(S, S + 4):
+        lg, caches = decode_step(params, cfg, caches, tokens=tokens[:, t],
+                                 pos=jnp.asarray(t))
+        errs.append(float(jnp.max(jnp.abs(lg - full_logits[:, t]))))
+    assert max(errs) < 2e-4, (cfg.name, errs)
+
+
+def test_bf16_cache_drift_bounded():
+    cfg = CFGS[0]
+    key = jax.random.PRNGKey(0)
+    B, S = 2, 12
+    params = init_params(cfg, key)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S + 2), 0, 128)
+    h, _ = forward(params, cfg, tokens=tokens)
+    head = params["lm_head"]
+    full_logits = h.astype(jnp.float32) @ head.astype(jnp.float32)
+    lg, caches = prefill(params, cfg, tokens=tokens[:, :S], s_max=S + 2)
+    lg, caches = decode_step(params, cfg, caches, tokens=tokens[:, S],
+                             pos=jnp.asarray(S))
+    err = float(jnp.max(jnp.abs(lg - full_logits[:, S])))
+    assert err < 5e-2  # bf16 kv quantization, bounded
+
+
+def test_local_attn_ring_buffer_wraps():
+    """Decode past the window must equal a fresh forward (ring reuse)."""
+    cfg = ModelConfig(name="g", family="griffin",
+                      pattern=("attn_local",), **{
+                          **{k: v for k, v in COMMON.items()
+                             if k != "window_size"}, "window_size": 6})
+    key = jax.random.PRNGKey(3)
+    params = init_params(cfg, key)
+    B, S = 1, 16  # > 2x window
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (B, S), 0, 128)
+    h, _ = forward(params, cfg, tokens=tokens)
+    head = params["lm_head"]
+    full_logits = h.astype(jnp.float32) @ head.astype(jnp.float32)
+    caches = init_caches(cfg, B, s_max=S, dtype=jnp.float32)
+    errs = []
+    for t in range(S):
+        lg, caches = decode_step(params, cfg, caches, tokens=tokens[:, t],
+                                 pos=jnp.asarray(t))
+        errs.append(float(jnp.max(jnp.abs(lg - full_logits[:, t]))))
+    assert max(errs) < 2e-4, errs

@@ -1,0 +1,64 @@
+"""WKV Pallas kernel (VMEM-resident state) vs the exact per-step oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.wkv.ops import wkv
+from repro.kernels.wkv.ref import wkv_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("B,H,T,hd,chunk", [
+    (1, 2, 32, 16, 8),
+    (2, 4, 64, 32, 16),
+    (1, 1, 48, 64, 16),
+])
+def test_wkv_kernel_matches_step_oracle(B, H, T, hd, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    r = jax.random.normal(ks[0], (B, H, T, hd)) * 0.5
+    k = jax.random.normal(ks[1], (B, H, T, hd)) * 0.5
+    v = jax.random.normal(ks[2], (B, H, T, hd)) * 0.5
+    # realistic data-dependent decay: log w = -exp(N(-2,1)), clamped in ops
+    w_log = -jnp.exp(jax.random.normal(ks[3], (B, H, T, hd)) - 2.0)
+    u = jax.random.normal(ks[4], (H, hd)) * 0.3
+    y = wkv(r, k, v, w_log, u, chunk=chunk, interpret=True)
+    w_clamped = jnp.maximum(w_log, -5.0)
+    for b in range(B):
+        for h in range(H):
+            y_ref, _ = wkv_ref(r[b, h], k[b, h], v[b, h],
+                               w_clamped[b, h], u[h])
+            np.testing.assert_allclose(np.asarray(y[b, h]),
+                                       np.asarray(y_ref),
+                                       atol=2e-4, rtol=1e-3)
+
+
+def test_wkv_kernel_matches_model_chunked_form():
+    """The kernel and the model's XLA matmul form are the same math."""
+    from repro.models.rwkv6 import _wkv_chunked_matmul
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    T, hd = 64, 32
+    r = jax.random.normal(ks[0], (T, hd)) * 0.5
+    k = jax.random.normal(ks[1], (T, hd)) * 0.5
+    v = jax.random.normal(ks[2], (T, hd)) * 0.5
+    w_log = jnp.maximum(-jnp.exp(jax.random.normal(ks[3], (T, hd)) - 2.0),
+                        -5.0)
+    u = jax.random.normal(ks[4], (hd,)) * 0.3
+    y_xla, _ = _wkv_chunked_matmul(r, k, v, w_log, u, chunk=16)
+    y_krn = wkv(r[None, None], k[None, None], v[None, None],
+                w_log[None, None], u[None], chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_krn[0, 0]), np.asarray(y_xla),
+                               atol=2e-5)
+
+
+def test_wkv_kernel_hard_decay_stable():
+    B, H, T, hd = 1, 1, 32, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    r = jax.random.normal(ks[0], (B, H, T, hd))
+    k = jax.random.normal(ks[1], (B, H, T, hd))
+    v = jax.random.normal(ks[2], (B, H, T, hd))
+    w_log = jnp.full((B, H, T, hd), -50.0)   # instant forgetting (clamped)
+    u = jnp.ones((H, hd))
+    y = wkv(r, k, v, w_log, u, chunk=8, interpret=True)
+    assert bool(jnp.isfinite(y).all())

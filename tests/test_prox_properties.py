@@ -1,0 +1,120 @@
+"""Property-based tests (hypothesis) for the prox-operator library —
+the mathematical invariants every proximal map must satisfy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.prox import (
+    hinge_prox,
+    logistic_prox_newton,
+    make_hinge,
+    make_l1,
+    make_least_squares,
+    make_logistic,
+    project_linf,
+    soft_threshold,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+floats = st.floats(-30.0, 30.0, allow_nan=False, allow_infinity=False)
+pos = st.floats(0.05, 20.0, allow_nan=False, allow_infinity=False)
+labels_st = st.sampled_from([-1.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# prox definition: y* = argmin f(y) + (y-z)^2/(2 delta)
+# ---------------------------------------------------------------------------
+
+def _check_prox_optimality(fname, z, delta, label):
+    """y* must beat every nearby candidate on the prox objective."""
+    z = jnp.asarray(z)
+    aux = jnp.asarray(label)
+    if fname == "logistic":
+        f = lambda y: jnp.log1p(jnp.exp(-aux * y))
+        y = logistic_prox_newton(z, delta, aux)
+    elif fname == "hinge":
+        f = lambda y: jnp.maximum(1.0 - aux * y, 0.0)
+        y = hinge_prox(z, delta, aux)
+    else:
+        raise ValueError(fname)
+    obj = lambda y_: f(y_) + (y_ - z) ** 2 / (2 * delta)
+    o_star = obj(y)
+    for eps in [1e-3, 1e-2, 0.1, 1.0]:
+        assert o_star <= obj(y + eps) + 5e-5, (fname, z, delta, label, eps)
+        assert o_star <= obj(y - eps) + 5e-5
+
+
+@settings(max_examples=60, deadline=None)
+@given(z=floats, delta=pos, label=labels_st)
+def test_logistic_prox_is_argmin(z, delta, label):
+    _check_prox_optimality("logistic", z, delta, label)
+
+
+@settings(max_examples=60, deadline=None)
+@given(z=floats, delta=pos, label=labels_st)
+def test_hinge_prox_is_argmin(z, delta, label):
+    _check_prox_optimality("hinge", z, delta, label)
+
+
+@settings(max_examples=50, deadline=None)
+@given(z1=floats, z2=floats, delta=pos, label=labels_st)
+def test_firm_nonexpansiveness(z1, z2, delta, label):
+    """||prox(a)-prox(b)||^2 <= <prox(a)-prox(b), a-b> for any convex f."""
+    for prox in (
+        lambda z: logistic_prox_newton(jnp.asarray(z), delta,
+                                       jnp.asarray(label)),
+        lambda z: hinge_prox(jnp.asarray(z), delta, jnp.asarray(label)),
+        lambda z: soft_threshold(jnp.asarray(z), delta),
+    ):
+        pa, pb = float(prox(z1)), float(prox(z2))
+        lhs = (pa - pb) ** 2
+        rhs = (pa - pb) * (z1 - z2)
+        assert lhs <= rhs + 1e-4
+
+
+@settings(max_examples=50, deadline=None)
+@given(z=floats, mu=pos, delta=pos)
+def test_moreau_decomposition_l1(z, mu, delta):
+    """z = prox_{d f}(z) + d * prox_{f*/d}(z/d) for f = mu|.|:
+    soft_threshold(z, d*mu) + clip(z, -d*mu, d*mu) == z."""
+    st_ = float(soft_threshold(jnp.asarray(z), delta * mu))
+    proj = float(project_linf(jnp.asarray(z), delta * mu))
+    assert abs(st_ + proj - z) < 1e-4
+
+
+@settings(max_examples=40, deadline=None)
+@given(z=floats, label=labels_st)
+def test_logistic_prox_stationarity(z, label):
+    """Newton solution satisfies phi'(y) = 0 to tight tolerance."""
+    delta = 4.0
+    y = float(logistic_prox_newton(jnp.asarray(z), delta, jnp.asarray(label)))
+    s = 1.0 / (1.0 + np.exp(label * y))
+    grad = -label * s + (y - z) / delta
+    assert abs(grad) < 1e-4
+
+
+def test_prox_losses_vectorized_shapes():
+    z = jnp.linspace(-5, 5, 64).reshape(4, 16)
+    labels = jnp.sign(jnp.cos(z) + 0.1)
+    for loss in (make_logistic(), make_hinge(2.0)):
+        y = loss.prox(z, 0.5, labels)
+        assert y.shape == z.shape
+        assert jnp.isfinite(y).all()
+    y = make_l1(0.3).prox(z, 0.5, None)
+    assert y.shape == z.shape
+    ls = make_least_squares()
+    y = ls.prox(z, 2.0, labels)
+    assert jnp.allclose(y, (z + 2.0 * labels) / 3.0, atol=1e-6)
+
+
+def test_hinge_prox_matches_paper_formula():
+    """Paper §6.2: prox_h(z,d)_k = z_k + l max(min(1 - l z, d), 0)."""
+    z = jnp.linspace(-3, 3, 41)
+    l = jnp.where(jnp.arange(41) % 2 == 0, 1.0, -1.0)
+    d = 0.7
+    got = hinge_prox(z, d, l)
+    want = z + l * jnp.maximum(jnp.minimum(1 - l * z, d), 0.0)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
