@@ -24,12 +24,12 @@ from repro.core.distributed import DistributedUnwrappedADMM, shard_rows
 from repro.core.oracles import logistic_objective, newton_logistic
 from repro.core.prox import make_logistic
 from repro.data.synthetic import classification_problem
+from repro.sharding import compat
 
 
 def main():
     ndev = len(jax.devices())
-    mesh = jax.make_mesh((ndev,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((ndev,), ("data",))
     print(f"devices: {ndev} (each is a paper 'node')")
 
     N, m_per, n = ndev, 25_000, 200

@@ -1,0 +1,78 @@
+"""Serving linear probes on frozen LM features from ONE Gram pass.
+
+The production shape of DESIGN.md §4: an interpretability / evals workload
+wants many readout heads on the same frozen transformer features — per-label
+probes, a regularization path, robust variants. Per-probe ``fit()`` would
+recompute the Gram every time; the serving layer registers the features
+ONCE and answers every probe from the cached sufficient statistic.
+
+    PYTHONPATH=src python examples/probe_server.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs_lib
+from repro.models.model import forward, init_params
+from repro.service import FitRequest, FitServer
+from repro.service.batching import lasso_mu_path
+
+N_PROBES = 32
+
+
+def main():
+    cfg = configs_lib.get_smoke("qwen3-8b")
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    tokens = jax.random.randint(key, (8, 64), 0, cfg.vocab_size, jnp.int32)
+
+    # frozen features: the dataset every probe shares
+    h, _ = forward(params, cfg, tokens=tokens)
+    feats = np.asarray(h.reshape(-1, cfg.d_model), np.float32)
+    feats /= np.linalg.norm(feats, axis=1, keepdims=True) + 1e-6
+    m, n = feats.shape
+    print(f"frozen features: {m} tokens x {n}d")
+
+    srv = FitServer(window=N_PROBES)
+    t0 = time.time()
+    fp = srv.register_dataset(jnp.asarray(feats))
+    print(f"registered in {time.time()-t0:.2f}s — the only Gram pass")
+
+    # one synthetic ground-truth direction per probe
+    rng = np.random.default_rng(0)
+    W = rng.standard_normal((N_PROBES, n)).astype(np.float32)
+    targets = feats @ W.T + 0.1 * rng.standard_normal(
+        (m, N_PROBES)).astype(np.float32)
+
+    reqs = [FitRequest(problem="ridge", fingerprint=fp, b=targets[:, j],
+                       mu=1e-3 * m) for j in range(N_PROBES)]
+    t0 = time.time()
+    resp = srv.serve(reqs)
+    dt = time.time() - t0
+    X = np.stack([r.x for r in sorted(resp, key=lambda r: r.request_id)])
+    cos = np.sum(X * W, axis=1) / (
+        np.linalg.norm(X, axis=1) * np.linalg.norm(W, axis=1))
+    print(f"{N_PROBES} ridge probes served in {dt:.2f}s "
+          f"({dt/N_PROBES*1e3:.1f} ms/probe), batch={resp[0].batch_size}; "
+          f"probe/truth cosine: min {cos.min():.3f} mean {cos.mean():.3f}")
+    assert cos.min() > 0.9
+
+    # sparse readout: full lasso path for probe 0, same cached Gram
+    stats = srv.stats_for(fp)
+    c0 = jnp.asarray(feats.T @ targets[:, 0])
+    mus = jnp.logspace(-1, 2, 16) * float(jnp.max(jnp.abs(c0))) / 100.0
+    t0 = time.time()
+    Xp = lasso_mu_path(stats.G, c0, mus, iters=400)
+    nnz = (np.abs(np.asarray(Xp)) > 1e-5).sum(axis=1)
+    print(f"lasso path (16 mus) in {time.time()-t0:.2f}s; "
+          f"support {nnz[0]} -> {nnz[-1]}")
+
+    c = srv.counters.snapshot()
+    print("counters:", c)
+    assert c["gram_passes"] == 1, "probes must share the single Gram pass"
+
+
+if __name__ == "__main__":
+    main()

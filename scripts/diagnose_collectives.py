@@ -13,6 +13,7 @@ sys.path.insert(0, "src")
 import repro.configs as configs_lib  # noqa: E402
 from repro.launch.dryrun import build_cell  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.sharding import compat  # noqa: E402
 from repro.roofline.hlo import _OP_RE, _shape_bytes, _group_size, parse_collectives  # noqa: E402
 
 ap = argparse.ArgumentParser()
@@ -30,7 +31,7 @@ if cfg.family == "encdec":
 cfg1 = dataclasses.replace(cfg, **kw)
 
 mesh = make_production_mesh(multi_pod=False)
-with jax.set_mesh(mesh):
+with compat.use_mesh(mesh):
     jfn, a = build_cell(args.arch, args.shape, mesh,
                         microbatches=args.microbatches, cfg_override=cfg1)
     compiled = jfn.lower(*a).compile()
@@ -57,6 +58,6 @@ print(f"wire bytes: {st.wire_bytes/2**30:.2f} GiB  by kind: "
 for b, kind, g, shape, name in ops[:args.top]:
     print(f"{b/2**20:10.1f} MiB  {kind:18s} g={g:3d}  {shape}  {name}")
 
-ca = compiled.cost_analysis()
+ca = compat.cost_analysis(compiled)
 print("flops:", f"{ca.get('flops',0):.3e}", "bytes:",
       f"{ca.get('bytes accessed',0):.3e}")

@@ -184,7 +184,8 @@ class DistributedUnwrappedADMM:
 
         in_specs = (P(axes, None), P(axes))
         out_specs = (P(), P(), P())
-        fn = jax.shard_map(
+        from repro.sharding.compat import shard_map
+        fn = shard_map(
             local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             check_vma=False,
         )

@@ -121,31 +121,40 @@ class Fasta:
         return FastaResult(x, iters_used, objs, ress)
 
 
-def transpose_reduction_lasso(
-    G: Array, c: Array, mu: float, iters: int = 2000, x0: Optional[Array] = None
-) -> FastaResult:
-    """Paper §4: solve lasso from cached (D^T D, D^T b) on a single node.
-
-    min_x mu|x| + 0.5 x^T G x - x^T c. Gradient = G x - c; Lipschitz constant
-    = lambda_max(G), estimated by a few power iterations for the initial step.
-    """
+def power_lmax(G: Array, iters: int = 20) -> Array:
+    """lambda_max(G) for PSD G by power iteration (the Lipschitz estimate)."""
     n = G.shape[0]
-    if x0 is None:
-        x0 = jnp.zeros((n,), G.dtype)
-    # Power iteration for ||G||_2 (G is PSD).
     v = jnp.ones((n,), G.dtype) / jnp.sqrt(n)
 
     def piter(v, _):
         w = G @ v
         return w / jnp.maximum(jnp.linalg.norm(w), 1e-30), None
 
-    v, _ = jax.lax.scan(piter, v, None, length=20)
-    lmax = jnp.vdot(v, G @ v)
-    t0 = 1.0 / jnp.maximum(lmax, 1e-12)
+    v, _ = jax.lax.scan(piter, v, None, length=iters)
+    return jnp.maximum(jnp.vdot(v, G @ v), 1e-12)
+
+
+def transpose_reduction_lasso(
+    G: Array, c: Array, mu: float, iters: int = 2000,
+    x0: Optional[Array] = None, l2: float = 0.0
+) -> FastaResult:
+    """Paper §4: solve lasso from cached (D^T D, D^T b) on a single node.
+
+    min_x mu|x| + l2/2||x||^2 + 0.5 x^T G x - x^T c. Gradient = G x - c
+    (+ l2 x); Lipschitz constant = lambda_max(G) + l2, estimated by a few
+    power iterations for the initial step. ``l2 > 0`` is the elastic net —
+    the extra quadratic folds into the smooth part, so the same cached Gram
+    serves the whole family.
+    """
+    n = G.shape[0]
+    if x0 is None:
+        x0 = jnp.zeros((n,), G.dtype)
+    t0 = 1.0 / (power_lmax(G) + l2)
 
     solver = Fasta(
-        gradg=lambda x: G @ x - c,
-        g=lambda x: 0.5 * jnp.vdot(x, G @ x) - jnp.vdot(x, c),
+        gradg=lambda x: G @ x - c + l2 * x,
+        g=lambda x: 0.5 * jnp.vdot(x, G @ x) - jnp.vdot(x, c)
+                    + 0.5 * l2 * jnp.vdot(x, x),
         proxJ=lambda z, t: soft_threshold(z, t * mu),
         J=lambda x: mu * jnp.sum(jnp.abs(x)),
     )

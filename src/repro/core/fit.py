@@ -1,32 +1,30 @@
 """High-level model-fitting API — the paper's contribution as one call.
 
-``fit()`` dispatches on (problem, method):
+``fit()`` dispatches on (problem, method) through the problem registry
+(``repro.service.registry``): solvers self-register under
+``@register_problem`` and this module stays a thin, stable entry point.
 
   problem: "lasso" | "logistic" | "svm" | "sparse_logistic"
+           | "ridge" | "elastic_net" | "huber" | "nnls"
   method:  "transpose"  — the paper (unwrapped ADMM w/ transpose reduction,
-                          or the §4 direct Gram path for lasso)
+                          or the §4 direct Gram path for quadratic data terms)
            "consensus"  — the Boyd baseline the paper compares against
-           "fasta"      — single-node forward-backward (lasso only)
+                          (lasso / logistic / sparse_logistic / svm)
+           "fasta"      — single-node forward-backward from cached Gram
+                          (lasso / ridge / elastic_net / nnls)
 
 Single-process emulation takes node-stacked D (N, m_i, n). Multi-device
 takes a Mesh and row-sharded global arrays (see repro.core.distributed).
 This is also the entry point the LM framework uses for linear-probe /
-readout fitting on frozen transformer features (DESIGN.md §4).
+readout fitting on frozen transformer features (DESIGN.md §4), and the
+solver the serving layer (repro.service.server) falls back to for
+problems that need the raw data rather than cached sufficient statistics.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
-import jax.numpy as jnp
-
-from repro.core import consensus as cons
-from repro.core import fasta as fasta_lib
-from repro.core import gram as gram_lib
-from repro.core import prox as prox_lib
-from repro.core.oracles import default_tau
-from repro.core.unwrapped import UnwrappedADMM
 
 Array = jax.Array
 
@@ -65,73 +63,17 @@ def fit(
     D: Array,                      # (N, m_i, n) node-stacked
     aux: Array,                    # labels or b, (N, m_i)
     method: str = "transpose",
-    mu: Optional[float] = None,    # l1 weight (lasso / sparse_logistic)
+    mu: Optional[float] = None,    # l1 weight (lasso / sparse_logistic / en)
     C: float = 1.0,                # SVM hinge weight
     tau: Optional[float] = None,
     iters: int = 500,
     record: bool = True,
+    **params,                      # problem extras: l2=, delta=, x0=, ...
 ) -> FitResult:
-    N, mi, n = D.shape
-    m = N * mi
-    if tau is None and problem in ("lasso", "logistic", "svm", "sparse_logistic"):
-        tau = default_tau(
-            {"sparse_logistic": "logistic"}.get(problem, problem), m
-        )
+    # Imported lazily: the registry imports solver modules from repro.core,
+    # so a module-level import here would be circular.
+    from repro.service import registry
 
-    if problem == "lasso":
-        assert mu is not None
-        if method == "transpose" or method == "fasta":
-            # §4: direct transpose reduction + single-node FASTA.
-            Dflat = D.reshape(m, n)
-            G, c = gram_lib.gram_and_rhs_chunked(Dflat, aux.reshape(m))
-            res = fasta_lib.transpose_reduction_lasso(G, c, mu, iters=iters)
-            return FitResult(res.x, int(res.iters), res.objective, method, problem)
-        if method == "consensus":
-            r = cons.ConsensusLasso(mu=mu, tau=tau).run(D, aux, iters)
-            return FitResult(r.z, int(r.iters), r.history.objective, method, problem)
-
-    if problem == "logistic":
-        if method == "transpose":
-            r = UnwrappedADMM(loss=prox_lib.make_logistic(), tau=tau).run(
-                D, aux, iters, record=record
-            )
-            hist = r.history.objective if r.history else None
-            return FitResult(r.x, int(r.iters), hist, method, problem)
-        if method == "consensus":
-            r = cons.ConsensusLogistic(tau=tau).run(D, aux, iters)
-            return FitResult(r.z, int(r.iters), r.history.objective, method, problem)
-
-    if problem == "sparse_logistic":
-        assert mu is not None
-        if method == "transpose":
-            # §7 stacking [I; D]: identity block rides on a virtual node.
-            Dflat = D.reshape(m, n)
-            D_hat = jnp.concatenate([jnp.eye(n, dtype=D.dtype), Dflat], 0)[None]
-            sp = prox_lib.StackedProx(
-                blocks=(prox_lib.make_l1(mu), prox_lib.make_logistic()),
-                sizes=(n, m),
-            )
-            aux_hat = jnp.concatenate([jnp.zeros((n,), aux.dtype), aux.reshape(m)])[
-                None
-            ]
-            r = UnwrappedADMM(loss=sp.as_loss("sparse_logistic"), tau=tau).run(
-                D_hat, aux_hat, iters, record=record
-            )
-            hist = r.history.objective if r.history else None
-            return FitResult(r.x, int(r.iters), hist, method, problem)
-        if method == "consensus":
-            r = cons.ConsensusLogistic(mu=mu, tau=tau).run(D, aux, iters)
-            return FitResult(r.z, int(r.iters), r.history.objective, method, problem)
-
-    if problem == "svm":
-        if method == "transpose":
-            r = UnwrappedADMM(loss=prox_lib.make_hinge(C), tau=tau, rho=1.0).run(
-                D, aux, iters, record=record
-            )
-            hist = r.history.objective if r.history else None
-            return FitResult(r.x, int(r.iters), hist, method, problem)
-        if method == "consensus":
-            r = cons.ConsensusSVM(C=C, tau=tau).run(D, aux, iters)
-            return FitResult(r.z, int(r.iters), r.history.objective, method, problem)
-
-    raise ValueError(f"unsupported (problem={problem}, method={method})")
+    return registry.solve(
+        problem, D, aux, method=method,
+        mu=mu, C=C, tau=tau, iters=iters, record=record, **params)

@@ -30,6 +30,19 @@ def _acc_dtype(dtype) -> jnp.dtype:
     return jnp.float64 if dtype == jnp.float64 else jnp.float32
 
 
+def blocked_rows(x: Array, block_rows: int) -> Array:
+    """Zero-pad rows to a block multiple and reshape to
+    (nblocks, block_rows, ...) — the shared scaffold of every streaming
+    row-block reduction here (zero rows contribute nothing to the sums,
+    so the padding is exact; no masking needed)."""
+    m = x.shape[0]
+    nblocks = -(-m // block_rows)
+    pad = nblocks * block_rows - m
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x.reshape((nblocks, block_rows) + x.shape[1:])
+
+
 def gram(D: Array) -> Array:
     """D^T D in accumulation precision."""
     Dc = D.astype(_acc_dtype(D.dtype))
@@ -51,10 +64,7 @@ def gram_chunked(D: Array, block_rows: int = 1024) -> Array:
     """
     m, n = D.shape
     acc = _acc_dtype(D.dtype)
-    nblocks = -(-m // block_rows)
-    pad = nblocks * block_rows - m
-    Dp = jnp.pad(D, ((0, pad), (0, 0))) if pad else D
-    Dp = Dp.reshape(nblocks, block_rows, n)
+    Dp = blocked_rows(D, block_rows)
 
     def body(G, blk):
         blk = blk.astype(acc)
@@ -69,15 +79,15 @@ def gram_chunked(D: Array, block_rows: int = 1024) -> Array:
 def gram_and_rhs_chunked(
     D: Array, b: Array, block_rows: int = 1024
 ) -> Tuple[Array, Array]:
-    """Fused streaming (D^T D, D^T b) — one pass over the data."""
+    """Fused streaming (D^T D, D^T b) — one pass over the data.
+
+    ``b`` may be (m,) — the classic lasso rhs — or (m, r) stacked
+    right-hand sides (multi-probe serving); c comes back (n,) or (n, r).
+    """
     m, n = D.shape
     acc = _acc_dtype(D.dtype)
-    nblocks = -(-m // block_rows)
-    pad = nblocks * block_rows - m
-    Dp = jnp.pad(D, ((0, pad), (0, 0))) if pad else D
-    bp = jnp.pad(b, (0, pad)) if pad else b
-    Dp = Dp.reshape(nblocks, block_rows, n)
-    bp = bp.reshape(nblocks, block_rows)
+    Dp = blocked_rows(D, block_rows)
+    bp = blocked_rows(b, block_rows)
 
     def body(carry, blk):
         G, c = carry
@@ -85,7 +95,7 @@ def gram_and_rhs_chunked(
         Db = Db.astype(acc)
         return (G + Db.T @ Db, c + Db.T @ bb.astype(acc)), None
 
-    init = (jnp.zeros((n, n), acc), jnp.zeros((n,), acc))
+    init = (jnp.zeros((n, n), acc), jnp.zeros((n,) + b.shape[1:], acc))
     (G, c), _ = jax.lax.scan(body, init, (Dp, bp))
     return G, c
 

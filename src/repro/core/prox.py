@@ -166,6 +166,44 @@ def make_least_squares() -> ProxLoss:
     return ProxLoss("least_squares", value, prox, grad, lipschitz=1.0)
 
 
+def make_huber(delta: float = 1.0) -> ProxLoss:
+    """Huber loss sum_k h_delta(z_k - b_k) with b passed as aux.
+
+    h_delta(r) = r^2/2 for |r| <= delta, delta(|r| - delta/2) beyond — the
+    robust-regression data term. The prox is closed form: shrink the
+    residual r0 = z - b by 1/(1+d) in the quadratic region, shift it by
+    d*delta toward zero in the linear (outlier) region; the two branches
+    agree at |r0| = delta (1 + d).
+    """
+
+    def value(z, aux):
+        r = z - aux
+        a = jnp.abs(r)
+        return jnp.sum(
+            jnp.where(a <= delta, 0.5 * r * r, delta * (a - 0.5 * delta))
+        )
+
+    def prox(z, d, aux):
+        d = jnp.asarray(d, z.dtype)
+        r0 = z - aux
+        r = jnp.where(
+            jnp.abs(r0) <= delta * (1.0 + d),
+            r0 / (1.0 + d),
+            r0 - d * delta * jnp.sign(r0),
+        )
+        return aux + r
+
+    def grad(z, aux):
+        return jnp.clip(z - aux, -delta, delta)
+
+    return ProxLoss("huber", value, prox, grad, lipschitz=1.0)
+
+
+def project_nonneg(z: Array) -> Array:
+    """Projection onto the nonnegative orthant (NNLS constraint)."""
+    return jnp.maximum(z, 0.0)
+
+
 def make_linf_ball(radius: float) -> ProxLoss:
     """Characteristic function of the l-inf ball (dual lasso, paper §7.1)."""
 
@@ -234,6 +272,7 @@ class StackedProx:
 LOSSES = {
     "logistic": make_logistic,
     "hinge": make_hinge,
+    "huber": make_huber,
     "l1": make_l1,
     "least_squares": make_least_squares,
     "linf_ball": make_linf_ball,

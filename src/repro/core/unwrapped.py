@@ -121,7 +121,13 @@ class UnwrappedADMM:
         N, mi, n = D.shape
         acc = gram_lib._acc_dtype(D.dtype)
         L = self.setup(D)
-        y = jnp.zeros((N, mi), acc)
+        if x0 is not None:
+            # Warm start (the serving layer's repeated solves): seed the
+            # split variable at y = D x0, so the first x-update returns
+            # (D^T D + rI)^{-1} D^T D x0 — exactly x0 when rho = 0.
+            y = jnp.einsum("imn,n->im", D.astype(acc), x0.astype(acc))
+        else:
+            y = jnp.zeros((N, mi), acc)
         lam = jnp.zeros((N, mi), acc)
         aux_r = aux.ravel() if aux is not None else None
 

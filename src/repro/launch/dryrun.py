@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.sharding import compat
+
 import repro.configs as configs_lib
 from repro.launch.input_specs import SHAPES, abstract_params, input_specs
 from repro.launch.mesh import make_production_mesh
@@ -126,7 +128,7 @@ def build_cell(arch: str, shape: str, mesh, *, microbatches: int = 1,
 
 
 def _cost_tuple(compiled):
-    cost = compiled.cost_analysis()
+    cost = compat.cost_analysis(compiled)
     coll = parse_collectives(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)),
@@ -190,7 +192,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: Path,
     n_chips = mesh.size
     cfg = configs_lib.get(arch)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         if skip_full:
             mem = None
             t_lower = t_compile = 0.0
@@ -259,7 +261,7 @@ def run_fit_cell(name: str, *, multi_pod: bool, out_dir: Path, tag: str = ""):
     from repro.launch.fit_cell import CELLS, build_fit_cell
     mesh = make_production_mesh(multi_pod=multi_pod)
     spec = CELLS[name]
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         built = build_fit_cell(name, mesh)
         result = {"cell": f"admm_{name}", "m": spec["m"], "n": spec["n"],
                   "dtype": str(spec["dtype"].__name__),
@@ -269,7 +271,7 @@ def run_fit_cell(name: str, *, multi_pod: bool, out_dir: Path, tag: str = ""):
             t0 = time.time()
             compiled = jfn.lower(*args_).compile()
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = compat.cost_analysis(compiled)
             coll = parse_collectives(compiled.as_text())
             flops = float(cost.get("flops", 0.0))
             hbm = float(cost.get("bytes accessed", 0.0))

@@ -25,6 +25,7 @@ from repro.core.oracles import (
 )
 from repro.core.prox import make_hinge, make_logistic
 from repro.data import synthetic
+from repro.sharding import compat
 
 
 def main(argv=None):
@@ -65,9 +66,7 @@ def main(argv=None):
     if args.multi_device and args.method == "transpose" \
             and args.problem in ("logistic", "svm"):
         ndev = len(jax.devices())
-        mesh = jax.make_mesh(
-            (ndev,), ("data",),
-            axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((ndev,), ("data",))
         loss = make_logistic() if args.problem == "logistic" \
             else make_hinge(1.0)
         rho = 1.0 if args.problem == "svm" else 0.0

@@ -21,6 +21,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import gram as gram_lib
 from repro.core.prox import make_logistic
+from repro.sharding.compat import shard_map
 
 CELLS = {
     "star_f32": dict(m=950_272_000, n=307, dtype=jnp.float32),
@@ -90,14 +91,14 @@ def build_fit_cell(name: str, mesh, tau: float = 0.1):
         obj = jax.lax.psum(obj, axes)
         return (d, jnp.concatenate(y_out), jnp.concatenate(lam_out), obj)
 
-    setup = jax.shard_map(
+    setup = shard_map(
         setup_local, mesh=mesh,
         in_specs=(P(axes, None),), out_specs=P(), check_vma=False)
-    one_iter = jax.shard_map(
+    one_iter = shard_map(
         iter_local, mesh=mesh,
         in_specs=(P(axes, None), P(axes), P(axes), P(axes), P()),
         out_specs=(P(), P(axes), P(axes), P()), check_vma=False)
-    fused_iter = jax.shard_map(
+    fused_iter = shard_map(
         fused_iter_local, mesh=mesh,
         in_specs=(P(axes, None), P(axes), P(axes), P(axes), P()),
         out_specs=(P(), P(axes), P(axes), P()), check_vma=False)

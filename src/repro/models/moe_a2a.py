@@ -45,7 +45,8 @@ def moe_ffn_a2a_local(params, cfg: ModelConfig, x_loc: Array, *,
         send_cf = cfg.capacity_factor
     if recv_cf is None:
         recv_cf = max(1.25 * cfg.capacity_factor, 1.5)
-    M = jax.lax.axis_size(axis)
+    from repro.sharding.compat import axis_size
+    M = axis_size(axis)
     E = cfg.num_experts
     k = cfg.experts_per_token
     E_loc = E // M
@@ -132,7 +133,8 @@ def moe_ffn_a2a(params, cfg: ModelConfig, x: Array) -> Tuple[Array, Array]:
     when no mesh (unit tests) or S does not divide."""
     from jax.sharding import PartitionSpec as P
     from repro.models.moe import moe_ffn
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.sharding.compat import current_mesh
+    mesh = current_mesh()
     B, S, d = x.shape
     if (mesh is None or mesh.empty or "model" not in mesh.axis_names
             or S % mesh.shape["model"] != 0):
@@ -156,7 +158,8 @@ def moe_ffn_a2a(params, cfg: ModelConfig, x: Array) -> Tuple[Array, Array]:
         aux = jax.lax.pmean(aux, tuple(a for a in all_axes if a != "model"))
         return out.reshape(Bl, Sl, d), aux
 
-    fn = jax.shard_map(
+    from repro.sharding.compat import shard_map
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(pspec, P(dp, "model", None)),
         out_specs=(P(dp, "model", None), P()),

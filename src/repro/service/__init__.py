@@ -1,0 +1,43 @@
+"""Serving layer: sufficient statistics as the unit of serving.
+
+  stats     — SufficientStats pytree: streaming update / merge / checkpoint
+              + Cholesky rank-k up/downdate.
+  registry  — @register_problem dispatch (the fit() entry point's backend)
+              + stats-path solvers for quadratic data terms.
+  batching  — multi-RHS / mu-grid coalescing over one cached factor.
+  server    — FitServer: micro-batching request loop, LRU factor cache,
+              observable cost counters.
+"""
+from repro.service.stats import (
+    SufficientStats,
+    chol_downdate,
+    chol_update,
+    combine_fingerprints,
+    fingerprint_array,
+)
+from repro.service.registry import (
+    GRAM_SOLVERS,
+    problems,
+    register_problem,
+    solve,
+)
+from repro.service.batching import (
+    batched_gram_solve,
+    batched_quad_prox,
+    lasso_mu_path,
+    rhs_chunked,
+)
+from repro.service.server import (
+    FitRequest,
+    FitResponse,
+    FitServer,
+    ServerCounters,
+)
+
+__all__ = [
+    "SufficientStats", "chol_downdate", "chol_update",
+    "combine_fingerprints", "fingerprint_array", "GRAM_SOLVERS", "problems",
+    "register_problem", "solve", "batched_gram_solve", "batched_quad_prox",
+    "lasso_mu_path", "rhs_chunked", "FitRequest", "FitResponse", "FitServer",
+    "ServerCounters",
+]

@@ -1,0 +1,360 @@
+"""Batched multi-problem fit serving over cached sufficient statistics.
+
+The serving contract (ROADMAP north star, paper §4 turned into a subsystem):
+a dataset is registered ONCE — one streaming pass builds its
+:class:`~repro.service.stats.SufficientStats` — and every subsequent fit
+request against that dataset fingerprint is answered from cache:
+
+  * quadratic-data-term problems (ridge / lasso / elastic_net / nnls) solve
+    straight from (G, c): no Gram pass, no data pass when the request
+    reuses the registered b; requests carrying fresh label vectors share
+    ONE fused D^T B pass per micro-batch;
+  * Cholesky factors are LRU-cached per (fingerprint, ridge); appending or
+    retiring data blocks up/downdates both the stats and every live factor
+    in O(n^2 k) (repro.service.stats.chol_update) instead of refactorizing;
+  * other registered problems (logistic, svm, huber, ...) fall back to the
+    full registry solver on the stored data — still one entry point.
+
+Requests queue in a micro-batching window and are coalesced by
+(problem, fingerprint, solver parameters) into stacked solves
+(repro.service.batching). ``ServerCounters`` makes the cache behaviour
+assertable: a warm second fit on the same fingerprint performs zero
+additional Gram passes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.service import batching, registry
+from repro.service.stats import SufficientStats, chol_update, chol_downdate
+
+Array = jax.Array
+
+_req_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class FitRequest:
+    """One fit against a registered dataset.
+
+    ``b`` overrides the dataset's own right-hand side (a linear probe's
+    label vector); None reuses the c ingested at registration time.
+    """
+
+    problem: str
+    fingerprint: str
+    b: Optional[np.ndarray] = None
+    mu: Optional[float] = None
+    l2: float = 0.0
+    C: float = 1.0
+    delta: float = 1.0
+    iters: int = 1000
+    request_id: int = dataclasses.field(
+        default_factory=lambda: next(_req_ids))
+
+
+@dataclasses.dataclass
+class FitResponse:
+    request_id: int
+    problem: str
+    fingerprint: str
+    x: np.ndarray
+    iters: int
+    batch_size: int            # how many requests shared this solve
+    from_cache: bool           # True iff no Gram pass was spent on this
+
+
+@dataclasses.dataclass
+class ServerCounters:
+    """Observable cost accounting — the serving layer's acceptance surface."""
+
+    requests: int = 0
+    responses: int = 0
+    batches: int = 0           # coalesced group solves executed
+    gram_passes: int = 0       # full O(m n^2) passes over a dataset
+    rhs_passes: int = 0        # fused O(m n k) D^T B micro-batch passes
+    factorizations: int = 0    # fresh O(n^3) Cholesky factorizations
+    factor_updates: int = 0    # O(n^2 k) rank-k factor up/downdates
+    factor_cache_hits: int = 0
+    factor_cache_misses: int = 0
+    full_solves: int = 0       # non-gram-path fallbacks to registry.solve
+
+    def snapshot(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class _Dataset:
+    D: Optional[jax.Array]        # (m, n) row-major data; None = stats-only
+    stats: SufficientStats        # stats.fully_labeled gates rhs reuse
+    b: Optional[jax.Array] = None  # registered rhs rows (full solves reuse it)
+
+
+class FitServer:
+    """Micro-batching fit server with an LRU Cholesky-factor cache.
+
+    ``window``: max queued requests before ``submit`` auto-flushes.
+    ``factor_cache_size``: live (fingerprint, ridge) factors; least recently
+    used factors are evicted first.
+    """
+
+    def __init__(self, window: int = 16, factor_cache_size: int = 8):
+        self.window = int(window)
+        self.factor_cache_size = int(factor_cache_size)
+        self.counters = ServerCounters()
+        self._datasets: Dict[str, _Dataset] = {}
+        self._factors: "OrderedDict[Tuple[str, float], Array]" = OrderedDict()
+        self._queue: List[FitRequest] = []
+
+    # -- dataset lifecycle --------------------------------------------------
+    def register_dataset(self, D: Array, b: Optional[Array] = None,
+                         keep_data: bool = True) -> str:
+        """One streaming pass -> stats; returns the dataset fingerprint.
+
+        ``keep_data=False`` drops the raw rows after the reduction (stats-
+        only serving: quadratic problems with registered b keep working;
+        fresh-b and non-gram problems will refuse).
+        """
+        D = jnp.asarray(D)
+        node_shape = D.shape[:2] if D.ndim == 3 else None
+        if node_shape is not None:           # accept node-stacked layout
+            D = D.reshape(-1, D.shape[-1])
+        if b is not None:
+            b = jnp.asarray(b)
+            # a 2-D b is node-stacked labels when it matches D's node
+            # layout, else stacked (m, r) right-hand sides (kept 2-D —
+            # flattening would interleave columns against D's rows)
+            if b.ndim == 2 and b.shape == node_shape:
+                b = b.reshape(-1)
+            if b.shape[0] != D.shape[0]:
+                raise ValueError(
+                    f"rhs has {b.shape[0]} rows but data has {D.shape[0]}")
+        stats = SufficientStats.from_data(D, b)
+        self.counters.gram_passes += 1
+        self._datasets[stats.fingerprint] = _Dataset(
+            D=D if keep_data else None, stats=stats,
+            b=b if keep_data else None)
+        return stats.fingerprint
+
+    def register_stats(self, stats: SufficientStats) -> str:
+        """Adopt pre-reduced stats (e.g. merged from remote shards or
+        checkpoint-restored): rhs reuse is gated by stats.fully_labeled,
+        which travels with the stats through merge and checkpointing."""
+        self._datasets[stats.fingerprint] = _Dataset(D=None, stats=stats)
+        return stats.fingerprint
+
+    def ingest_block(self, fingerprint: str, block_D: Array,
+                     block_b: Optional[Array] = None) -> str:
+        """Append rows to a registered dataset.
+
+        Stats stream-update in O(k n^2); every live factor for the dataset
+        rank-k *updates* in O(n^2 k) — no refactorization, and the dataset
+        moves to its new content fingerprint.
+        """
+        ds = self._datasets.pop(fingerprint)
+        block_D = jnp.asarray(block_D)
+        new_stats = ds.stats.update(block_D, block_b)
+        if ds.D is not None:
+            ds.D = jnp.concatenate([ds.D, block_D], axis=0)
+        if ds.b is not None and block_b is not None:
+            ds.b = jnp.concatenate([ds.b, jnp.asarray(block_b).reshape(-1)])
+        else:
+            ds.b = None           # raw rhs no longer aligns with the rows
+        self._rekey_factors(fingerprint, new_stats.fingerprint, block_D,
+                            chol_update)
+        self._datasets[new_stats.fingerprint] = _Dataset(
+            D=ds.D, stats=new_stats, b=ds.b)
+        return new_stats.fingerprint
+
+    def retire_block(self, fingerprint: str, block_D: Array,
+                     block_b: Optional[Array] = None) -> str:
+        """Remove previously-ingested rows (sliding-window serving).
+
+        Stats downdate; live factors rank-k *downdate*. The raw row cache
+        (if any) is dropped — exact row removal is the stats' job.
+        """
+        ds = self._datasets.pop(fingerprint)
+        block_D = jnp.asarray(block_D)
+        new_stats = ds.stats.downdate(block_D, block_b)
+        self._rekey_factors(fingerprint, new_stats.fingerprint, block_D,
+                            chol_downdate)
+        self._datasets[new_stats.fingerprint] = _Dataset(
+            D=None, stats=new_stats)
+        return new_stats.fingerprint
+
+    def _rekey_factors(self, old_fp: str, new_fp: str, block_D: Array, op):
+        for (fp, ridge), L in list(self._factors.items()):
+            if fp == old_fp:
+                del self._factors[(fp, ridge)]
+                self._factors[(new_fp, ridge)] = op(L, block_D)
+                self.counters.factor_updates += 1
+
+    def stats_for(self, fingerprint: str) -> SufficientStats:
+        return self._datasets[fingerprint].stats
+
+    # -- factor cache -------------------------------------------------------
+    def _factor(self, fingerprint: str, ridge: float) -> Array:
+        key = (fingerprint, float(ridge))
+        if key in self._factors:
+            self._factors.move_to_end(key)
+            self.counters.factor_cache_hits += 1
+            return self._factors[key]
+        self.counters.factor_cache_misses += 1
+        L = self._datasets[fingerprint].stats.factor(ridge=ridge)
+        self.counters.factorizations += 1
+        self._factors[key] = L
+        while len(self._factors) > self.factor_cache_size:
+            self._factors.popitem(last=False)
+        return L
+
+    # -- request path -------------------------------------------------------
+    def submit(self, request: FitRequest) -> List[FitResponse]:
+        """Queue a request; auto-flush when the window fills."""
+        self.counters.requests += 1
+        self._queue.append(request)
+        if len(self._queue) >= self.window:
+            return self.flush()
+        return []
+
+    def flush(self) -> List[FitResponse]:
+        """Coalesce the queue into per-(problem, dataset, params) batches."""
+        queue, self._queue = self._queue, []
+        groups: "OrderedDict[tuple, List[FitRequest]]" = OrderedDict()
+        for req in queue:
+            # ridge shares one factor per mu, so it groups by mu (None
+            # normalizes to the solver default); FASTA-path problems vmap
+            # over per-request mus and coalesce freely.
+            mu_key = ((req.mu if req.mu is not None else 1.0)
+                      if req.problem == "ridge" else None)
+            key = (req.problem, req.fingerprint, req.l2, req.iters, mu_key)
+            groups.setdefault(key, []).append(req)
+        out: List[FitResponse] = []
+        for reqs in groups.values():
+            out.extend(self._solve_group(reqs))
+        self.counters.responses += len(out)
+        out.sort(key=lambda r: r.request_id)
+        return out
+
+    def serve(self, requests: Sequence[FitRequest],
+              window_s: float = 0.0) -> List[FitResponse]:
+        """Drive a request stream through the micro-batching loop.
+
+        ``window_s`` emulates an arrival window: requests accumulate until
+        the window closes (or the queue hits ``window``), then flush.
+        """
+        out: List[FitResponse] = []
+        deadline = time.monotonic() + window_s
+        for req in requests:
+            out.extend(self.submit(req))
+            if window_s and time.monotonic() >= deadline:
+                out.extend(self.flush())
+                deadline = time.monotonic() + window_s
+        out.extend(self.flush())
+        return out
+
+    # -- group solvers ------------------------------------------------------
+    def _solve_group(self, reqs: List[FitRequest]) -> List[FitResponse]:
+        problem = reqs[0].problem
+        fp = reqs[0].fingerprint
+        if fp not in self._datasets:
+            raise KeyError(f"unknown dataset fingerprint {fp[:12]}...; "
+                           "register_dataset() first")
+        # the registry's stats-path solvers define what serves from cache
+        if problem in registry.GRAM_SOLVERS:
+            return self._solve_gram_group(problem, fp, reqs)
+        return [self._solve_full(req) for req in reqs]
+
+    def _group_rhs(self, fp: str, reqs: List[FitRequest]) -> Array:
+        """(k, n) right-hand sides: ONE fused D^T B pass for fresh labels."""
+        ds = self._datasets[fp]
+        fresh = [r for r in reqs if r.b is not None]
+        if fresh:
+            if ds.D is None:
+                raise ValueError(
+                    "request carries fresh b but dataset was registered "
+                    "stats-only (keep_data=False)")
+            B = jnp.stack(
+                [jnp.asarray(r.b).reshape(-1) for r in fresh], axis=1)
+            C_fresh = batching.rhs_chunked(ds.D, B)          # (n, k_fresh)
+            self.counters.rhs_passes += 1
+        cols, j = [], 0
+        for r in reqs:
+            if r.b is None:
+                # fully_labeled: c covers every row in G — a mixed ingest
+                # (some blocks unlabeled) must not serve its partial c.
+                if not (ds.stats.fully_labeled and ds.stats.c.ndim == 1):
+                    raise ValueError(
+                        "request reuses the dataset rhs but none was "
+                        "registered — pass b on the request or register "
+                        "the dataset with b")
+                cols.append(ds.stats.c)
+            else:
+                cols.append(C_fresh[:, j])
+                j += 1
+        return jnp.stack(cols, axis=0)                       # (k, n)
+
+    def _solve_gram_group(self, problem: str, fp: str,
+                          reqs: List[FitRequest]) -> List[FitResponse]:
+        self.counters.batches += 1
+        if problem in ("lasso", "elastic_net"):
+            missing = [r.request_id for r in reqs if r.mu is None]
+            if missing:
+                raise ValueError(
+                    f"{problem} requests {missing} have no mu — an l1 "
+                    "weight is required (mu=0 would silently serve "
+                    "unregularized least squares)")
+        C = self._group_rhs(fp, reqs)
+        k = len(reqs)
+        if problem == "ridge":
+            mu = reqs[0].mu if reqs[0].mu is not None else 1.0
+            L = self._factor(fp, ridge=mu)
+            X = batching.batched_gram_solve(L, C)
+            iters = np.ones((k,), np.int32)
+        else:
+            G = self._datasets[fp].stats.G
+            mus = jnp.asarray(
+                [r.mu if r.mu is not None else 0.0 for r in reqs],
+                G.dtype)
+            X, iters = batching.batched_quad_prox(
+                G, C, mus, kind=problem, l2=reqs[0].l2,
+                iters=reqs[0].iters)
+            iters = np.asarray(iters)
+        X = np.asarray(X)
+        return [
+            FitResponse(request_id=r.request_id, problem=problem,
+                        fingerprint=fp, x=X[i], iters=int(iters[i]),
+                        batch_size=k, from_cache=True)
+            for i, r in enumerate(reqs)
+        ]
+
+    def _solve_full(self, req: FitRequest) -> FitResponse:
+        """Non-quadratic data terms need the rows: registry fallback."""
+        ds = self._datasets[req.fingerprint]
+        if ds.D is None:
+            raise ValueError(
+                f"problem {req.problem!r} needs raw data but dataset "
+                "was registered stats-only")
+        b = req.b if req.b is not None else ds.b
+        if b is None:
+            raise ValueError(
+                f"problem {req.problem!r} needs labels/targets: pass b on "
+                "the request or register the dataset with b")
+        self.counters.full_solves += 1
+        m, n = ds.D.shape
+        D = ds.D.reshape(1, m, n)
+        aux = jnp.asarray(b).reshape(1, m)
+        res = registry.solve(
+            req.problem, D, aux, method="transpose", mu=req.mu, C=req.C,
+            delta=req.delta, iters=req.iters, record=False)
+        return FitResponse(
+            request_id=req.request_id, problem=req.problem,
+            fingerprint=req.fingerprint, x=np.asarray(res.x),
+            iters=int(res.iters), batch_size=1, from_cache=False)

@@ -12,6 +12,8 @@ from typing import Optional, Sequence, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.sharding.compat import current_mesh
+
 # Logical data-parallel axes in priority order; ('pod','data') on the
 # multi-pod mesh collapses to ('data',) on a single pod.
 DP = ("pod", "data")
@@ -36,7 +38,7 @@ def filter_spec(spec: P, axis_names) -> P:
 
 def shard(x: jax.Array, *entries) -> jax.Array:
     """with_sharding_constraint(x, P(*entries)) if a mesh is active."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     if mesh is None or mesh.empty or not mesh.axis_names:
         return x
     spec = filter_spec(P(*entries), mesh.axis_names)

@@ -1,0 +1,444 @@
+"""Serving-layer tests: sufficient-stats algebra, rank-k factor updates,
+registry dispatch, batched multi-RHS solving, and the FitServer cache
+contract (a warm fingerprint never re-runs the Gram pass)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gram as gram_lib
+from repro.core.fit import fit
+from repro.data.synthetic import lasso_problem
+from repro.service import (
+    FitRequest,
+    FitServer,
+    SufficientStats,
+    chol_downdate,
+    chol_update,
+    registry,
+)
+from repro.service.batching import (
+    batched_gram_solve,
+    batched_quad_prox,
+    lasso_mu_path,
+    rhs_chunked,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _data(m=300, n=16, seed=0):
+    rng = np.random.default_rng(seed)
+    D = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(m), jnp.float32)
+    return D, b
+
+
+# ---------------------------------------------------------------------------
+# SufficientStats algebra
+# ---------------------------------------------------------------------------
+
+def test_merge_of_updates_equals_update_of_union():
+    """merge(update(a), update(b)) == update(a+b), fingerprint included."""
+    D, b = _data()
+    z = SufficientStats.zero(16)
+    sa = z.update(D[:100], b[:100])
+    sb = z.update(D[100:], b[100:])
+    merged = sa.merge(sb)
+    direct = z.update(D[:100], b[:100]).update(D[100:], b[100:])
+    np.testing.assert_allclose(merged.G, direct.G, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(merged.c, direct.c, rtol=1e-5, atol=1e-4)
+    assert merged.rows == direct.rows == 300
+    assert merged.fingerprint == direct.fingerprint
+    # and both equal the one-shot reduction of the union
+    whole = SufficientStats.from_data(D, b)
+    np.testing.assert_allclose(merged.G, whole.G, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(merged.c, whole.c, rtol=1e-4, atol=1e-3)
+
+
+def test_merge_is_commutative():
+    D, b = _data()
+    z = SufficientStats.zero(16)
+    sa = z.update(D[:100], b[:100])
+    sb = z.update(D[100:], b[100:])
+    ab, ba = sa.merge(sb), sb.merge(sa)
+    np.testing.assert_allclose(ab.G, ba.G, rtol=1e-6)
+    assert ab.fingerprint == ba.fingerprint
+
+
+def test_update_then_downdate_roundtrip():
+    D, b = _data()
+    s = SufficientStats.from_data(D[:200], b[:200])
+    s2 = s.update(D[200:], b[200:]).downdate(D[200:], b[200:])
+    np.testing.assert_allclose(s2.G, s.G, rtol=1e-4, atol=1e-3)
+    assert s2.rows == s.rows
+    assert s2.fingerprint == s.fingerprint    # the +/- fold cancels exactly
+
+
+def test_fingerprint_is_multiplicity_sensitive():
+    """Ingesting the same block twice must NOT alias the original stats."""
+    D, b = _data()
+    s0 = SufficientStats.from_data(D[:200], b[:200])
+    s1 = s0.update(D[200:], b[200:])
+    s2 = s1.update(D[200:], b[200:])          # same block again
+    assert s2.fingerprint != s0.fingerprint
+    assert s2.fingerprint != s1.fingerprint
+
+
+def test_stats_is_a_pytree():
+    D, b = _data()
+    s = SufficientStats.from_data(D, b)
+    doubled = jax.tree_util.tree_map(lambda x: 2 * x, s)
+    assert isinstance(doubled, SufficientStats)
+    np.testing.assert_allclose(doubled.G, 2 * np.asarray(s.G), rtol=1e-6)
+    assert doubled.fingerprint == s.fingerprint
+
+
+def test_stats_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    D, b = _data()
+    s = SufficientStats.from_data(D, b)
+    mgr = CheckpointManager(str(tmp_path))
+    s.save(mgr, step=0)
+    r = SufficientStats.restore(mgr, n=16)
+    np.testing.assert_array_equal(np.asarray(r.G), np.asarray(s.G))
+    np.testing.assert_array_equal(np.asarray(r.c), np.asarray(s.c))
+    assert (r.rows, r.fingerprint) == (s.rows, s.fingerprint)
+
+
+# ---------------------------------------------------------------------------
+# Cholesky rank-k up/downdate
+# ---------------------------------------------------------------------------
+
+def test_rank_k_update_matches_fresh_factorization():
+    D, _ = _data()
+    G = np.asarray(D.T @ D)
+    L = gram_lib.gram_factor(jnp.asarray(G), ridge=0.1)
+    B = jnp.asarray(np.random.default_rng(1).standard_normal((5, 16)),
+                    jnp.float32)
+    L_up = chol_update(L, B)
+    L_fresh = gram_lib.gram_factor(jnp.asarray(G) + B.T @ B, ridge=0.1)
+    np.testing.assert_allclose(np.asarray(L_up), np.asarray(L_fresh),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rank_k_downdate_matches_fresh_factorization():
+    D, _ = _data()
+    B = D[:5]
+    G_full = np.asarray(D.T @ D)
+    L_full = gram_lib.gram_factor(jnp.asarray(G_full), ridge=0.1)
+    L_down = chol_downdate(L_full, B)
+    L_fresh = gram_lib.gram_factor(
+        jnp.asarray(G_full) - B.T @ B, ridge=0.1)
+    np.testing.assert_allclose(np.asarray(L_down), np.asarray(L_fresh),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rank_1_vector_block():
+    D, _ = _data()
+    G = jnp.asarray(np.asarray(D.T @ D))
+    L = gram_lib.gram_factor(G, ridge=1.0)
+    v = D[0]                                   # 1-D block
+    L_up = chol_update(L, v)
+    L_fresh = gram_lib.gram_factor(G + jnp.outer(v, v), ridge=1.0)
+    np.testing.assert_allclose(np.asarray(L_up), np.asarray(L_fresh),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Registry: one entry point, >= 7 problems, unchanged dispatch semantics
+# ---------------------------------------------------------------------------
+
+def test_registry_exposes_at_least_seven_problems():
+    assert len(registry.problems()) >= 7
+    for p in ("lasso", "logistic", "svm", "sparse_logistic", "ridge",
+              "elastic_net", "huber", "nnls"):
+        assert p in registry.problems(), p
+
+
+def test_registry_rejects_unknown_combo():
+    D = jnp.zeros((1, 4, 2))
+    with pytest.raises(ValueError, match="registered problems"):
+        fit("quantile", D, jnp.zeros((1, 4)))
+    with pytest.raises(ValueError, match="methods"):
+        fit("ridge", D, jnp.zeros((1, 4)), method="consensus")
+
+
+def test_ridge_matches_normal_equations():
+    D, b = _data()
+    r = fit("ridge", D.reshape(4, 75, 16), b.reshape(4, 75), mu=2.0)
+    x_ref = np.linalg.solve(np.asarray(D.T @ D) + 2.0 * np.eye(16),
+                            np.asarray(D.T @ b))
+    np.testing.assert_allclose(np.asarray(r.x), x_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_elastic_net_reduces_to_lasso_at_zero_l2():
+    lp = lasso_problem(jax.random.PRNGKey(0), N=4, m_per_node=100, n=12)
+    r_en = fit("elastic_net", lp.D, lp.b, mu=float(lp.mu), l2=0.0,
+               iters=1500)
+    r_la = fit("lasso", lp.D, lp.b, mu=float(lp.mu), iters=1500)
+    np.testing.assert_allclose(np.asarray(r_en.x), np.asarray(r_la.x),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_nnls_is_nonnegative_and_kkt():
+    D, b = _data()
+    r = fit("nnls", D.reshape(4, 75, 16), b.reshape(4, 75), iters=2000)
+    x = np.asarray(r.x)
+    assert (x >= 0).all()
+    # KKT: gradient >= 0 where x == 0, ~0 where x > 0
+    g = np.asarray(D.T @ D) @ x - np.asarray(D.T @ b)
+    assert g[x > 1e-6].max(initial=-np.inf) < 1e-2
+    assert g[x <= 1e-6].min(initial=np.inf) > -1e-2
+
+
+def test_huber_tracks_least_squares_for_large_delta():
+    D, b = _data()
+    r = fit("huber", D.reshape(4, 75, 16), b.reshape(4, 75), delta=100.0,
+            iters=400)
+    x_ls = np.linalg.lstsq(np.asarray(D), np.asarray(b), rcond=None)[0]
+    np.testing.assert_allclose(np.asarray(r.x), x_ls, rtol=5e-2, atol=5e-3)
+
+
+def test_warm_start_resumes_at_solution():
+    """x0 is honoured: restarting from the solution stays at the solution."""
+    D, b = _data()
+    Dn, bn = D.reshape(4, 75, 16), b.reshape(4, 75)
+    r1 = fit("huber", Dn, bn, delta=1.0, iters=300)
+    r2 = fit("huber", Dn, bn, delta=1.0, iters=20, x0=r1.x)
+    cold = fit("huber", Dn, bn, delta=1.0, iters=20)
+    h1 = float(r1.objective_history[-1])
+    assert float(r2.objective_history[0]) < float(cold.objective_history[0])
+    assert abs(float(r2.objective_history[-1]) - h1) < 1e-2 * abs(h1)
+
+
+# ---------------------------------------------------------------------------
+# Batched solving
+# ---------------------------------------------------------------------------
+
+def test_batched_multi_rhs_matches_per_request():
+    D, _ = _data()
+    rng = np.random.default_rng(2)
+    B = jnp.asarray(rng.standard_normal((300, 8)), jnp.float32)
+    G = D.T @ D
+    L = gram_lib.gram_factor(G, ridge=1.0)
+    C = rhs_chunked(D, B)                       # (n, 8)
+    X = batched_gram_solve(L, C.T)              # (8, n)
+    for j in range(8):
+        x_j = gram_lib.gram_solve(L, D.T @ B[:, j])
+        np.testing.assert_allclose(np.asarray(X[j]), np.asarray(x_j),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_batched_lasso_matches_per_mu():
+    lp = lasso_problem(jax.random.PRNGKey(1), N=4, m_per_node=100, n=12)
+    Dflat = lp.D.reshape(-1, 12)
+    G, c = gram_lib.gram_and_rhs_chunked(Dflat, lp.b.reshape(-1))
+    mus = jnp.asarray([0.5, 2.0, 8.0]) * float(lp.mu) / 4.0
+    X = lasso_mu_path(G, c, mus, iters=800)
+    from repro.core.fasta import transpose_reduction_lasso
+    for j, mu in enumerate(np.asarray(mus)):
+        x_j = transpose_reduction_lasso(G, c, float(mu), iters=800).x
+        np.testing.assert_allclose(np.asarray(X[j]), np.asarray(x_j),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_batched_nnls_lanes():
+    D, _ = _data()
+    rng = np.random.default_rng(3)
+    C = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+    G = D.T @ D
+    X, _ = batched_quad_prox(G, C, jnp.zeros((4,)), kind="nnls", iters=500)
+    assert (np.asarray(X) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# FitServer: cache contract + coalescing
+# ---------------------------------------------------------------------------
+
+def test_server_warm_fit_skips_gram_pass():
+    D, b = _data()
+    srv = FitServer(window=1)
+    fp = srv.register_dataset(D, b)
+    assert srv.counters.gram_passes == 1
+    r1 = srv.serve([FitRequest(problem="ridge", fingerprint=fp, mu=1.0)])
+    assert srv.counters.gram_passes == 1        # no recompute on first fit
+    r2 = srv.serve([FitRequest(problem="ridge", fingerprint=fp, mu=1.0)])
+    assert srv.counters.gram_passes == 1        # ...nor on the warm fit
+    assert srv.counters.factorizations == 1     # factor cached too
+    assert srv.counters.factor_cache_hits >= 1
+    np.testing.assert_allclose(r1[0].x, r2[0].x, rtol=1e-6)
+
+
+def test_server_batched_solve_matches_single_solves():
+    D, b = _data()
+    rng = np.random.default_rng(4)
+    B = rng.standard_normal((300, 6)).astype(np.float32)
+    srv = FitServer(window=6)
+    fp = srv.register_dataset(D)
+    reqs = [FitRequest(problem="ridge", fingerprint=fp, b=B[:, j], mu=1.0)
+            for j in range(6)]
+    resp = srv.serve(reqs)
+    assert len(resp) == 6 and resp[0].batch_size == 6
+    L = gram_lib.gram_factor(D.T @ D, ridge=1.0)
+    for j, r in enumerate(sorted(resp, key=lambda r: r.request_id)):
+        x_ref = gram_lib.gram_solve(L, D.T @ jnp.asarray(B[:, j]))
+        np.testing.assert_allclose(r.x, np.asarray(x_ref), rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_server_lasso_group_vmaps_over_mu():
+    lp = lasso_problem(jax.random.PRNGKey(2), N=4, m_per_node=100, n=12)
+    srv = FitServer(window=3)
+    fp = srv.register_dataset(lp.D, lp.b)
+    mus = [float(lp.mu) * s for s in (0.2, 0.5, 1.0)]
+    resp = srv.serve([FitRequest(problem="lasso", fingerprint=fp, mu=mu,
+                                 iters=800) for mu in mus])
+    assert len(resp) == 3 and resp[0].batch_size == 3
+    assert srv.counters.gram_passes == 1
+    for mu, r in zip(mus, sorted(resp, key=lambda r: r.request_id)):
+        ref = fit("lasso", lp.D, lp.b, mu=mu, iters=800)
+        np.testing.assert_allclose(r.x, np.asarray(ref.x), rtol=1e-3,
+                                   atol=1e-4)
+
+
+def test_server_ingest_updates_factor_in_place():
+    D, b = _data()
+    srv = FitServer(window=1)
+    fp = srv.register_dataset(D[:250], b[:250])
+    srv.serve([FitRequest(problem="ridge", fingerprint=fp, mu=1.0)])
+    assert srv.counters.factorizations == 1
+    fp2 = srv.ingest_block(fp, D[250:], b[250:])
+    assert fp2 != fp
+    assert srv.counters.factor_updates == 1     # rank-k, not refactorized
+    r = srv.serve([FitRequest(problem="ridge", fingerprint=fp2, mu=1.0)])
+    assert srv.counters.factorizations == 1     # still the one factorization
+    x_ref = np.linalg.solve(np.asarray(D.T @ D) + np.eye(16),
+                            np.asarray(D.T @ b))
+    np.testing.assert_allclose(r[0].x, x_ref, rtol=1e-3, atol=1e-3)
+
+
+def test_server_full_solve_fallback():
+    rng = np.random.default_rng(5)
+    D = jnp.asarray(rng.standard_normal((200, 8)), jnp.float32)
+    labels = jnp.sign(D @ jnp.ones((8,)) + 0.1)
+    srv = FitServer(window=1)
+    fp = srv.register_dataset(D)
+    resp = srv.serve([FitRequest(problem="logistic", fingerprint=fp,
+                                 b=np.asarray(labels), iters=100)])
+    assert resp[0].from_cache is False
+    assert srv.counters.full_solves == 1
+    acc = np.mean(np.sign(np.asarray(D) @ resp[0].x) == np.asarray(labels))
+    assert acc > 0.9
+
+
+def test_server_rejects_l1_requests_without_mu():
+    D, b = _data()
+    srv = FitServer(window=1)
+    fp = srv.register_dataset(D, b)
+    with pytest.raises(ValueError, match="no mu"):
+        srv.serve([FitRequest(problem="lasso", fingerprint=fp)])
+
+
+def test_server_full_solve_reuses_registered_labels():
+    rng = np.random.default_rng(6)
+    D = jnp.asarray(rng.standard_normal((200, 8)), jnp.float32)
+    labels = jnp.sign(D @ jnp.ones((8,)) + 0.1)
+    srv = FitServer(window=1)
+    fp = srv.register_dataset(D, labels)
+    resp = srv.serve([FitRequest(problem="logistic", fingerprint=fp,
+                                 iters=100)])          # b=None: reuse
+    acc = np.mean(np.sign(np.asarray(D) @ resp[0].x) == np.asarray(labels))
+    assert acc > 0.9
+
+
+def test_server_unlabeled_ingest_invalidates_registered_rhs():
+    """An unlabeled block grows G but not c: serving the stale c would
+    silently mix new-rows Gram with old-rows rhs."""
+    D, b = _data()
+    srv = FitServer(window=1)
+    fp = srv.register_dataset(D[:250], b[:250])
+    fp2 = srv.ingest_block(fp, D[250:])          # no labels for the block
+    with pytest.raises(ValueError, match="none was registered"):
+        srv.serve([FitRequest(problem="ridge", fingerprint=fp2, mu=1.0)])
+    # fresh-b requests still work: G is consistent, only c went stale
+    resp = srv.serve([FitRequest(problem="ridge", fingerprint=fp2,
+                                 b=np.asarray(b), mu=1.0)])
+    x_ref = np.linalg.solve(np.asarray(D.T @ D) + np.eye(16),
+                            np.asarray(D.T @ b))
+    np.testing.assert_allclose(resp[0].x, x_ref, rtol=1e-3, atol=1e-3)
+
+
+def test_register_stats_gates_rhs_on_full_labeling():
+    """Partially-labeled stats (G covers more rows than c) adopted on a
+    replica must refuse b=None solves — fully_labeled travels with the
+    stats, not with the server that built them."""
+    D, b = _data()
+    partial = SufficientStats.zero(16).update(D[:200]).update(
+        D[200:], b[200:])                       # only the tail is labeled
+    assert not partial.fully_labeled
+    srv = FitServer(window=1)
+    fp = srv.register_stats(partial)
+    with pytest.raises(ValueError, match="none was registered"):
+        srv.serve([FitRequest(problem="ridge", fingerprint=fp, mu=1.0)])
+    full = SufficientStats.from_data(D, b)
+    assert full.fully_labeled
+    fp2 = srv.register_stats(full)
+    assert len(srv.serve([FitRequest(problem="ridge", fingerprint=fp2,
+                                     mu=1.0)])) == 1
+
+
+def test_multi_rhs_stats_single_pass():
+    """from_data with stacked (m, r) rhs matches per-column reductions."""
+    D, _ = _data()
+    rng = np.random.default_rng(7)
+    B = jnp.asarray(rng.standard_normal((300, 3)), jnp.float32)
+    s = SufficientStats.from_data(D, B)
+    assert s.c.shape == (16, 3)
+    np.testing.assert_allclose(np.asarray(s.c), np.asarray(D.T @ B),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_register_dataset_keeps_stacked_rhs_2d():
+    """(m, r) stacked right-hand sides must not be flattened against D."""
+    D, _ = _data()
+    rng = np.random.default_rng(8)
+    B = jnp.asarray(rng.standard_normal((300, 2)), jnp.float32)
+    srv = FitServer(window=1)
+    fp = srv.register_dataset(D, B)
+    assert srv.stats_for(fp).c.shape == (16, 2)
+    np.testing.assert_allclose(np.asarray(srv.stats_for(fp).c),
+                               np.asarray(D.T @ B), rtol=1e-4, atol=1e-3)
+    # a stacked c is not a reusable single rhs
+    with pytest.raises(ValueError, match="none was registered"):
+        srv.serve([FitRequest(problem="ridge", fingerprint=fp, mu=1.0)])
+    with pytest.raises(ValueError, match="rows"):
+        srv.register_dataset(D, jnp.zeros((7,)))
+
+
+def test_lasso_honours_l2_as_elastic_net():
+    lp = lasso_problem(jax.random.PRNGKey(3), N=4, m_per_node=100, n=12)
+    r_l = fit("lasso", lp.D, lp.b, mu=float(lp.mu), l2=0.7, iters=1200)
+    r_e = fit("elastic_net", lp.D, lp.b, mu=float(lp.mu), l2=0.7,
+              iters=1200)
+    np.testing.assert_allclose(np.asarray(r_l.x), np.asarray(r_e.x),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_batched_quad_prox_unknown_kind():
+    G = jnp.eye(4)
+    with pytest.raises(ValueError, match="no gram solver"):
+        batched_quad_prox(G, jnp.zeros((2, 4)), jnp.zeros((2,)),
+                          kind="quantile")
+
+
+def test_server_lru_eviction():
+    D, b = _data()
+    srv = FitServer(window=1, factor_cache_size=2)
+    fp = srv.register_dataset(D, b)
+    for mu in (1.0, 2.0, 3.0):                  # 3 factors, capacity 2
+        srv.serve([FitRequest(problem="ridge", fingerprint=fp, mu=mu)])
+    assert srv.counters.factorizations == 3
+    assert len(srv._factors) == 2
+    srv.serve([FitRequest(problem="ridge", fingerprint=fp, mu=1.0)])
+    assert srv.counters.factorizations == 4     # mu=1.0 was evicted
