@@ -1,0 +1,143 @@
+"""Engine backend benchmark — us/iter for the solver hot path (§Perf).
+
+Times one donated engine step (x-solve + fused iteration body) per backend
+at several (m, n) points and, when ``JSON_PATH`` is set (``run.py --json``),
+writes ``BENCH_engine.json`` so CI can track the perf trajectory:
+
+  * ``reference``       — textbook two-pass jnp body (Dx pass + D^T pass);
+  * ``chunked``         — the engine's fused one-pass lax.scan stream;
+  * ``chunked+bf16``    — same with bf16 data residency (informational on
+                          CPU, where bf16 is emulated; the HBM-bytes win
+                          is a TPU property — DESIGN.md §8);
+  * ``pallas_interpret``— the fused TPU kernel under the interpreter at
+                          the smallest point only (a numerics check with a
+                          timing column, NOT a perf claim: the interpreter
+                          is orders of magnitude slower than real TPU).
+
+The JSON also records a reference-vs-pallas-interpret parity check so the
+kernels cannot silently rot on CPU-only runners.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gram as gram_lib
+from repro.core.prox import make_logistic
+from repro.engine import IterationEngine
+
+JSON_PATH = None          # set by benchmarks.run when --json is given
+
+TAU = 0.1
+WARMUP = 2
+
+
+def _problem(m, n, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    D = jax.random.normal(ks[0], (m, n), jnp.float32)
+    aux = jnp.sign(jax.random.normal(ks[1], (m,)))
+    return D, aux
+
+
+def _engine(backend, residency=None):
+    return IterationEngine(loss=make_logistic(), tau=TAU, backend=backend,
+                           residency=residency)
+
+
+def _time_step(eng, D, aux, L, iters):
+    m, n = D.shape
+    step = eng.make_step(D, aux, L)
+    y = jnp.zeros((m,))
+    lam = jnp.zeros((m,))
+    d = jnp.zeros((n,))
+    for _ in range(WARMUP):
+        y, lam, d, _ = step(y, lam, d)
+    jax.block_until_ready((y, lam, d))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        y, lam, d, x = step(y, lam, d)
+    jax.block_until_ready((y, lam, d))
+    return (time.perf_counter() - t0) / iters * 1e6, x
+
+
+def _parity_check(m=2048, n=128):
+    """reference vs pallas-interpret on one fused step from a random state."""
+    D, aux = _problem(m, n, seed=1)
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    y = jax.random.normal(ks[0], (m,))
+    lam = jax.random.normal(ks[1], (m,))
+    x = jax.random.normal(ks[2], (n,)) * 0.1
+    ref = _engine("reference").iterate(D, aux, y, lam, x)
+    pal = _engine("pallas_interpret").iterate(D, aux, y, lam, x)
+    scale = float(jnp.max(jnp.abs(ref.d))) or 1.0
+    err = max(
+        float(jnp.max(jnp.abs(ref.y - pal.y))),
+        float(jnp.max(jnp.abs(ref.lam - pal.lam))),
+        float(jnp.max(jnp.abs(ref.d - pal.d))) / scale,
+    )
+    return {"max_abs_or_rel_err": err, "matches": err < 1e-4}
+
+
+def run(rows, quick: bool = False):
+    points = [(8192, 128), (16384, 256)] if quick else [
+        (16384, 256), (1 << 17, 512)]
+    iters = 4 if quick else 6
+    records = []
+    for (m, n) in points:
+        D, aux = _problem(m, n)
+        G, _ = _engine("chunked").gram(D)
+        L = gram_lib.gram_factor(G)
+        ref_us = None
+        variants = [("reference", None), ("chunked", None),
+                    ("chunked", "bf16")]
+        if (m, n) == points[0]:
+            variants.append(("pallas_interpret", None))
+        for backend, residency in variants:
+            bench_iters = 1 if backend == "pallas_interpret" else iters
+            us, _ = _time_step(_engine(backend, residency), D, aux, L,
+                               bench_iters)
+            if backend == "reference":
+                ref_us = us
+            label = backend + ("+bf16" if residency else "")
+            speed = ref_us / us if ref_us else float("nan")
+            records.append({
+                "m": m, "n": n, "dtype": "float32", "backend": backend,
+                "residency": residency, "us_per_iter": round(us, 1),
+                "speedup_vs_reference": round(speed, 3),
+            })
+            rows.append(f"engine_m{m}_n{n}_{label},{us:.1f},"
+                        f"x{speed:.2f}_vs_reference")
+
+    check = _parity_check()
+    rows.append("engine_pallas_interpret_parity,0,"
+                + ("ok" if check["matches"] else "MISMATCH"))
+
+    if JSON_PATH:
+        target = next((r for r in records
+                       if r["m"] == 1 << 17 and r["n"] == 512
+                       and r["backend"] == "chunked"
+                       and r["residency"] is None), None)
+        payload = {
+            "generated_by": "benchmarks/engine_bench.py",
+            "device": jax.devices()[0].device_kind,
+            "backend_platform": jax.default_backend(),
+            "quick": quick,
+            "points": records,
+            "pallas_interpret_check": check,
+            "acceptance": {
+                "criterion": "chunked >= 1.5x reference us/iter at "
+                             "(m=2^17, n=512), CPU",
+                "measured_speedup": (target or {}).get(
+                    "speedup_vs_reference"),
+                # null (not false) when the quick sweep skips the big point
+                "pass": (target["speedup_vs_reference"] >= 1.5
+                         if target else None),
+            },
+        }
+        with open(JSON_PATH, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")

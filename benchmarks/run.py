@@ -1,8 +1,12 @@
 """Benchmark harness — one module per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,...]``
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,...]
+[--json [PATH]]``
 
 Prints ``name,us_per_call,derived`` CSV rows (one per measured cell).
+``--json`` additionally makes the engine benchmark write its machine-
+readable result (default ``BENCH_engine.json``) so CI can diff the perf
+trajectory run over run.
 """
 from __future__ import annotations
 
@@ -17,6 +21,7 @@ MODULES = {
     "appendix": "benchmarks.appendix_tables", # Appendix B sweeps
     "tau": "benchmarks.tau_calibration",      # §9 tuning protocol
     "roofline": "benchmarks.roofline_report", # §Roofline collation
+    "engine": "benchmarks.engine_bench",      # iteration-engine backends
 }
 
 
@@ -26,8 +31,19 @@ def main(argv=None) -> None:
                     help="reduced sizes (CI-friendly)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset of: " + ",".join(MODULES))
+    ap.add_argument("--json", nargs="?", const="BENCH_engine.json",
+                    default=None, metavar="PATH",
+                    help="write the engine benchmark's JSON result "
+                         "(default %(const)s); implies the engine module")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero if any module FAILED or reported a "
+                         "parity MISMATCH (CI mode)")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else set(MODULES)
+    if args.json:
+        from benchmarks import engine_bench
+        engine_bench.JSON_PATH = args.json
+        only.add("engine")
 
     rows = ["name,us_per_call,derived"]
     for key, modname in MODULES.items():
@@ -41,6 +57,9 @@ def main(argv=None) -> None:
         except Exception as e:  # keep the harness going, report the failure
             rows.append(f"{key}_total,0,FAILED:{type(e).__name__}:{e}")
     print("\n".join(rows))
+    if args.strict and any(",FAILED:" in r or r.endswith(",MISMATCH")
+                           for r in rows):
+        sys.exit(1)
 
 
 if __name__ == "__main__":

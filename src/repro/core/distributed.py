@@ -92,6 +92,10 @@ class DistributedUnwrappedADMM:
       data_axes: mesh axis names the rows of D are sharded over.
       compress: int8 error-feedback compression of the per-iteration psum.
       inner_iters: prox-gradient iterations for the composite x-update.
+      backend / residency: iteration-engine knobs (DESIGN.md §8); the
+        engine body runs PER SHARD inside shard_map — the fused one-pass
+        kernel streams the local rows, then only the n-vector d crosses
+        the network, composing with the int8-compressed reduction.
     """
 
     loss: ProxLoss
@@ -101,6 +105,16 @@ class DistributedUnwrappedADMM:
     data_axes: Tuple[str, ...] = ("data",)
     compress: bool = False
     inner_iters: int = 25
+    backend: str = "auto"
+    residency: Optional[str] = None
+
+    @property
+    def engine(self):
+        # Lazy for the same circular-import reason as UnwrappedADMM.engine.
+        from repro.engine import IterationEngine
+        return IterationEngine(loss=self.loss, tau=self.tau,
+                               backend=self.backend,
+                               residency=self.residency)
 
     # -- inner composite x-update: argmin mu|x| + tau/2 (x'Gx - 2 d'x) -------
     def _composite_x(self, G: Array, lmax: Array, d: Array, x_warm: Array):
@@ -125,10 +139,12 @@ class DistributedUnwrappedADMM:
             nshards *= mesh.shape[a]
         assert m_global % nshards == 0
 
+        eng = self.engine
+
         def local_fn(D_loc: Array, aux_loc: Array):
             acc = gram_lib._acc_dtype(D_loc.dtype)
             # -- setup: Gram psum + replicated factor (Alg.2 lines 2-3) --
-            G = gram_lib.gram_chunked(D_loc, block_rows=1024)
+            G, _ = eng.gram(D_loc)
             G = jax.lax.psum(G, axes)
             ridge = self.rho / self.tau
             use_chol = self.l1_mu == 0.0
@@ -148,14 +164,18 @@ class DistributedUnwrappedADMM:
                 lmax = jnp.vdot(v, G @ v)
 
             m_loc = D_loc.shape[0]
+            D_res = eng.prepare(D_loc)
             y = jnp.zeros((m_loc,), acc)
             lam = jnp.zeros((m_loc,), acc)
             err = jnp.zeros((n,), jnp.float32)
             x0 = jnp.zeros((n,), acc)
+            # d_loc = D^T(y - lam) rides the carry: the engine's fused body
+            # emits the NEXT iteration's reduction in the same data pass
+            # that applies the prox (cold start: y = lam = 0 -> d_loc = 0).
+            d0 = jnp.zeros((n,), acc)
 
             def body(carry, _):
-                y, lam, err, x_prev = carry
-                d_loc = D_loc.astype(acc).T @ (y - lam)
+                y, lam, err, x_prev, d_loc = carry
                 if self.compress:
                     d, err = compressed_psum(d_loc, axes, err)
                 else:
@@ -164,21 +184,22 @@ class DistributedUnwrappedADMM:
                     x = gram_lib.gram_solve(L, d)
                 else:
                     x = self._composite_x(G, lmax, d, x_prev)
-                Dx = D_loc.astype(acc) @ x
-                y_new = self.loss.prox(Dx + lam, 1.0 / self.tau, aux_loc)
-                lam_new = lam + Dx - y_new
+                # ONE streaming pass over the local shard (Alg. 2 lines 5-8
+                # + line 6's reduction input, fused — DESIGN.md §8).
+                st = eng.iterate(D_res, aux_loc, y, lam, x, want_dual=False)
+                Dx = st.lam - lam + st.y
                 # telemetry (global reductions of scalars)
-                r_sq = jax.lax.psum(jnp.sum((Dx - y_new) ** 2), axes)
-                obj_loc = self.loss.value(y_new, aux_loc)
+                r_sq = jax.lax.psum(jnp.sum((Dx - st.y) ** 2), axes)
+                obj_loc = self.loss.value(st.y, aux_loc)
                 obj = jax.lax.psum(obj_loc, axes)
                 if self.rho:
                     obj = obj + 0.5 * self.rho * jnp.sum(x * x)
                 if self.l1_mu:
                     obj = obj + self.l1_mu * jnp.sum(jnp.abs(x))
-                return (y_new, lam_new, err, x), (obj, jnp.sqrt(r_sq))
+                return (st.y, st.lam, err, x, st.d), (obj, jnp.sqrt(r_sq))
 
-            (y, lam, err, x), hist = jax.lax.scan(
-                body, (y, lam, err, x0), None, length=iters
+            (y, lam, err, x, _), hist = jax.lax.scan(
+                body, (y, lam, err, x0, d0), None, length=iters
             )
             return x, hist[0], hist[1]
 

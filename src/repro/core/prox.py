@@ -31,6 +31,14 @@ class ProxLoss:
       prox: ``prox(z, delta, aux) -> y`` with delta the prox weight (tau^-1).
       grad: coordinate-wise gradient (None for non-smooth terms).
       lipschitz: Lipschitz constant of grad (paper: logistic = 1/4).
+      coordinatewise: True when prox acts per-coordinate with per-row aux —
+        the property the iteration engine needs to stream arbitrary row
+        blocks (DESIGN.md §8). StackedProx is position-dependent and sets
+        this False, forcing the reference backend.
+      kernel_delta_scale: the Pallas prox kernel evaluates the BARE map for
+        ``name`` at a static delta; losses that fold a weight into their
+        prox (hinge absorbs C: prox_{C h}(z, d) = prox_h(z, C d)) record it
+        here so the engine passes delta * scale to the kernel.
     """
 
     name: str
@@ -38,6 +46,8 @@ class ProxLoss:
     prox: Callable[[Array, Array, Optional[Array]], Array]
     grad: Optional[Callable[[Array, Optional[Array]], Array]] = None
     lipschitz: Optional[float] = None
+    coordinatewise: bool = True
+    kernel_delta_scale: float = 1.0
 
 
 # ---------------------------------------------------------------------------
@@ -135,7 +145,8 @@ def make_hinge(C: float = 1.0) -> ProxLoss:
     def prox(z, delta, aux):
         return hinge_prox(z, C * delta, aux)
 
-    return ProxLoss("hinge", value, prox, grad=None, lipschitz=None)
+    return ProxLoss("hinge", value, prox, grad=None, lipschitz=None,
+                    kernel_delta_scale=C)
 
 
 def make_l1(mu: float) -> ProxLoss:
@@ -147,7 +158,8 @@ def make_l1(mu: float) -> ProxLoss:
     def prox(z, delta, aux):
         return soft_threshold(z, mu * delta)
 
-    return ProxLoss("l1", value, prox, grad=None, lipschitz=None)
+    return ProxLoss("l1", value, prox, grad=None, lipschitz=None,
+                    kernel_delta_scale=mu)
 
 
 def make_least_squares() -> ProxLoss:
@@ -266,7 +278,10 @@ class StackedProx:
         )
 
     def as_loss(self, name: str = "stacked") -> ProxLoss:
-        return ProxLoss(name, self.value, self.prox, grad=None, lipschitz=None)
+        # Position-dependent prox: row k's map depends on which block k
+        # falls in, so the engine may not stream arbitrary row chunks.
+        return ProxLoss(name, self.value, self.prox, grad=None,
+                        lipschitz=None, coordinatewise=False)
 
 
 LOSSES = {

@@ -12,10 +12,21 @@ The x-update is the transpose-reduction step: only ``d = sum_i D_i^T(y_i -
 lam_i)`` crosses the network (an n-vector), and the n x n Gram factor is
 computed once at setup from ``sum_i D_i^T D_i`` (paper Alg. 2 lines 2-3).
 
+The per-iteration body lives in :mod:`repro.engine` (DESIGN.md §8): the
+drivers here carry ``(y, lam, d = D^T(y-lam), x)`` and call
+``engine.iterate`` once per iteration — ONE streaming pass over D instead
+of the textbook two (d-reduction pass + Dx pass). The engine accumulates
+the stopping-rule reductions w = D^T(y^{k+1}-y^k) and v = D^T lam^{k+1}
+in the same stream, and the remaining residual quantities are elementwise:
+
+    Dx  = lam^{k+1} - lam^k + y^{k+1}
+    r   = ||Dx - y^{k+1}|| = ||lam^{k+1} - lam^k||
+    s   = tau ||w||,   eps_dual ~ tau ||v||
+
 Data layout: ``D`` is ``(N, m_i, n)`` — N nodes, m_i rows each. N=1 recovers
 the single-node Alg. 1. This module is the *reference semantics*; the
-multi-device version (``repro.core.distributed``) runs the same math under
-``shard_map`` with a psum where this module sums over the node axis.
+multi-device version (``repro.core.distributed``) runs the same engine body
+per shard under ``shard_map`` with a psum where this module sums over rows.
 """
 from __future__ import annotations
 
@@ -52,61 +63,92 @@ class ADMMResult(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class UnwrappedADMM:
-    """Configured solver. ``loss`` acts on y with per-row aux (labels / b)."""
+    """Configured solver. ``loss`` acts on y with per-row aux (labels / b).
+
+    ``backend`` / ``residency`` select the engine hot path (DESIGN.md §8):
+    "auto" picks the fused Pallas kernel on TPU and the chunked lax.scan
+    stream elsewhere; ``residency="bf16"`` keeps the iteration copy of D in
+    bf16 (f32 accumulation) to halve the per-iteration HBM bytes again.
+    """
 
     loss: ProxLoss
     tau: float = 1.0
     rho: float = 0.0              # ridge g(x) = rho/2 ||x||^2 (SVM: rho=1)
     eps_rel: float = 1e-3         # paper §9 stopping constants
     eps_abs: float = 1e-6
-    gram_block_rows: int = 1024
+    gram_block_rows: Optional[int] = None   # None -> engine autotune;
+                                            # set to bound setup memory
+    backend: str = "auto"         # engine backend (reference | chunked |
+                                  # pallas | pallas_interpret | auto)
+    residency: Optional[str] = None   # None | "bf16" iteration data dtype
+
+    @property
+    def engine(self):
+        # Imported lazily: repro.engine imports repro.core.gram, whose
+        # package __init__ imports this module — a module-level import
+        # here would be circular.
+        from repro.engine import IterationEngine
+        return IterationEngine(loss=self.loss, tau=self.tau,
+                               backend=self.backend,
+                               residency=self.residency)
 
     # -- setup (Alg. 2 lines 2-3): one Gram all-reduce + one factorization --
     def setup(self, D: Array) -> Array:
         N, mi, n = D.shape
-        G = jax.vmap(lambda Di: gram_lib.gram_chunked(Di, self.gram_block_rows))(
-            D
-        ).sum(axis=0)
+        G, _ = self.engine.gram(D.reshape(N * mi, n),
+                                block_rows=self.gram_block_rows)
         ridge = self.rho / self.tau
         return gram_lib.gram_factor(G, ridge=ridge)
 
-    # -- one iteration (Alg. 2 lines 5-8) --
-    def step(self, L: Array, D: Array, aux: Array, y: Array, lam: Array):
-        acc = y.dtype
-        # All nodes: d_i = D_i^T (y_i - lam_i); central: x = W sum_i d_i.
-        d = jnp.einsum("imn,im->n", D.astype(acc), y - lam)
+    # -- one iteration (Alg. 2 lines 5-8), reference-shaped API -------------
+    def step(self, L: Array, D: Array, aux: Optional[Array], y: Array,
+             lam: Array):
+        """Single step on node-stacked arrays — the oracle surface kernel
+        tests compare against; the drivers below inline the same engine
+        body around a carried ``d`` instead of recomputing it."""
+        N, mi, n = D.shape
+        eng = self.engine
+        Dflat = D.reshape(N * mi, n)
+        d = eng.transpose_d(Dflat, y.reshape(-1), lam.reshape(-1))
         x = gram_lib.gram_solve(L, d)
-        Dx = jnp.einsum("imn,n->im", D.astype(acc), x)
-        y_new = self.loss.prox(Dx + lam, 1.0 / self.tau, aux)
-        lam_new = lam + Dx - y_new
-        return x, Dx, y_new, lam_new
+        st = eng.iterate(Dflat, aux.reshape(-1) if aux is not None else None,
+                         y.reshape(-1), lam.reshape(-1), x, want_dual=False)
+        Dx = st.lam - lam.reshape(-1) + st.y
+        return (x, Dx.reshape(N, mi), st.y.reshape(N, mi),
+                st.lam.reshape(N, mi))
 
-    def _residuals(self, D, Dx, y_new, y_old, lam_new):
-        acc = y_new.dtype
-        r = jnp.linalg.norm((Dx - y_new).ravel())
-        s = self.tau * jnp.linalg.norm(
-            jnp.einsum("imn,im->n", D.astype(acc), y_new - y_old)
-        )
-        return r, s
-
-    def _tolerances(self, D, Dx, y, lam):
-        acc = y.dtype
-        m = Dx.size
-        n = D.shape[-1]
-        eps_pri = jnp.sqrt(m) * self.eps_abs + self.eps_rel * jnp.maximum(
-            jnp.linalg.norm(Dx.ravel()), jnp.linalg.norm(y.ravel())
-        )
-        dual_vec = self.tau * jnp.einsum("imn,im->n", D.astype(acc), lam)
-        eps_dual = jnp.sqrt(n) * self.eps_abs + self.eps_rel * jnp.linalg.norm(
-            dual_vec
-        )
-        return eps_pri, eps_dual
-
-    def _objective(self, x, Dx, aux):
-        obj = self.loss.value(Dx.ravel(), aux.ravel() if aux is not None else None)
+    def _objective(self, x, Dx, aux_flat):
+        obj = self.loss.value(Dx, aux_flat)
         if self.rho:
             obj = obj + 0.5 * self.rho * jnp.sum(x * x)
         return obj
+
+    def _residuals_tolerances(self, st, lam, m, n):
+        """All of Boyd's stopping quantities from the engine's same-pass
+        reductions — no extra pass over D (module docstring identities)."""
+        Dx = st.lam - lam + st.y
+        r = jnp.linalg.norm(st.lam - lam)                 # ||Dx - y_new||
+        s = self.tau * jnp.linalg.norm(st.w)
+        eps_pri = jnp.sqrt(m) * self.eps_abs + self.eps_rel * jnp.maximum(
+            jnp.linalg.norm(Dx), jnp.linalg.norm(st.y))
+        eps_dual = jnp.sqrt(n * 1.0) * self.eps_abs + (
+            self.eps_rel * self.tau * jnp.linalg.norm(st.v))
+        return Dx, r, s, eps_pri, eps_dual
+
+    def _init_state(self, Dflat, x0, m, n, acc):
+        if x0 is not None:
+            # Warm start (the serving layer's repeated solves): seed the
+            # split variable at y = D x0, so the first x-update returns
+            # (D^T D + rI)^{-1} D^T D x0 — exactly x0 when rho = 0. One
+            # extra setup-time pass builds the carried reduction.
+            y = Dflat.astype(acc) @ x0.astype(acc)
+            lam = jnp.zeros((m,), acc)
+            d = self.engine.transpose_d(Dflat, y, lam)
+        else:
+            y = jnp.zeros((m,), acc)
+            lam = jnp.zeros((m,), acc)
+            d = jnp.zeros((n,), acc)
+        return y, lam, d
 
     # -- fixed-iteration driver with full telemetry (lax.scan) --
     @partial(jax.jit, static_argnames=("self", "iters", "record"))
@@ -119,72 +161,81 @@ class UnwrappedADMM:
         record: bool = True,
     ) -> ADMMResult:
         N, mi, n = D.shape
+        m = N * mi
         acc = gram_lib._acc_dtype(D.dtype)
+        eng = self.engine
+        Dflat = D.reshape(m, n)
         L = self.setup(D)
-        if x0 is not None:
-            # Warm start (the serving layer's repeated solves): seed the
-            # split variable at y = D x0, so the first x-update returns
-            # (D^T D + rI)^{-1} D^T D x0 — exactly x0 when rho = 0.
-            y = jnp.einsum("imn,n->im", D.astype(acc), x0.astype(acc))
-        else:
-            y = jnp.zeros((N, mi), acc)
-        lam = jnp.zeros((N, mi), acc)
-        aux_r = aux.ravel() if aux is not None else None
+        Dres = eng.prepare(Dflat)
+        aux_f = aux.reshape(m) if aux is not None else None
+        y, lam, d = self._init_state(Dflat, x0, m, n, acc)
 
         def body(carry, _):
-            y, lam, k_conv, k = carry
-            x, Dx, y_new, lam_new = self.step(L, D, aux, y, lam)
-            r, s = self._residuals(D, Dx, y_new, y, lam_new)
-            eps_pri, eps_dual = self._tolerances(D, Dx, y_new, lam_new)
+            y, lam, d, _, k_conv, k = carry
+            x = gram_lib.gram_solve(L, d)
+            st = eng.iterate(Dres, aux_f, y, lam, x, want_dual=True)
+            Dx, r, s, eps_pri, eps_dual = self._residuals_tolerances(
+                st, lam, m, n)
             done = (r <= eps_pri) & (s <= eps_dual)
             k_conv = jnp.where((k_conv < 0) & done, k, k_conv)
-            obj = self._objective(x, Dx, aux)
-            if self.loss.grad is not None:
+            obj = self._objective(x, Dx, aux_f)
+            if record and self.loss.grad is not None:
                 # Theorem 2 diagnostic: ||d/dx f(Dx^k)||^2 = ||D^T grad f||^2.
-                g = self.loss.grad(Dx.ravel(), aux_r).reshape(Dx.shape)
-                gsq = jnp.sum(jnp.einsum("imn,im->n", D.astype(acc), g) ** 2)
+                # The one telemetry quantity that is not derivable from the
+                # carried n-vectors; costs an extra pass, so it only runs on
+                # the recording driver (solve(), the hot path, never pays).
+                g = self.loss.grad(Dx, aux_f)
+                gsq = jnp.sum((Dflat.astype(acc).T @ g) ** 2)
             else:
                 gsq = jnp.asarray(jnp.nan, acc)
-            hist = (obj, r, s, gsq, x)
-            return (y_new, lam_new, k_conv, k + 1), hist
+            hist = (obj, r, s, gsq)
+            return (st.y, st.lam, st.d, x, k_conv, k + 1), hist
 
-        init = (y, lam, jnp.asarray(-1, jnp.int32), jnp.asarray(0, jnp.int32))
-        (y, lam, k_conv, _), hist = jax.lax.scan(body, init, None, length=iters)
-        objs, rs, ss, gsqs, xs = hist
-        x = xs[-1]
+        init = (y, lam, d, jnp.zeros((n,), acc),
+                jnp.asarray(-1, jnp.int32), jnp.asarray(0, jnp.int32))
+        (y, lam, d, x, k_conv, _), hist = jax.lax.scan(
+            body, init, None, length=iters)
+        objs, rs, ss, gsqs = hist
         history = (
             ADMMHistory(objs, rs, ss, gsqs, k_conv) if record else None
         )
         iters_used = jnp.where(k_conv >= 0, k_conv + 1, iters)
-        return ADMMResult(x, y, lam, iters_used, history)
+        return ADMMResult(x, y.reshape(N, mi), lam.reshape(N, mi),
+                          iters_used, history)
 
     # -- early-stopping driver (lax.while_loop), deployment path --
     @partial(jax.jit, static_argnames=("self", "max_iters"))
     def solve(
-        self, D: Array, aux: Optional[Array], max_iters: int = 500
+        self, D: Array, aux: Optional[Array], max_iters: int = 500,
+        x0: Optional[Array] = None,
     ) -> ADMMResult:
         N, mi, n = D.shape
+        m = N * mi
         acc = gram_lib._acc_dtype(D.dtype)
+        eng = self.engine
+        Dflat = D.reshape(m, n)
         L = self.setup(D)
+        Dres = eng.prepare(Dflat)
+        aux_f = aux.reshape(m) if aux is not None else None
+        y0, lam0, d0 = self._init_state(Dflat, x0, m, n, acc)
 
         def cond(state):
-            y, lam, k, done, _ = state
+            _, _, _, _, k, done = state
             return (~done) & (k < max_iters)
 
         def body(state):
-            y, lam, k, _, _ = state
-            x, Dx, y_new, lam_new = self.step(L, D, aux, y, lam)
-            r, s = self._residuals(D, Dx, y_new, y, lam_new)
-            eps_pri, eps_dual = self._tolerances(D, Dx, y_new, lam_new)
+            y, lam, d, _, k, _ = state
+            x = gram_lib.gram_solve(L, d)
+            st = eng.iterate(Dres, aux_f, y, lam, x, want_dual=True)
+            _, r, s, eps_pri, eps_dual = self._residuals_tolerances(
+                st, lam, m, n)
             done = (r <= eps_pri) & (s <= eps_dual)
-            return (y_new, lam_new, k + 1, done, x)
+            return (st.y, st.lam, st.d, x, k + 1, done)
 
-        y0 = jnp.zeros((N, mi), acc)
-        lam0 = jnp.zeros((N, mi), acc)
-        x0 = jnp.zeros((n,), acc)
-        state = (y0, lam0, jnp.asarray(0, jnp.int32), jnp.asarray(False), x0)
-        y, lam, k, done, x = jax.lax.while_loop(cond, body, state)
-        return ADMMResult(x, y, lam, k, None)
+        state = (y0, lam0, d0, jnp.zeros((n,), acc),
+                 jnp.asarray(0, jnp.int32), jnp.asarray(False))
+        y, lam, d, x, k, done = jax.lax.while_loop(cond, body, state)
+        return ADMMResult(x, y.reshape(N, mi), lam.reshape(N, mi), k, None)
 
 
 # ---------------------------------------------------------------------------

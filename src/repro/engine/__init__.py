@@ -1,0 +1,28 @@
+"""repro.engine — the per-iteration hot path of every solver (DESIGN.md §8).
+
+Public surface:
+  * :class:`IterationEngine` — fused one-pass iteration body with
+    reference / chunked / pallas backends and bf16 data residency;
+  * :func:`gram_stats` — backend-dispatched one-pass (D^T D, D^T b);
+  * :mod:`repro.engine.autotune` — the (m, n, dtype)-keyed block-size
+    model shared by every engine call site.
+"""
+from repro.engine.engine import (
+    BACKENDS,
+    PALLAS_KINDS,
+    EngineStep,
+    IterationEngine,
+    default_backend,
+    gram_stats,
+)
+from repro.engine import autotune
+
+__all__ = [
+    "BACKENDS",
+    "PALLAS_KINDS",
+    "EngineStep",
+    "IterationEngine",
+    "default_backend",
+    "gram_stats",
+    "autotune",
+]

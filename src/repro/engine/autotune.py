@@ -1,0 +1,113 @@
+"""Block-size autotuner for the iteration engine (DESIGN.md §8).
+
+Model-driven, not search-driven: block shapes are picked from the VMEM /
+cache budget math below and memoized per ``(m, n, dtype)`` so every caller
+of the engine (solvers, service ingest, benchmarks) agrees on the shapes
+without re-deriving them. The cache is a plain dict — inspectable in tests
+and overridable by pinning an entry before the first resolve.
+
+Budget math (see DESIGN.md §7 for the kernel-side derivation):
+
+  * Pallas fused iteration: the live set per grid step is the (bm, n) D
+    panel (double-buffered by the pipeline), the (1, n) x row, three
+    (1, n) f32 accumulators (d, w, v), and five (bm, 1) vector blocks
+    (y, lam, aux in; y', lam' out), also double-buffered. With dsize =
+    bytes per D element:
+        2*bm*n*dsize + 4*n*4 + 10*bm*4  <=  VMEM_BUDGET.
+  * Pallas Gram / Gram+RHS: 2*bm*(bn_i + bn_j)*dsize streamed D panels +
+    bn*bn*4 resident accumulator, plus for the fused RHS the (bn, rpad)
+    resident C block and the double-buffered (bm, rpad) f32 B stream.
+  * chunked (lax.scan) backend: the same streaming shape on CPU/GPU; the
+    budget stands in for the last-level-cache slice a core can keep hot,
+    so one block of D plus its vectors stays resident between the Dx and
+    D^T passes of the fused body.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+# ~16 MB physical VMEM per TPU core; leave headroom for the pipeline's
+# own scratch and semaphores.
+VMEM_BUDGET = 8 * 1024 * 1024
+# Last-level cache slice assumed hot per chunked-backend stream on CPU/GPU.
+CACHE_BUDGET = 2 * 1024 * 1024
+
+# (kind, m, n, dtype_name) -> chosen block size(s); pin to override.
+CACHE: Dict[Tuple, Tuple] = {}
+
+
+def _dsize(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def _sublane(dtype) -> int:
+    """Minimum second-to-last-dim tile for the dtype (f32: 8, bf16: 16)."""
+    return {4: 8, 2: 16, 1: 32}.get(_dsize(dtype), 8)
+
+
+def _clamp_multiple(value: int, mult: int, lo: int, hi: int) -> int:
+    v = max(lo, min(hi, value))
+    return max(mult, (v // mult) * mult)
+
+
+def _row_cap(m: int, mult: int) -> int:
+    """Never pick a row block taller than m rounded up to the tile size —
+    taller blocks only add zero-padding work."""
+    return -(-m // mult) * mult
+
+
+def iter_block_m(m: int, n: int, dtype) -> int:
+    """Row-panel height for the fused Pallas iteration kernel."""
+    key = ("iter", int(m), int(n), jnp.dtype(dtype).name)
+    if key not in CACHE:
+        dsize = _dsize(dtype)
+        # 2*bm*n*dsize (double-buffered panel) + 10*bm*4 (five vector
+        # blocks, double-buffered) + 4*n*4 (x + d/w/v accumulators)
+        # <= budget, solved for bm.
+        bm = (VMEM_BUDGET - 4 * n * 4) // (2 * n * dsize + 40)
+        sub = _sublane(dtype)
+        cap = _row_cap(m, sub)
+        CACHE[key] = (_clamp_multiple(bm, sub, min(128, cap), min(4096, cap)),)
+    return CACHE[key][0]
+
+
+def gram_blocks(m: int, n: int, dtype, rhs: int = 0) -> Tuple[int, int]:
+    """(block_m, block_n) for the Gram / fused Gram+RHS kernels.
+
+    ``rhs`` is the stacked right-hand-side count (0 = Gram only); its
+    lane-padded B stream and resident C block are budgeted so wide
+    multi-RHS ingests shrink bm instead of blowing the VMEM budget.
+    """
+    rpad = -(-max(rhs, 1) // 128) * 128 if rhs else 0
+    key = ("gram", int(m), int(n), jnp.dtype(dtype).name, rpad)
+    if key not in CACHE:
+        dsize = _dsize(dtype)
+        # Lane-aligned output tile first: bn >= 256 keeps the kernel
+        # MXU-bound (arithmetic intensity ~ bn FLOP/byte), but never wider
+        # than the (padded) feature count.
+        bn = _clamp_multiple(n, 128, 128, 512)
+        bn = min(bn, 512)
+        # Then the tallest row panel that fits beside the resident bn x bn
+        # accumulator (+ bn x rpad C block), counting the double-buffered
+        # D panels (2 inputs) and the double-buffered f32 B stream.
+        resident = bn * bn * 4 + bn * rpad * 4
+        per_row = 4 * bn * dsize + 2 * rpad * 4
+        bm = (VMEM_BUDGET - resident) // per_row
+        sub = _sublane(dtype)
+        cap = _row_cap(m, sub)
+        CACHE[key] = (_clamp_multiple(bm, sub, min(128, cap), min(2048, cap)),
+                      bn)
+    return CACHE[key]
+
+
+def chunked_block_rows(m: int, n: int, dtype) -> int:
+    """Row-block length for the lax.scan streaming backend (CPU/GPU)."""
+    key = ("chunked", int(m), int(n), jnp.dtype(dtype).name)
+    if key not in CACHE:
+        dsize = _dsize(dtype)
+        rows = CACHE_BUDGET // max(1, n * dsize)
+        cap = _row_cap(m, 8)
+        CACHE[key] = (_clamp_multiple(rows, 8, min(128, cap), min(8192, cap)),)
+    return CACHE[key][0]

@@ -1,0 +1,268 @@
+"""The iteration engine — the ONE place solver iteration bodies live.
+
+Every hot path of the repo (``core/unwrapped``, ``core/distributed``,
+``service/stats`` ingestion, the benchmarks) dispatches its per-iteration /
+per-ingest pass over the data matrix D through this module instead of
+inlining einsums. The engine owns three interchangeable backends
+(DESIGN.md §8):
+
+  * ``pallas``            — TPU: the fused ``kernels/admm_iter`` kernel.
+                            ONE HBM pass over D per iteration (Dx, prox,
+                            lam-update and ALL THREE transpose reductions
+                            d = D^T(y'-lam'), w = D^T(y'-y), v = D^T lam'
+                            while each row panel is VMEM-resident); Gram
+                            setup via the fused Gram+RHS kernel in
+                            ``kernels/gram``.
+  * ``pallas_interpret``  — same kernels in interpreter mode (CPU CI).
+  * ``chunked``           — CPU/GPU: a ``lax.scan`` over row blocks with
+                            the same one-pass-fused body; each block stays
+                            cache-hot between its Dx and D^T uses, halving
+                            memory traffic vs the two-pass formulation.
+  * ``reference``         — the textbook two-pass jnp oracle (Dx pass,
+                            then a D^T pass); parity baseline.
+
+``auto`` resolves per device (TPU -> pallas, else chunked), then falls
+back by capability: Pallas needs a kernel-supported coordinatewise prox
+(logistic / hinge / l1 / least_squares, f32 or bf16 rows); chunked needs a
+coordinatewise prox; everything else lands on reference. bf16 data
+residency (``residency="bf16"``) halves iteration HBM bytes again on top
+of the fused pass — all accumulation stays f32 in-register regardless.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gram as gram_lib
+from repro.core.prox import ProxLoss
+from repro.engine import autotune
+from repro.kernels.admm_iter.ops import admm_iter_full
+from repro.kernels.gram import ops as gram_ops
+
+Array = jax.Array
+
+BACKENDS = ("reference", "chunked", "pallas", "pallas_interpret")
+
+# Prox kinds the fused Pallas iteration kernel evaluates in-register.
+PALLAS_KINDS = frozenset({"logistic", "hinge", "l1", "least_squares"})
+
+RESIDENCY_DTYPES = {None: None, "bf16": jnp.bfloat16}
+
+
+class EngineStep(NamedTuple):
+    """One fused iteration: updated iterates plus the n-vector reductions
+    accumulated in the same pass over D. The w/v differences are formed
+    row-wise in-register BEFORE reducing (not by differencing accumulated
+    D^T y across iterations, which cancels catastrophically near
+    convergence)."""
+
+    y: Array           # y^{k+1} = prox_f(Dx + lam)
+    lam: Array         # lam^{k+1} = lam + Dx - y^{k+1}
+    d: Array           # D^T(y^{k+1} - lam^{k+1}) — next x-update RHS
+    w: Optional[Array]   # D^T(y^{k+1} - y^k) — Boyd dual residual s = tau||w||
+    v: Optional[Array]   # D^T lam^{k+1} — dual tolerance needs tau||v||
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "chunked"
+
+
+def gram_stats(D: Array, b: Optional[Array] = None, *,
+               backend: str = "auto",
+               block_rows: Optional[int] = None) -> Tuple[Array, Optional[Array]]:
+    """Backend-dispatched (D^T D, D^T b) in one streaming pass (paper §4).
+
+    The single Gram entry point for solver setup and service ingestion.
+    ``b`` may be None (Gram only), (m,), or (m, r) stacked right-hand
+    sides; returns (G, c) with c None iff b is None. ``block_rows``
+    bounds the chunked backend's live block (None -> autotuned); the
+    Pallas backends tile from the autotuner's VMEM budget instead.
+    """
+    if backend == "auto":
+        backend = default_backend()
+    m, n = D.shape
+    if backend in ("pallas", "pallas_interpret") and D.dtype == jnp.float64:
+        backend = "chunked"          # Pallas kernels are f32/bf16 only
+    if backend in ("pallas", "pallas_interpret"):
+        interp = backend == "pallas_interpret"
+        rhs = 0 if b is None else (b.shape[1] if b.ndim > 1 else 1)
+        bm, bn = autotune.gram_blocks(m, n, D.dtype, rhs=rhs)
+        if b is None:
+            return gram_ops.gram(D, block_m=bm, block_n=bn,
+                                 interpret=interp), None
+        return gram_ops.gram_and_rhs(D, b, block_m=bm, block_n=bn,
+                                     interpret=interp)
+    if backend == "chunked":
+        br = block_rows or autotune.chunked_block_rows(m, n, D.dtype)
+        if b is None:
+            return gram_lib.gram_chunked(D, br), None
+        return gram_lib.gram_and_rhs_chunked(D, b, br)
+    if backend == "reference":
+        if b is None:
+            return gram_lib.gram(D), None
+        return gram_lib.gram(D), gram_lib.gram_rhs(D, b)
+    raise ValueError(f"unknown backend {backend!r}; expected one of "
+                     f"{BACKENDS + ('auto',)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class IterationEngine:
+    """Per-device fused iteration body for unwrapped ADMM (paper Alg. 2
+    lines 5-8 plus both telemetry reductions).
+
+    Operates on flat local data: D (m, n), aux/y/lam (m,), x (n,) — the
+    node-stacked solvers flatten, the distributed solver passes its shard.
+    Composes under shard_map (the cross-shard psum of ``d`` stays with the
+    caller, per Alg. 2 line 6).
+    """
+
+    loss: ProxLoss
+    tau: float = 1.0
+    backend: str = "auto"
+    block_m: Optional[int] = None          # None -> autotuned
+    residency: Optional[str] = None        # None | "bf16"
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS + ("auto",):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.residency not in RESIDENCY_DTYPES:
+            raise ValueError(f"unknown residency {self.residency!r}")
+
+    @property
+    def delta(self) -> float:
+        return 1.0 / self.tau
+
+    # -- backend selection (rules documented in DESIGN.md §8) ---------------
+    def resolve(self, dtype=jnp.float32) -> str:
+        b = default_backend() if self.backend == "auto" else self.backend
+        if b in ("pallas", "pallas_interpret") and (
+                self.loss.name not in PALLAS_KINDS
+                or jnp.dtype(dtype) == jnp.float64):
+            b = "chunked"
+        if b == "chunked" and not self.loss.coordinatewise:
+            b = "reference"
+        return b
+
+    # -- data residency -----------------------------------------------------
+    def prepare(self, D: Array) -> Array:
+        """Cast D ONCE to its iteration-residency dtype (bf16 halves the
+        per-iteration HBM bytes; accumulation stays f32 in-register)."""
+        dt = RESIDENCY_DTYPES[self.residency]
+        return D.astype(dt) if dt is not None and D.dtype != dt else D
+
+    # -- setup: Gram (+ RHS) in one data pass -------------------------------
+    def gram(self, D: Array, b: Optional[Array] = None,
+             block_rows: Optional[int] = None):
+        return gram_stats(D, b, backend=self._gram_backend(D.dtype),
+                          block_rows=block_rows)
+
+    def _gram_backend(self, dtype) -> str:
+        b = default_backend() if self.backend == "auto" else self.backend
+        return "chunked" if b == "reference" else b
+
+    # -- warm-start init: d from existing iterates, one pass ----------------
+    def transpose_d(self, D: Array, y: Array, lam: Array):
+        """d = D^T(y - lam) — setup-time only (cold starts get zeros
+        without touching D; warm starts pay one column pass)."""
+        return gram_lib.gram_rhs(D, y - lam)
+
+    # -- the fused iteration body -------------------------------------------
+    def iterate(self, D: Array, aux: Optional[Array], y: Array, lam: Array,
+                x: Array, want_dual: bool = True) -> EngineStep:
+        """Given x^{k+1}: stream D once, producing y^{k+1}, lam^{k+1} and
+        the reduction(s) that drive iteration k+2 and the stopping rule."""
+        backend = self.resolve(D.dtype)
+        if (backend == "chunked" and self.backend == "auto"
+                and D.size * D.dtype.itemsize <= 16 * autotune.CACHE_BUDGET):
+            # Small-D auto rule (measured in BENCH_engine.json): once D fits
+            # in last-level cache the two-pass reference body re-reads it
+            # for free and the scan's block bookkeeping only costs; the
+            # one-pass stream wins when D spills. Explicit backend requests
+            # are honored as-is.
+            backend = "reference"
+        if backend in ("pallas", "pallas_interpret"):
+            return self._iterate_pallas(D, aux, y, lam, x,
+                                        interpret=backend
+                                        == "pallas_interpret",
+                                        want_dual=want_dual)
+        if backend == "chunked":
+            return self._iterate_chunked(D, aux, y, lam, x,
+                                         want_dual=want_dual)
+        return self._iterate_reference(D, aux, y, lam, x,
+                                       want_dual=want_dual)
+
+    def _iterate_reference(self, D, aux, y, lam, x, want_dual):
+        acc = gram_lib._acc_dtype(D.dtype)
+        Df = D.astype(acc)
+        Dx = Df @ x.astype(acc)
+        y_new = self.loss.prox(Dx + lam, self.delta, aux)
+        lam_new = lam + Dx - y_new
+        if want_dual:
+            dwv = Df.T @ jnp.stack(
+                [y_new - lam_new, y_new - y, lam_new], axis=1)
+            return EngineStep(y_new, lam_new, dwv[:, 0], dwv[:, 1],
+                              dwv[:, 2])
+        return EngineStep(y_new, lam_new, Df.T @ (y_new - lam_new),
+                          None, None)
+
+    def _iterate_chunked(self, D, aux, y, lam, x, want_dual):
+        m, n = D.shape
+        acc = gram_lib._acc_dtype(D.dtype)
+        br = self.block_m or autotune.chunked_block_rows(m, n, D.dtype)
+        xc = x.astype(acc)
+        blocks = [gram_lib.blocked_rows(D, br),
+                  gram_lib.blocked_rows(y, br),
+                  gram_lib.blocked_rows(lam, br)]
+        if aux is not None:
+            blocks.append(gram_lib.blocked_rows(aux, br))
+
+        def body(carry, blk):
+            d, w, v = carry
+            Db, yb, lb = blk[0].astype(acc), blk[1], blk[2]
+            ab = blk[3] if aux is not None else None
+            Dx = Db @ xc
+            y_b = self.loss.prox(Dx + lb, self.delta, ab)
+            l_b = lb + Dx - y_b
+            d = d + (y_b - l_b) @ Db
+            if want_dual:
+                w = w + (y_b - yb) @ Db
+                v = v + l_b @ Db
+            return (d, w, v), (y_b, l_b)
+
+        zero = jnp.zeros((n,), acc)
+        (d, w, v), (ys, ls) = jax.lax.scan(
+            body, (zero, zero, zero), tuple(blocks))
+        return EngineStep(ys.reshape(-1)[:m], ls.reshape(-1)[:m], d,
+                          w if want_dual else None,
+                          v if want_dual else None)
+
+    def _iterate_pallas(self, D, aux, y, lam, x, interpret, want_dual):
+        m, n = D.shape
+        bm = self.block_m or autotune.iter_block_m(m, n, D.dtype)
+        aux_arr = aux if aux is not None else jnp.zeros_like(y)
+        y_new, lam_new, d, w, v = admm_iter_full(
+            D, aux_arr, y, lam, x, kind=self.loss.name,
+            delta=self.loss.kernel_delta_scale * self.delta,
+            block_m=bm, interpret=interpret)
+        return EngineStep(y_new, lam_new, d, w if want_dual else None,
+                          v if want_dual else None)
+
+    # -- host-loop step with buffer donation --------------------------------
+    def make_step(self, D: Array, aux: Optional[Array], L: Array):
+        """Jitted ``step(y, lam, d) -> (y', lam', d', x)`` closing over the
+        prepared data and Gram factor, with the (y, lam) iterate pair
+        DONATED — host-driven loops (serving, benchmarks) update in place
+        instead of allocating fresh iterate buffers every call."""
+        Dres = self.prepare(D)
+
+        @partial(jax.jit, donate_argnums=(0, 1))
+        def step(y, lam, d):
+            x = gram_lib.gram_solve(L, d)
+            st = self.iterate(Dres, aux, y, lam, x, want_dual=False)
+            return st.y, st.lam, st.d, x
+
+        return step

@@ -9,12 +9,14 @@ does everything with it while it is resident:
     y_b    = prox_f(Dx_b + lam_b)   (VPU, in-register Newton/bisection)
     lam_b' = lam_b + Dx_b - y_b
     d     += D_b^T (y_b - lam_b')   (MXU; n-vector f32 VMEM accumulator)
+    w     += D_b^T (y_b - y_b_old)  (Boyd dual residual, same stream)
+    v     += D_b^T lam_b'           (dual tolerance, same stream)
 
 Per-iteration HBM traffic drops from 2 x bytes(D) + small to
 1 x bytes(D) + small — and with bf16 D residency (f32 in-register upcast,
 like the Gram kernel) the memory-bound iteration term shrinks ~4x vs the
-f32 2-pass baseline. The d accumulator lives across the row grid in the
-output block (constant index_map), psum'd outside per paper Alg. 2 line 6.
+f32 2-pass baseline. The d/w/v accumulators live across the row grid in
+output blocks (constant index_map), psum'd outside per paper Alg. 2 line 6.
 
 Vector operands ride as (m, 1) columns; the (bm, 1) blocks are lane-padded
 on TPU — acceptable since D's (bm, n) tiles dominate the traffic.
@@ -31,16 +33,19 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.prox.prox import _prox_body
 
 
-def _kernel(x_ref, d_in_ref, lam_ref, aux_ref, y_out_ref, lam_out_ref,
-            d_out_ref, *, kind: str, delta: float):
+def _kernel(x_ref, d_in_ref, y_ref, lam_ref, aux_ref, y_out_ref, lam_out_ref,
+            d_out_ref, w_out_ref, v_out_ref, *, kind: str, delta: float):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
     def _init():
         d_out_ref[...] = jnp.zeros_like(d_out_ref)
+        w_out_ref[...] = jnp.zeros_like(w_out_ref)
+        v_out_ref[...] = jnp.zeros_like(v_out_ref)
 
     Db = d_in_ref[...].astype(jnp.float32)          # (bm, n)
     x = x_ref[...].astype(jnp.float32)              # (1, n)
+    y_old = y_ref[...].astype(jnp.float32)          # (bm, 1)
     lam = lam_ref[...].astype(jnp.float32)          # (bm, 1)
     aux = aux_ref[...].astype(jnp.float32)
     Dx = jax.lax.dot_general(
@@ -51,27 +56,45 @@ def _kernel(x_ref, d_in_ref, lam_ref, aux_ref, y_out_ref, lam_out_ref,
     lam_new = lam + Dx - y
     y_out_ref[...] = y
     lam_out_ref[...] = lam_new
-    # d += D_b^T (y - lam')   -> (1, n) accumulator row
-    d_out_ref[...] += jax.lax.dot_general(
-        (y - lam_new), Db, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)         # (1, n)
+
+    def _tdot(col):
+        # col^T @ D_b -> one (1, n) accumulator row on the MXU
+        return jax.lax.dot_general(
+            col, Db, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    # Three transpose reductions in the SAME row stream (the tiles of D are
+    # already VMEM-resident; each extra (1, n) dot is noise next to the
+    # panel's HBM traffic):
+    #   d = D^T(y' - lam')  — next x-update RHS (Alg. 2 line 6)
+    #   w = D^T(y' - y)     — Boyd dual residual s = tau ||w||; the y-space
+    #                         difference is taken in-register BEFORE the
+    #                         reduction, avoiding the catastrophic
+    #                         cancellation of differencing two accumulated
+    #                         D^T y vectors across iterations
+    #   v = D^T lam'        — dual tolerance eps_dual needs tau ||v||
+    d_out_ref[...] += _tdot(y - lam_new)
+    w_out_ref[...] += _tdot(y - y_old)
+    v_out_ref[...] += _tdot(lam_new)
 
 
 def admm_iter_pallas(D, aux, y, lam, x, *, kind: str, delta: float,
                      block_m: int = 1024, interpret: bool = False):
     """D: (m, n); aux/y/lam: (m,); x: (n,). m % block_m == 0 (ops pads).
-    Returns (y', lam', d) with d = D^T(y'-lam') accumulated in f32."""
+    Returns (y', lam', d, w, v) with d = D^T(y'-lam'), w = D^T(y'-y) and
+    v = D^T lam' accumulated in f32 in the same row stream."""
     m, n = D.shape
     assert m % block_m == 0
     grid = (m // block_m,)
     col = lambda v: v.reshape(m, 1)
     kernel = functools.partial(_kernel, kind=kind, delta=float(delta))
-    y_new, lam_new, d = pl.pallas_call(
+    y_new, lam_new, d, w, v = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, n), lambda i: (0, 0)),          # x (replicated)
             pl.BlockSpec((block_m, n), lambda i: (i, 0)),    # D row panel
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),    # y
             pl.BlockSpec((block_m, 1), lambda i: (i, 0)),    # lam
             pl.BlockSpec((block_m, 1), lambda i: (i, 0)),    # aux
         ],
@@ -79,12 +102,17 @@ def admm_iter_pallas(D, aux, y, lam, x, *, kind: str, delta: float,
             pl.BlockSpec((block_m, 1), lambda i: (i, 0)),    # y'
             pl.BlockSpec((block_m, 1), lambda i: (i, 0)),    # lam'
             pl.BlockSpec((1, n), lambda i: (0, 0)),          # d (accumulated)
+            pl.BlockSpec((1, n), lambda i: (0, 0)),          # w (accumulated)
+            pl.BlockSpec((1, n), lambda i: (0, 0)),          # v (accumulated)
         ],
         out_shape=[
             jax.ShapeDtypeStruct((m, 1), jnp.float32),
             jax.ShapeDtypeStruct((m, 1), jnp.float32),
             jax.ShapeDtypeStruct((1, n), jnp.float32),
+            jax.ShapeDtypeStruct((1, n), jnp.float32),
+            jax.ShapeDtypeStruct((1, n), jnp.float32),
         ],
         interpret=interpret,
-    )(x.reshape(1, n), D, col(lam), col(aux))
-    return y_new.reshape(m), lam_new.reshape(m), d.reshape(n)
+    )(x.reshape(1, n), D, col(y), col(lam), col(aux))
+    return (y_new.reshape(m), lam_new.reshape(m), d.reshape(n),
+            w.reshape(n), v.reshape(n))

@@ -1,6 +1,7 @@
-"""Jitted wrapper for the fused ADMM-iteration kernel (pads rows; zero-pad
-rows contribute nothing to d since their y' - lam' is forced to 0 via
-aux=0/lam=0/D=0 rows: prox(0)=0 for every supported kind at z=0 with l=0)."""
+"""Jitted wrappers for the fused ADMM-iteration kernel (pads rows; zero-pad
+rows contribute nothing to d/w/v since their y', lam' and y' - y are forced
+to 0 via aux=0/y=0/lam=0/D=0 rows: prox(0)=0 for every supported kind at
+z=0 with l=0)."""
 from __future__ import annotations
 
 import functools
@@ -13,8 +14,17 @@ from repro.kernels.admm_iter.admm_iter import admm_iter_pallas
 
 @functools.partial(
     jax.jit, static_argnames=("kind", "delta", "block_m", "interpret"))
-def admm_iter(D, aux, y, lam, x, *, kind: str, delta: float,
-              block_m: int = 1024, interpret: bool = False):
+def admm_iter_full(D, aux, y, lam, x, *, kind: str, delta: float,
+                   block_m: int = 1024, interpret: bool = False):
+    """Fused iteration body returning (y', lam', d, w, v).
+
+    d = D^T(y' - lam') feeds the next x-update (paper Alg. 2 line 6);
+    w = D^T(y' - y) and v = D^T lam' feed Boyd's dual residual and
+    tolerance without a second pass over D (the engine's one-pass
+    telemetry — DESIGN.md §8). Differences are formed in-register before
+    the reduction, so the residuals keep full f32 accuracy near
+    convergence.
+    """
     m, n = D.shape
     pad = (-m) % block_m
     if pad:
@@ -22,7 +32,18 @@ def admm_iter(D, aux, y, lam, x, *, kind: str, delta: float,
         aux = jnp.pad(aux, (0, pad))
         y = jnp.pad(y, (0, pad))
         lam = jnp.pad(lam, (0, pad))
-    y_new, lam_new, d = admm_iter_pallas(
+    y_new, lam_new, d, w, v = admm_iter_pallas(
         D, aux, y, lam, x, kind=kind, delta=delta, block_m=block_m,
         interpret=interpret)
-    return y_new[:m], lam_new[:m], d
+    return y_new[:m], lam_new[:m], d, w, v
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "delta", "block_m", "interpret"))
+def admm_iter(D, aux, y, lam, x, *, kind: str, delta: float,
+              block_m: int = 1024, interpret: bool = False):
+    """Back-compat 3-tuple surface: (y', lam', d)."""
+    y_new, lam_new, d, _, _ = admm_iter_full(
+        D, aux, y, lam, x, kind=kind, delta=delta, block_m=block_m,
+        interpret=interpret)
+    return y_new, lam_new, d

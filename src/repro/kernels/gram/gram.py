@@ -56,6 +56,96 @@ def _gram_kernel(d_i_ref, d_j_ref, out_ref, *, symmetric_skip: bool):
         _accum()
 
 
+def _gram_rhs_kernel(d_i_ref, d_j_ref, b_ref, g_ref, c_ref, *,
+                     symmetric_skip: bool):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init_g():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    @pl.when((k == 0) & (j == 0))
+    def _init_c():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    def _accum_g():
+        g_ref[...] += jax.lax.dot_general(
+            d_i_ref[...], d_j_ref[...],
+            dimension_numbers=(((0,), (0,)), ((), ())),   # D_i^T @ D_j
+            preferred_element_type=jnp.float32,
+        )
+
+    if symmetric_skip:
+        pl.when(i <= j)(_accum_g)
+    else:
+        _accum_g()
+
+    # c_i += D_i^T B, once per (i, k) — the j == 0 sweep reuses the D_i
+    # panel already resident in VMEM, so the RHS costs no extra reads of D
+    # (and B's own index_map parks on block 0 for j > 0, so B streams only
+    # on the sweeps that consume it). B stays f32 even when D streams as
+    # bf16 (the rhs is tiny; quantizing it would cost accuracy for no
+    # bandwidth win), hence the in-register upcast of the D panel for this
+    # dot only.
+    @pl.when(j == 0)
+    def _accum_c():
+        c_ref[...] += jax.lax.dot_general(
+            d_i_ref[...].astype(jnp.float32), b_ref[...],
+            dimension_numbers=(((0,), (0,)), ((), ())),   # D_i^T @ B
+            preferred_element_type=jnp.float32,
+        )
+
+
+def gram_rhs_pallas(
+    D: jax.Array,
+    B: jax.Array,
+    *,
+    block_m: int = 512,
+    block_n: int = 256,
+    symmetric_skip: bool = True,
+    interpret: bool = False,
+):
+    """(G, C) = (D^T D, D^T B) in ONE row stream over D (paper §4 setup).
+
+    D: (m, n); B: (m, r) stacked right-hand sides. m % block_m == 0,
+    n % block_n == 0, r lane-aligned (ops.py pads; zero rows/cols are exact).
+    The C accumulator block (block_n, r) has a j/k-constant index_map so it
+    stays VMEM-resident across the whole (j, k) sweep of each row stripe i,
+    exactly like the G tiles — the RHS rides the same HBM pass for free.
+    """
+    m, n = D.shape
+    r = B.shape[1]
+    assert m % block_m == 0 and n % block_n == 0, (m, n, block_m, block_n)
+    grid = (n // block_n, n // block_n, m // block_m)
+
+    kernel = functools.partial(_gram_rhs_kernel,
+                               symmetric_skip=symmetric_skip)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j, k: (k, i)),
+            pl.BlockSpec((block_m, block_n), lambda i, j, k: (k, j)),
+            # B is consumed only on the j == 0 sweeps; park its index on
+            # block 0 for j > 0 so the revisit skips the DMA instead of
+            # re-streaming the whole rhs once per column stripe.
+            pl.BlockSpec((block_m, r),
+                         lambda i, j, k: (jnp.where(j == 0, k, 0), 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, block_n), lambda i, j, k: (i, j)),
+            pl.BlockSpec((block_n, r), lambda i, j, k: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, n), jnp.float32),
+            jax.ShapeDtypeStruct((n, r), jnp.float32),
+        ],
+        interpret=interpret,
+    )(D, D, B)
+
+
 def gram_pallas(
     D: jax.Array,
     *,

@@ -1,6 +1,7 @@
-"""Jitted public wrapper for the Gram kernel: padding, symmetry restore,
-fused RHS (append b as an extra column: Gram([D | b]) contains D^T D, D^T b
-and b^T b in one data pass), and interpret-mode fallback for CPU."""
+"""Jitted public wrappers for the Gram kernels: padding, symmetry restore,
+the fused Gram+RHS kernel (``gram_and_rhs`` — D^T D and D^T B accumulated in
+the same row stream; the engine's setup path), the legacy append-column
+trick (``gram_with_rhs``), and interpret-mode fallback for CPU."""
 from __future__ import annotations
 
 import functools
@@ -8,7 +9,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.gram.gram import gram_pallas
+from repro.kernels.gram.gram import gram_pallas, gram_rhs_pallas
 
 def _pad_to(x, mult, axis):
     size = x.shape[axis]
@@ -45,12 +46,52 @@ def gram(
         # Mirror the computed upper-triangular blocks. Using block-level skip,
         # every full block strictly below the diagonal is garbage; rebuild
         # from the upper triangle (element-wise: the diagonal blocks are full).
-        bn = block_n
-        nb = Dp.shape[1] // bn
-        bi = jnp.arange(Dp.shape[1]) // bn
-        upper = bi[:, None] <= bi[None, :]         # block-upper mask
-        G = jnp.where(upper, G, G.T)
+        G = _mirror_upper(G, block_n)
     return G[:n, :n]
+
+
+def _mirror_upper(G: jax.Array, block_n: int) -> jax.Array:
+    """Rebuild the strictly-lower blocks skipped by ``symmetric_skip``."""
+    bi = jnp.arange(G.shape[0]) // block_n
+    upper = bi[:, None] <= bi[None, :]             # block-upper mask
+    return jnp.where(upper, G, G.T)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "interpret")
+)
+def gram_and_rhs(
+    D: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 512,
+    block_n: int = 256,
+    interpret: bool = False,
+):
+    """Fused (D^T D, D^T b) — ONE row stream over D, any (m, n).
+
+    ``b`` may be (m,) — the classic lasso rhs — or (m, r) stacked
+    right-hand sides (multi-probe serving); c comes back (n,) or (n, r).
+    Pads rows to block_m, features to block_n and rhs lanes to 128 (zero
+    rows/columns are exact for both sums); mirrors the symmetric-skip
+    upper triangle like ``gram``.
+    """
+    m, n = D.shape
+    squeeze = b.ndim == 1
+    B = b[:, None] if squeeze else b
+    r = B.shape[1]
+    Dp = _pad_to(_pad_to(D, block_m, 0), block_n, 1)
+    Bp = _pad_to(_pad_to(B.astype(jnp.float32), block_m, 0), 128, 1)
+    G, C = gram_rhs_pallas(
+        Dp, Bp,
+        block_m=block_m,
+        block_n=block_n,
+        symmetric_skip=True,
+        interpret=interpret,
+    )
+    G = _mirror_upper(G, block_n)[:n, :n]
+    C = C[:n, :r]
+    return G, (C[:, 0] if squeeze else C)
 
 
 @functools.partial(

@@ -33,6 +33,7 @@ from repro.core import gram as gram_lib
 from repro.core import prox as prox_lib
 from repro.core.oracles import default_tau
 from repro.core.unwrapped import UnwrappedADMM
+from repro.engine import gram_stats
 
 Array = jax.Array
 
@@ -180,7 +181,7 @@ def _lasso_transpose(D, aux, mu=None, iters=500, x0=None, l2: float = 0.0,
     assert mu is not None
     # §4: direct transpose reduction + single-node FASTA.
     Dflat, m, n = _flatten(D)
-    G, c = gram_lib.gram_and_rhs_chunked(Dflat, aux.reshape(m))
+    G, c = gram_stats(Dflat, aux.reshape(m))
     x, it, hist = lasso_from_stats(G, c, mu, iters=iters, x0=x0, l2=l2)
     return _result(x, int(it), hist, "transpose", "lasso")
 
@@ -256,7 +257,7 @@ def _svm_consensus(D, aux, C=1.0, tau=None, iters=500, **_):
 def _ridge_transpose(D, aux, mu=None, **_):
     mu = 1.0 if mu is None else mu
     Dflat, m, n = _flatten(D)
-    G, c = gram_lib.gram_and_rhs_chunked(Dflat, aux.reshape(m))
+    G, c = gram_stats(Dflat, aux.reshape(m))
     x, it, hist = ridge_from_stats(G, c, mu=mu)
     return _result(x, it, hist, "transpose", "ridge")
 
@@ -267,7 +268,7 @@ def _elastic_net_transpose(D, aux, mu=None, l2: float = 0.0, iters=500,
                            x0=None, **_):
     assert mu is not None
     Dflat, m, n = _flatten(D)
-    G, c = gram_lib.gram_and_rhs_chunked(Dflat, aux.reshape(m))
+    G, c = gram_stats(Dflat, aux.reshape(m))
     x, it, hist = elastic_net_from_stats(G, c, mu=mu, l2=l2, iters=iters,
                                          x0=x0)
     return _result(x, int(it), hist, "transpose", "elastic_net")
@@ -276,7 +277,7 @@ def _elastic_net_transpose(D, aux, mu=None, l2: float = 0.0, iters=500,
 @register_problem("nnls", "transpose", gram_path=True, aliases=("fasta",))
 def _nnls_transpose(D, aux, iters=500, x0=None, **_):
     Dflat, m, n = _flatten(D)
-    G, c = gram_lib.gram_and_rhs_chunked(Dflat, aux.reshape(m))
+    G, c = gram_stats(Dflat, aux.reshape(m))
     x, it, hist = nnls_from_stats(G, c, iters=iters, x0=x0)
     return _result(x, int(it), hist, "transpose", "nnls")
 

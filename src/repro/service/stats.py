@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gram as gram_lib
+from repro.engine import gram_stats
 
 Array = jax.Array
 
@@ -112,16 +113,17 @@ class SufficientStats:
 
     @classmethod
     def from_data(cls, D: Array, b: Optional[Array] = None,
-                  block_rows: int = 1024) -> "SufficientStats":
-        """One streaming pass over (D, b) — the paper's §4 reduction."""
+                  block_rows: Optional[int] = None,
+                  backend: str = "auto") -> "SufficientStats":
+        """One streaming pass over (D, b) — the paper's §4 reduction,
+        dispatched through the iteration engine (DESIGN.md §8): the fused
+        Gram+RHS Pallas kernel on TPU, the chunked lax.scan elsewhere."""
         m, n = D.shape
         acc = gram_lib._acc_dtype(D.dtype)
-        if b is None:
-            G = gram_lib.gram_chunked(D, block_rows)
+        # one fused pass for (m,) and (m, r) rhs alike
+        G, c = gram_stats(D, b, backend=backend, block_rows=block_rows)
+        if c is None:
             c = jnp.zeros((n,), acc)
-        else:
-            # one fused pass for (m,) and (m, r) rhs alike
-            G, c = gram_lib.gram_and_rhs_chunked(D, b, block_rows)
         return cls(G=G, c=c, rows=int(m),
                    fingerprint=fingerprint_array(D, b),
                    labeled_rows=int(m) if b is not None else 0)
@@ -197,11 +199,13 @@ class SufficientStats:
 
 @jax.jit
 def _accumulate(G, c, block_D, block_b, sign=1.0):
+    """Fold one block's (B^T B, B^T b) into the running stats — the same
+    engine pass the bulk ingest uses, signed for downdates."""
     acc = G.dtype
-    B = block_D.astype(acc)
-    G = G + sign * B.T @ B
-    if block_b is not None:
-        c = c + sign * B.T @ block_b.astype(acc)
+    Gb, cb = gram_stats(block_D.astype(acc), block_b)
+    G = G + sign * Gb
+    if cb is not None:
+        c = c + sign * cb
     return G, c
 
 
