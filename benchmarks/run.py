@@ -22,7 +22,12 @@ MODULES = {
     "tau": "benchmarks.tau_calibration",      # §9 tuning protocol
     "roofline": "benchmarks.roofline_report", # §Roofline collation
     "engine": "benchmarks.engine_bench",      # iteration-engine backends
+    "streaming": "benchmarks.streaming_bench",  # out-of-core block streaming
 }
+
+# modules that can emit a machine-readable result: module key -> default path
+JSON_MODULES = {"engine": "BENCH_engine.json",
+                "streaming": "BENCH_streaming.json"}
 
 
 def main(argv=None) -> None:
@@ -31,19 +36,33 @@ def main(argv=None) -> None:
                     help="reduced sizes (CI-friendly)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset of: " + ",".join(MODULES))
-    ap.add_argument("--json", nargs="?", const="BENCH_engine.json",
-                    default=None, metavar="PATH",
-                    help="write the engine benchmark's JSON result "
-                         "(default %(const)s); implies the engine module")
+    ap.add_argument("--json", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="write machine-readable results for the JSON-"
+                         "capable modules in the selection (engine -> "
+                         "BENCH_engine.json, streaming -> "
+                         "BENCH_streaming.json); an explicit PATH names "
+                         "the sole selected module's output, or the "
+                         "engine result when several are selected "
+                         "(legacy behavior)")
     ap.add_argument("--strict", action="store_true",
                     help="exit non-zero if any module FAILED or reported a "
                          "parity MISMATCH (CI mode)")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else set(MODULES)
-    if args.json:
-        from benchmarks import engine_bench
-        engine_bench.JSON_PATH = args.json
-        only.add("engine")
+    if args.json is not None:
+        targets = [k for k in JSON_MODULES if k in only] or ["engine"]
+        if args.json and len(targets) > 1:
+            # an explicit PATH with several JSON-capable modules in the
+            # selection keeps the legacy meaning: PATH names the engine
+            # result; the others write their defaults
+            targets = ["engine"] + [k for k in targets if k != "engine"]
+        only.update(targets)
+        for key in targets:
+            mod = __import__(MODULES[key], fromlist=["JSON_PATH"])
+            mod.JSON_PATH = (args.json
+                             if args.json and key == targets[0]
+                             else JSON_MODULES[key])
 
     rows = ["name,us_per_call,derived"]
     for key, modname in MODULES.items():

@@ -132,12 +132,23 @@ class DistributedUnwrappedADMM:
 
         D_global: (m_global, n) sharded P(data_axes, None);
         aux_global: (m_global,) sharded P(data_axes).
+
+        ``m_global`` need not divide the shard count: uneven datasets are
+        zero-padded to a shard multiple inside the returned function
+        (pass HOST arrays in that case — pre-sharding an uneven array
+        with ``shard_rows`` would fail before the pad can happen).
         """
         axes = self.data_axes
         nshards = 1
         for a in axes:
             nshards *= mesh.shape[a]
-        assert m_global % nshards == 0
+        # Uneven datasets are zero-padded to a shard multiple rather than
+        # rejected: zero rows are EXACT under the transpose reduction
+        # (no Gram, d, or residual contribution — gram.blocked_rows), and
+        # with zero aux their iterates stay at zero, so the only telemetry
+        # they touch is the objective's constant f(0) term, subtracted in
+        # the wrapper below.
+        pad = -(-m_global // nshards) * nshards - m_global
 
         eng = self.engine
 
@@ -188,9 +199,13 @@ class DistributedUnwrappedADMM:
                 # + line 6's reduction input, fused — DESIGN.md §8).
                 st = eng.iterate(D_res, aux_loc, y, lam, x, want_dual=False)
                 Dx = st.lam - lam + st.y
-                # telemetry (global reductions of scalars)
+                # telemetry (global reductions of scalars). The objective
+                # is f(Dx) — same as the reference solver's _objective —
+                # NOT f(y): mid-run y != Dx (they only meet at
+                # convergence), and history must be comparable across
+                # solvers at every iteration.
                 r_sq = jax.lax.psum(jnp.sum((Dx - st.y) ** 2), axes)
-                obj_loc = self.loss.value(st.y, aux_loc)
+                obj_loc = self.loss.value(Dx, aux_loc)
                 obj = jax.lax.psum(obj_loc, axes)
                 if self.rho:
                     obj = obj + 0.5 * self.rho * jnp.sum(x * x)
@@ -210,7 +225,22 @@ class DistributedUnwrappedADMM:
             local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             check_vma=False,
         )
-        return jax.jit(fn)
+        if pad == 0:
+            return jax.jit(fn)
+
+        # Pad-row objective: iterates of zero rows stay at zero, so their
+        # per-iteration contribution is the CONSTANT f(0, aux=0).
+        pad_obj = float(self.loss.value(jnp.zeros((pad,)),
+                                        jnp.zeros((pad,))))
+
+        @jax.jit
+        def padded(D_global: Array, aux_global: Array):
+            Dp = jnp.pad(D_global, ((0, pad), (0, 0)))
+            ap = jnp.pad(aux_global, (0, pad))
+            x, objs, rs = fn(Dp, ap)
+            return x, objs - pad_obj, rs
+
+        return padded
 
 
 def shard_rows(mesh: Mesh, arr: Array, axes: Sequence[str]) -> Array:

@@ -100,6 +100,27 @@ def gram_and_rhs_chunked(
     return G, c
 
 
+@partial(jax.jit, static_argnames=("block_rows",))
+def gram_rhs_chunked(D: Array, b: Array, block_rows: int = 1024) -> Array:
+    """Streaming D^T b over row blocks — the rhs-only companion of
+    ``gram_chunked``. Unlike the dense ``gram_rhs`` it never materializes
+    a full accumulation-precision copy of D: each block is up-cast alone,
+    so live memory is one block (the warm-start ``transpose_d`` path of
+    the iteration engine)."""
+    m, n = D.shape
+    acc = _acc_dtype(D.dtype)
+    Dp = blocked_rows(D, block_rows)
+    bp = blocked_rows(b, block_rows)
+
+    def body(c, blk):
+        Db, bb = blk
+        return c + Db.astype(acc).T @ bb.astype(acc), None
+
+    c0 = jnp.zeros((n,) + b.shape[1:], acc)
+    c, _ = jax.lax.scan(body, c0, (Dp, bp))
+    return c
+
+
 def gram_factor(G: Array, ridge: float = 0.0) -> Array:
     """Cholesky factor of (G + ridge*I).
 

@@ -237,6 +237,27 @@ class UnwrappedADMM:
         y, lam, d, x, k, done = jax.lax.while_loop(cond, body, state)
         return ADMMResult(x, y.reshape(N, mi), lam.reshape(N, mi), k, None)
 
+    # -- out-of-core driver: D streams from a host/disk block store --------
+    def solve_streaming(
+        self, store, max_iters: int = 500, x0: Optional[Array] = None,
+        record: bool = False, overlap: bool = True, prefetch: int = 2,
+        device_dtype: Optional[str] = None,
+    ) -> ADMMResult:
+        """``solve`` for data that does not fit device memory: ``store``
+        is a :class:`repro.data.store.ShardedMatrixStore` (host RAM or
+        memory-mapped) and every pass — Gram setup, each iteration's
+        fused body — streams one row block at a time with double-buffered
+        host→device transfers (DESIGN.md §9). The m-sized iterates
+        (y, lam) persist to host per block, so device memory is bounded
+        by one block regardless of m. Same stopping rule and warm-start
+        semantics as ``solve``; ``overlap=False`` degrades to the naive
+        synchronous transfer loop (the benchmark baseline).
+        """
+        from repro.engine.streaming import solve_streaming as _solve
+        return _solve(self, store, max_iters=max_iters, x0=x0,
+                      record=record, overlap=overlap, prefetch=prefetch,
+                      device_dtype=device_dtype)
+
 
 # ---------------------------------------------------------------------------
 # Sparse stacking helpers (paper §7): D_hat = [I; D]

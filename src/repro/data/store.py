@@ -1,0 +1,222 @@
+"""ShardedMatrixStore — host-RAM / memory-mapped row-block data store.
+
+The out-of-core half of the paper's regime (DESIGN.md §9): the 5 Tb
+datasets of §10 never fit an accelerator, but every solver object is a
+reduction over ROW BLOCKS of D — Gram setup, the d/w/v transpose
+reductions, the prox. This store holds the rows where they fit (host RAM,
+or on disk behind ``numpy`` memory maps) and hands the streaming engine a
+uniform iterator of ``(D_block, aux_block)`` pairs; device memory is then
+bounded by one block regardless of m.
+
+Layout contract:
+
+  * rows are split into fixed-height blocks of ``block_rows``; the tail
+    block is stored UNPADDED (logical length) and zero-padded on read when
+    ``padded=True`` — zero rows are exact under every transpose reduction
+    (``gram.blocked_rows``) so padded reads need no masks;
+  * ``aux`` (labels / right-hand sides) rides along row-aligned, optional;
+  * every block carries a content fingerprint computed at WRITE time, so
+    downstream ingestion (``SufficientStats.from_store``) folds the
+    store's fingerprints instead of re-hashing gigabytes on every pass.
+
+On-disk format (``save`` / ``open``): a directory of ``block_*.npy`` (+
+``aux_*.npy``) files, loaded back with ``mmap_mode="r"`` — the OS page
+cache becomes the block cache and the prefetch thread of the streaming
+engine overlaps page-in with compute.
+
+Fingerprinting lives HERE (the data layer owns content identity);
+``repro.service.stats`` re-exports the helpers for backward compatibility.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+ZERO_FINGERPRINT = "0" * 64
+
+_META_NAME = "store_meta.json"
+
+
+def fingerprint_array(*arrays) -> str:
+    """sha256 content fingerprint of host-backed arrays (shape + bytes)."""
+    h = hashlib.sha256()
+    for a in arrays:
+        if a is None:
+            h.update(b"none")
+            continue
+        a = np.ascontiguousarray(np.asarray(a))
+        h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def combine_fingerprints(fp_a: str, fp_b: str, sign: int = 1) -> str:
+    """Commutative, associative, multiplicity-sensitive fold.
+
+    Addition mod 2^256 (not XOR): ingest order cannot matter, but ingesting
+    the same block twice must NOT cancel back to the original fingerprint —
+    the stats really do contain it twice. ``sign=-1`` is the downdate
+    inverse, so retiring a block restores the prior fingerprint exactly.
+    """
+    return format((int(fp_a, 16) + sign * int(fp_b, 16)) % (1 << 256),
+                  "064x")
+
+
+def _pad_rows(a: np.ndarray, rows: int) -> np.ndarray:
+    """Zero-pad the leading axis up to ``rows`` (no-op when already there)."""
+    k = a.shape[0]
+    if k == rows:
+        return a
+    out = np.zeros((rows,) + a.shape[1:], a.dtype)
+    out[:k] = a
+    return out
+
+
+class ShardedMatrixStore:
+    """Row-block store for a tall (m, n) design matrix + row-aligned aux.
+
+    Blocks are host ``numpy`` arrays — plain RAM when built with
+    :meth:`from_arrays`, read-only memory maps when opened from disk with
+    :meth:`open`. The solver never sees more than one block at a time.
+    """
+
+    def __init__(self, blocks_D: Sequence[np.ndarray],
+                 blocks_aux: Optional[Sequence[np.ndarray]],
+                 block_rows: int,
+                 fingerprints: Sequence[str],
+                 path: Optional[str] = None):
+        if not blocks_D:
+            raise ValueError("store needs at least one block")
+        if blocks_aux is not None and len(blocks_aux) != len(blocks_D):
+            raise ValueError("aux block count != D block count")
+        if len(fingerprints) != len(blocks_D):
+            raise ValueError("fingerprint count != block count")
+        self._blocks_D = list(blocks_D)
+        self._blocks_aux = list(blocks_aux) if blocks_aux is not None else None
+        self.block_rows = int(block_rows)
+        self.fingerprints = list(fingerprints)
+        self.path = path
+        self.n = int(blocks_D[0].shape[1])
+        self.m = int(sum(b.shape[0] for b in blocks_D))
+        self.dtype = np.dtype(blocks_D[0].dtype)
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_arrays(cls, D, aux=None,
+                    block_rows: int = 4096) -> "ShardedMatrixStore":
+        """Split host arrays into row blocks (tail unpadded) and fingerprint
+        each block once at build time."""
+        D = np.asarray(D)
+        if D.ndim == 3:                       # node-stacked (N, m_i, n)
+            D = D.reshape(-1, D.shape[-1])
+        if aux is not None:
+            aux = np.asarray(aux).reshape(-1)
+            if aux.shape[0] != D.shape[0]:
+                raise ValueError(
+                    f"aux rows {aux.shape[0]} != D rows {D.shape[0]}")
+        m = D.shape[0]
+        block_rows = int(min(block_rows, m))
+        starts = range(0, m, block_rows)
+        blocks_D = [np.ascontiguousarray(D[s:s + block_rows]) for s in starts]
+        blocks_aux = (None if aux is None else
+                      [np.ascontiguousarray(aux[s:s + block_rows])
+                       for s in starts])
+        fps = [fingerprint_array(bd, None if blocks_aux is None
+                                 else blocks_aux[i])
+               for i, bd in enumerate(blocks_D)]
+        return cls(blocks_D, blocks_aux, block_rows, fps)
+
+    # -- persistence (memory-mapped reopen) ---------------------------------
+    def save(self, path: str) -> str:
+        """Write blocks as .npy files + a JSON manifest; reopen with
+        :meth:`open` for memory-mapped (out-of-RAM) access."""
+        os.makedirs(path, exist_ok=True)
+        for i, b in enumerate(self._blocks_D):
+            np.save(os.path.join(path, f"block_{i:06d}.npy"), b)
+            if self._blocks_aux is not None:
+                np.save(os.path.join(path, f"aux_{i:06d}.npy"),
+                        self._blocks_aux[i])
+        meta = {"m": self.m, "n": self.n, "block_rows": self.block_rows,
+                "nblocks": self.nblocks, "dtype": self.dtype.name,
+                "has_aux": self._blocks_aux is not None,
+                "fingerprints": self.fingerprints}
+        with open(os.path.join(path, _META_NAME), "w") as f:
+            json.dump(meta, f, indent=1)
+        return path
+
+    @classmethod
+    def open(cls, path: str) -> "ShardedMatrixStore":
+        """Memory-map a saved store; blocks page in lazily on first touch,
+        so opening a multi-terabyte store costs only the manifest read."""
+        with open(os.path.join(path, _META_NAME)) as f:
+            meta = json.load(f)
+        blocks_D = [np.load(os.path.join(path, f"block_{i:06d}.npy"),
+                            mmap_mode="r")
+                    for i in range(meta["nblocks"])]
+        blocks_aux = None
+        if meta["has_aux"]:
+            blocks_aux = [np.load(os.path.join(path, f"aux_{i:06d}.npy"),
+                                  mmap_mode="r")
+                          for i in range(meta["nblocks"])]
+        return cls(blocks_D, blocks_aux, meta["block_rows"],
+                   meta["fingerprints"], path=path)
+
+    # -- block access -------------------------------------------------------
+    @property
+    def nblocks(self) -> int:
+        return len(self._blocks_D)
+
+    @property
+    def has_aux(self) -> bool:
+        return self._blocks_aux is not None
+
+    @property
+    def nbytes(self) -> int:
+        return sum(b.nbytes for b in self._blocks_D)
+
+    @property
+    def fingerprint(self) -> str:
+        """Order-independent fold of the per-block fingerprints — equals the
+        fingerprint of ingesting every block through
+        ``SufficientStats.update``."""
+        fp = ZERO_FINGERPRINT
+        for b in self.fingerprints:
+            fp = combine_fingerprints(fp, b)
+        return fp
+
+    def block_slice(self, k: int) -> slice:
+        """Logical row range [start, stop) of block k (tail may be short)."""
+        start = k * self.block_rows
+        return slice(start, start + self._blocks_D[k].shape[0])
+
+    def block(self, k: int, padded: bool = False
+              ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """Block k as host arrays. ``padded=True`` zero-pads the tail block
+        to the uniform (block_rows, n) shape so every device step compiles
+        once — exact, per the zero-row argument above."""
+        D_b = self._blocks_D[k]
+        a_b = self._blocks_aux[k] if self._blocks_aux is not None else None
+        if padded and D_b.shape[0] != self.block_rows:
+            D_b = _pad_rows(np.asarray(D_b), self.block_rows)
+            if a_b is not None:
+                a_b = _pad_rows(np.asarray(a_b), self.block_rows)
+        return D_b, a_b
+
+    def iter_blocks(self, padded: bool = False
+                    ) -> Iterator[Tuple[np.ndarray, Optional[np.ndarray]]]:
+        """The store's contract with the streaming engine: ``(D_block,
+        aux_block)`` pairs in row order (aux_block is None for unlabeled
+        stores)."""
+        for k in range(self.nblocks):
+            yield self.block(k, padded=padded)
+
+    def __repr__(self) -> str:
+        where = f"mmap:{self.path}" if self.path else "ram"
+        return (f"ShardedMatrixStore(m={self.m}, n={self.n}, "
+                f"block_rows={self.block_rows}, nblocks={self.nblocks}, "
+                f"dtype={self.dtype.name}, {where})")

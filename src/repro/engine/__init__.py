@@ -16,13 +16,21 @@ from repro.engine.engine import (
     gram_stats,
 )
 from repro.engine import autotune
+from repro.engine.streaming import (
+    StreamingEngine,
+    SweepResult,
+    solve_streaming,
+)
 
 __all__ = [
     "BACKENDS",
     "PALLAS_KINDS",
     "EngineStep",
     "IterationEngine",
+    "StreamingEngine",
+    "SweepResult",
     "default_backend",
     "gram_stats",
+    "solve_streaming",
     "autotune",
 ]

@@ -33,6 +33,9 @@ import jax.numpy as jnp
 VMEM_BUDGET = 8 * 1024 * 1024
 # Last-level cache slice assumed hot per chunked-backend stream on CPU/GPU.
 CACHE_BUDGET = 2 * 1024 * 1024
+# Default per-block DEVICE-memory budget for the out-of-core streaming
+# path (DESIGN.md §9): covers the two in-flight D blocks (double buffer).
+STREAM_BUDGET = 256 * 1024 * 1024
 
 # (kind, m, n, dtype_name) -> chosen block size(s); pin to override.
 CACHE: Dict[Tuple, Tuple] = {}
@@ -100,6 +103,28 @@ def gram_blocks(m: int, n: int, dtype, rhs: int = 0) -> Tuple[int, int]:
         CACHE[key] = (_clamp_multiple(bm, sub, min(128, cap), min(2048, cap)),
                       bn)
     return CACHE[key]
+
+
+def streaming_block_rows(m: int, n: int, dtype,
+                         budget_bytes: int = None) -> int:
+    """Store block height for the out-of-core streaming path (DESIGN.md
+    §9): the tallest block whose worst-case in-flight set fits the
+    device-memory budget. At the default prefetch depth of 2 the
+    pipeline can hold FOUR D blocks at once (one computing, two staged
+    in the queue, one mid-``device_put`` in the producer), plus the
+    per-row vector traffic."""
+    budget = int(budget_bytes) if budget_bytes else STREAM_BUDGET
+    key = ("stream", int(m), int(n), jnp.dtype(dtype).name, budget)
+    if key not in CACHE:
+        dsize = _dsize(dtype)
+        rows = budget // max(1, 4 * n * dsize + 6 * 4)
+        cap = _row_cap(m, 8)
+        # prefer >= 128-row blocks, but honor a tight budget (huge n /
+        # small budget) down to the 8-row tile floor rather than
+        # silently overshooting the caller's device memory
+        lo = min(128, cap) if rows >= 128 else 8
+        CACHE[key] = (_clamp_multiple(rows, 8, lo, cap),)
+    return CACHE[key][0]
 
 
 def chunked_block_rows(m: int, n: int, dtype) -> int:

@@ -167,8 +167,21 @@ class IterationEngine:
     # -- warm-start init: d from existing iterates, one pass ----------------
     def transpose_d(self, D: Array, y: Array, lam: Array):
         """d = D^T(y - lam) — setup-time only (cold starts get zeros
-        without touching D; warm starts pay one column pass)."""
-        return gram_lib.gram_rhs(D, y - lam)
+        without touching D; warm starts pay one column pass).
+
+        Backend-dispatched like every other pass over D: the dense
+        ``gram_rhs`` up-casts ALL of D to accumulation precision at once,
+        which on warm starts would materialize a full f32 copy of a
+        bf16-resident D — the chunked stream up-casts one block at a
+        time instead (the Pallas backends route here too; there is no
+        rhs-only kernel and the scan is setup-time, not per-iteration).
+        """
+        b = default_backend() if self.backend == "auto" else self.backend
+        if b == "reference":
+            return gram_lib.gram_rhs(D, y - lam)
+        m, n = D.shape
+        br = self.block_m or autotune.chunked_block_rows(m, n, D.dtype)
+        return gram_lib.gram_rhs_chunked(D, y - lam, br)
 
     # -- the fused iteration body -------------------------------------------
     def iterate(self, D: Array, aux: Optional[Array], y: Array, lam: Array,

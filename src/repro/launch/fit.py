@@ -6,6 +6,12 @@
 This is the paper's kind of end-to-end run (fit a linear model over a large
 distributed corpus); the multi-device path row-shards D over all local
 devices via shard_map and the transpose-reduction all-reduce.
+
+``--streaming`` switches to the out-of-core path (DESIGN.md §9): the data
+is staged into a ``ShardedMatrixStore`` (host RAM, or memory-mapped under
+``--store-dir``) sized by ``--device-budget-mb``, and the solve streams
+row blocks through the fused engine body with double-buffered transfers —
+the paper's 5 Tb regime, where D never fits the accelerator.
 """
 from __future__ import annotations
 
@@ -28,6 +34,52 @@ from repro.data import synthetic
 from repro.sharding import compat
 
 
+def _admm_params(problem):
+    """(loss, rho, tau) for the separable-loss ADMM paths — ONE table for
+    the streaming and multi-device branches, so a calibration change
+    cannot leave them inconsistent."""
+    if problem == "logistic":
+        return make_logistic(), 0.0, 0.1
+    return make_hinge(1.0), 1.0, 0.5          # svm
+
+
+def _fit_streaming(args, D, aux, mu):
+    """Out-of-core fit: stage into a block store, stream the solve."""
+    from repro.core.unwrapped import UnwrappedADMM
+    from repro.data.store import ShardedMatrixStore
+    from repro.engine import autotune
+    from repro.service.stats import SufficientStats
+
+    n = D.shape[-1]
+    m = D.reshape(-1, n).shape[0]
+    br = autotune.streaming_block_rows(
+        m, n, D.dtype, budget_bytes=args.device_budget_mb * 2 ** 20)
+    store = ShardedMatrixStore.from_arrays(
+        np.asarray(D.reshape(-1, n)), np.asarray(aux.reshape(-1)),
+        block_rows=br)
+    if args.store_dir:
+        store = ShardedMatrixStore.open(store.save(args.store_dir))
+    print(f"store: {store} (budget {args.device_budget_mb} MiB "
+          f"-> {store.nblocks} blocks)", flush=True)
+    if args.problem == "lasso":
+        # quadratic data term: one streaming stats pass, then the cached-
+        # Gram FASTA solve — no iteration ever touches the rows again.
+        from repro.core.fasta import transpose_reduction_lasso
+        stats = SufficientStats.from_store(store)
+        fr = transpose_reduction_lasso(stats.G, stats.c, mu,
+                                       iters=args.iters)
+        return FitResult(fr.x, int(fr.iters), fr.objective, "transpose",
+                         "lasso")
+    if args.problem not in ("logistic", "svm"):
+        raise SystemExit(f"--streaming does not support {args.problem!r} "
+                         f"(needs a separable ProxLoss on Dx)")
+    loss, rho, tau = _admm_params(args.problem)
+    solver = UnwrappedADMM(loss=loss, tau=tau, rho=rho)
+    res = solver.solve_streaming(store, max_iters=args.iters, record=True)
+    return FitResult(res.x, int(res.iters), res.history.objective,
+                     "transpose", args.problem)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--problem", default="logistic",
@@ -43,6 +95,14 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--multi-device", action="store_true",
                     help="shard rows over all local jax devices")
+    ap.add_argument("--streaming", action="store_true",
+                    help="out-of-core solve from a row-block store "
+                         "(device memory bounded by one block)")
+    ap.add_argument("--device-budget-mb", type=int, default=256,
+                    help="per-block device-memory budget for --streaming")
+    ap.add_argument("--store-dir", default=None,
+                    help="persist the block store here (memory-mapped "
+                         "reopen) instead of holding it in host RAM")
     args = ap.parse_args(argv)
 
     key = jax.random.PRNGKey(args.seed)
@@ -63,21 +123,26 @@ def main(argv=None):
           f"({N*mi*n*4/2**30:.2f} GiB) in {t_data:.1f}s", flush=True)
 
     t0 = time.time()
-    if args.multi_device and args.method == "transpose" \
+    if args.streaming:
+        res = _fit_streaming(args, D, aux, mu)
+    elif args.multi_device and args.method == "transpose" \
             and args.problem in ("logistic", "svm"):
         ndev = len(jax.devices())
         mesh = compat.make_mesh((ndev,), ("data",))
-        loss = make_logistic() if args.problem == "logistic" \
-            else make_hinge(1.0)
-        rho = 1.0 if args.problem == "svm" else 0.0
-        tau = 0.1 if args.problem == "logistic" else 0.5
+        loss, rho, tau = _admm_params(args.problem)
         solver = DistributedUnwrappedADMM(
             loss=loss, tau=tau, rho=rho, data_axes=("data",))
         m = N * mi
         solve = solver.build(mesh, m, n, iters=args.iters)
-        Dg = shard_rows(mesh, D.reshape(m, n), ("data",))
-        ag = shard_rows(mesh, aux.reshape(m), ("data",))
-        x, objs, _ = solve(Dg, ag)
+        if m % ndev:
+            # uneven rows cannot be pre-sharded (NamedSharding needs
+            # axis-0 divisibility): hand build()'s returned fn HOST
+            # arrays and let its zero-pad wrapper place them
+            x, objs, _ = solve(D.reshape(m, n), aux.reshape(m))
+        else:
+            Dg = shard_rows(mesh, D.reshape(m, n), ("data",))
+            ag = shard_rows(mesh, aux.reshape(m), ("data",))
+            x, objs, _ = solve(Dg, ag)
         res = FitResult(x, args.iters, objs, "transpose",
                                 args.problem)
     else:

@@ -27,7 +27,6 @@ row count ride as static aux data).
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 from functools import partial
 from typing import Optional, Tuple
 
@@ -36,37 +35,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gram as gram_lib
+# Content fingerprinting lives with the data layer (the block store
+# fingerprints at write time); re-exported here for backward compatibility.
+from repro.data.store import (   # noqa: F401  (re-export)
+    ZERO_FINGERPRINT,
+    combine_fingerprints,
+    fingerprint_array,
+)
 from repro.engine import gram_stats
 
 Array = jax.Array
-
-ZERO_FINGERPRINT = "0" * 64
-
-
-def fingerprint_array(*arrays) -> str:
-    """sha256 content fingerprint of host-backed arrays (shape + bytes)."""
-    h = hashlib.sha256()
-    for a in arrays:
-        if a is None:
-            h.update(b"none")
-            continue
-        a = np.ascontiguousarray(np.asarray(a))
-        h.update(str(a.shape).encode())
-        h.update(str(a.dtype).encode())
-        h.update(a.tobytes())
-    return h.hexdigest()
-
-
-def combine_fingerprints(fp_a: str, fp_b: str, sign: int = 1) -> str:
-    """Commutative, associative, multiplicity-sensitive fold.
-
-    Addition mod 2^256 (not XOR): ingest order cannot matter, but ingesting
-    the same block twice must NOT cancel back to the original fingerprint —
-    the stats really do contain it twice. ``sign=-1`` is the downdate
-    inverse, so retiring a block restores the prior fingerprint exactly.
-    """
-    return format((int(fp_a, 16) + sign * int(fp_b, 16)) % (1 << 256),
-                  "064x")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -127,6 +105,23 @@ class SufficientStats:
         return cls(G=G, c=c, rows=int(m),
                    fingerprint=fingerprint_array(D, b),
                    labeled_rows=int(m) if b is not None else 0)
+
+    @classmethod
+    def from_store(cls, store, dtype=jnp.float32) -> "SufficientStats":
+        """Ingest a :class:`repro.data.store.ShardedMatrixStore`: one
+        streaming pass over its row blocks, REUSING the store's per-block
+        write-time fingerprints instead of re-hashing the data — on a
+        multi-terabyte store the hash pass would cost as much as the
+        Gram pass itself. The resulting fingerprint equals folding the
+        same blocks through :meth:`update` (and ``store.fingerprint``).
+        """
+        stats = cls.zero(store.n, dtype=dtype)
+        for k, (D_b, b_b) in enumerate(store.iter_blocks(padded=False)):
+            stats = stats.update(jnp.asarray(D_b),
+                                 jnp.asarray(b_b) if b_b is not None
+                                 else None,
+                                 block_fingerprint=store.fingerprints[k])
+        return stats
 
     def update(self, block_D: Array, block_b: Optional[Array] = None,
                block_fingerprint: Optional[str] = None) -> "SufficientStats":
