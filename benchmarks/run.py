@@ -23,11 +23,13 @@ MODULES = {
     "roofline": "benchmarks.roofline_report", # §Roofline collation
     "engine": "benchmarks.engine_bench",      # iteration-engine backends
     "streaming": "benchmarks.streaming_bench",  # out-of-core block streaming
+    "sparse": "benchmarks.sparse_bench",      # block-CSR vs dense chunked
 }
 
 # modules that can emit a machine-readable result: module key -> default path
 JSON_MODULES = {"engine": "BENCH_engine.json",
-                "streaming": "BENCH_streaming.json"}
+                "streaming": "BENCH_streaming.json",
+                "sparse": "BENCH_sparse.json"}
 
 
 def main(argv=None) -> None:

@@ -1,0 +1,207 @@
+"""Sparse transpose-reduction benchmark — the block-CSR data path vs the
+dense chunked backend (§Perf, DESIGN.md §10).
+
+Sweeps density ∈ {1%, 5%, 20%, dense} at fixed (m, n) and records, per
+cell:
+
+  * ``us_per_iter`` for one donated engine step (x-solve + fused
+    iteration body), sparse backend vs dense chunked — the first
+    optimization that changes the hot path's ASYMPTOTICS (O(nnz) vs
+    O(mn)) rather than its constants;
+  * Gram(+RHS) setup time, sparse (host CSR matmul, O(nnz kp)) vs the
+    dense chunked stream (O(m n^2)) — including the measured CROSSOVER:
+    on CPU the dense MXU-style matmul wins back the Gram above a few
+    percent density even though the sparse FLOP count stays lower
+    (irregular accumulation runs far below matmul throughput; the JSON
+    records both sides so the claim can't silently rot);
+  * converged-x parity of a fixed-iteration SVM solve, sparse vs dense —
+    measured in f64 (``x_rel_err``: the two formats run the same math,
+    so only format bugs survive f64) AND in f32 (``x_rel_err_f32``: the
+    production dtype, where summation-order roundoff of the two paths
+    floors the comparison around 1e-5 — recorded, not gated).
+
+The SVM hinge loss keeps the prox cost negligible so the data-path
+asymptotics dominate what is measured. ``JSON_PATH`` (set by
+``benchmarks.run --json``) writes ``BENCH_sparse.json``.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# f64 parity runs need x64; every timed array below pins float32
+# explicitly, so timings are unaffected. (benchmarks.run iterates its
+# module dict in insertion order, which lists this module last.)
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import gram as gram_lib
+from repro.core.prox import make_hinge
+from repro.core.unwrapped import UnwrappedADMM
+from repro.data.sparse import sparse_classification_problem
+from repro.engine import IterationEngine, gram_stats
+
+JSON_PATH = None          # set by benchmarks.run when --json is given
+
+TAU, RHO = 0.5, 1.0       # the SVM calibration (launch/fit._admm_params)
+WARMUP = 2
+PARITY_ITERS = 100          # past convergence: both formats pin to the
+PASS_X_TOL = 1e-5           # same fixed point, leaving pure f32 roundoff
+
+
+def _engine(backend="auto"):
+    return IterationEngine(loss=make_hinge(1.0), tau=TAU, backend=backend)
+
+
+def _time_step(eng, D, aux, L, iters, batches=3):
+    """Median over ``batches`` timed bursts of ``iters`` donated steps —
+    a single OS hiccup on a small shared host cannot skew the cell."""
+    n = L.shape[0]
+    m = D.m if hasattr(D, "m") else D.shape[0]
+    step = eng.make_step(D, aux, L)
+    y = jnp.zeros((m,), jnp.float32)
+    lam = jnp.zeros((m,), jnp.float32)
+    d = jnp.zeros((n,), jnp.float32)
+    for _ in range(WARMUP):
+        y, lam, d, _ = step(y, lam, d)
+    jax.block_until_ready((y, lam, d))
+    times = []
+    for _ in range(batches):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            y, lam, d, x = step(y, lam, d)
+        jax.block_until_ready((y, lam, d))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)) / iters * 1e6
+
+
+def _time_gram(fn, reps=3):
+    t0 = time.perf_counter()
+    G, _ = fn()                               # warm (compile / first pass)
+    jax.block_until_ready(G)
+    if time.perf_counter() - t0 > 2.0:
+        reps = 1                              # slow cell: one timed rep
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        G, _ = fn()
+        jax.block_until_ready(G)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)) * 1e3
+
+
+def run(rows, quick: bool = False):
+    m, n = ((1 << 14, 256) if quick else (1 << 17, 512))
+    densities = [0.01, 0.05, None] if quick else [0.01, 0.05, 0.2, None]
+    iters = 3 if quick else 6
+    parity_iters = 30 if quick else PARITY_ITERS
+
+    solver_kw = dict(loss=make_hinge(1.0), tau=TAU, rho=RHO)
+    records = []
+    for density in densities:
+        seed = int((density or 1.0) * 1000)
+        if density is None:
+            # dense anchor cell: Gaussian data, dense path only
+            ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+            D = jax.random.normal(ks[0], (m, n), jnp.float32)
+            aux = jnp.sign(jax.random.normal(ks[1], (m,), jnp.float32))
+            bcsr = None
+        else:
+            prob = sparse_classification_problem(seed, m, n, density)
+            bcsr, aux = prob.D, prob.labels
+            D = bcsr.to_dense()
+
+        dense_eng = _engine("chunked")
+        dense_gram_ms = _time_gram(lambda: dense_eng.gram(D))
+        G, _ = dense_eng.gram(D)
+        L = gram_lib.gram_factor(G, ridge=RHO / TAU)
+        dense_us = _time_step(dense_eng, D, aux, L, iters)
+
+        rec = {"m": m, "n": n, "density": density,
+               "dense_us_per_iter": round(dense_us, 1),
+               "dense_gram_ms": round(dense_gram_ms, 2)}
+        label = f"sparse_m{m}_n{n}_d{density if density else 'dense'}"
+        if bcsr is not None:
+            sparse_gram_ms = _time_gram(lambda: gram_stats(bcsr, aux))
+            sparse_us = _time_step(_engine(), bcsr, aux, L, iters)
+
+            # converged-x parity: same fixed-iteration solve through both
+            # formats. f64 isolates FORMAT differences (identical math ->
+            # ~1e-12); the f32 rerun records the production-dtype
+            # summation-order roundoff floor alongside.
+            def _parity(bc, Dd, a):
+                rs = UnwrappedADMM(**solver_kw).run(
+                    bc, a, iters=parity_iters, record=False)
+                rd = UnwrappedADMM(backend="chunked", **solver_kw).run(
+                    Dd[None], a[None], iters=parity_iters, record=False)
+                return float(jnp.linalg.norm(rs.x - rd.x)
+                             / jnp.linalg.norm(rd.x))
+
+            x_rel = _parity(bcsr.astype(jnp.float64),
+                            D.astype(jnp.float64),
+                            aux.astype(jnp.float64))
+            x_rel_f32 = _parity(bcsr, D, aux)
+            rec.update({
+                "nnz": bcsr.nnz, "kp": bcsr.kp, "kc": bcsr.kc,
+                "block_m": bcsr.block_m,
+                "sparse_us_per_iter": round(sparse_us, 1),
+                "us_iter_speedup": round(dense_us / sparse_us, 3),
+                "sparse_gram_ms": round(sparse_gram_ms, 2),
+                "gram_speedup": round(dense_gram_ms / sparse_gram_ms, 3),
+                "x_rel_err": x_rel,
+                "x_rel_err_f32": x_rel_f32,
+            })
+            rows.append(f"{label},{sparse_us:.1f},"
+                        f"x{dense_us / sparse_us:.2f}_vs_dense_chunked")
+            rows.append(f"{label}_gram,{sparse_gram_ms * 1e3:.0f},"
+                        f"x{dense_gram_ms / sparse_gram_ms:.2f}"
+                        f"_vs_dense_chunked")
+        else:
+            rows.append(f"{label},{dense_us:.1f},dense_anchor")
+        records.append(rec)
+
+    if JSON_PATH:
+        sparse_cells = [r for r in records
+                        if r["density"] is not None
+                        and r["density"] <= 0.05]
+        best_us = max((r["us_iter_speedup"] for r in sparse_cells),
+                      default=None)
+        best_gram = max((r["gram_speedup"] for r in sparse_cells),
+                        default=None)
+        worst_x = max((r["x_rel_err"] for r in sparse_cells),
+                      default=None)
+        full_point = not quick
+        payload = {
+            "generated_by": "benchmarks/sparse_bench.py",
+            "device": jax.devices()[0].device_kind,
+            "backend_platform": jax.default_backend(),
+            "quick": quick,
+            "loss": "hinge (svm calibration: tau=0.5, rho=1)",
+            "points": records,
+            "acceptance": {
+                "criterion": "sparse backend >= 3x us/iter and >= 3x "
+                             "Gram setup vs dense chunked at some "
+                             "density <= 5% (m=2^17, n=512, CPU); "
+                             "converged-x rel err <= 1e-5 (f64 parity; "
+                             "the f32 roundoff floor rides along as "
+                             "x_rel_err_f32)",
+                "us_iter_speedup_best": best_us,
+                "gram_speedup_best": best_gram,
+                "x_rel_err_max": worst_x,
+                "x_rel_err_f32_max": max(
+                    (r["x_rel_err_f32"] for r in sparse_cells),
+                    default=None),
+                # null (not false) when the quick sweep skips the
+                # full-size point
+                "pass": (best_us is not None and best_us >= 3.0
+                         and best_gram >= 3.0
+                         and worst_x <= PASS_X_TOL)
+                if full_point else None,
+            },
+        }
+        with open(JSON_PATH, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")

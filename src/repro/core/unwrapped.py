@@ -39,6 +39,7 @@ import jax.numpy as jnp
 
 from repro.core import gram as gram_lib
 from repro.core.prox import ProxLoss
+from repro.data.sparse import BlockCSR
 
 Array = jax.Array
 
@@ -151,8 +152,22 @@ class UnwrappedADMM:
         return y, lam, d
 
     # -- fixed-iteration driver with full telemetry (lax.scan) --
-    @partial(jax.jit, static_argnames=("self", "iters", "record"))
     def run(
+        self,
+        D,
+        aux: Optional[Array],
+        iters: int,
+        x0: Optional[Array] = None,
+        record: bool = True,
+    ) -> ADMMResult:
+        """``D`` is node-stacked dense (N, m_i, n) or a flat
+        :class:`BlockCSR` (sparse solves return y/lam as (1, m))."""
+        if isinstance(D, BlockCSR):
+            return self._run_sparse(D, aux, iters, x0=x0, record=record)
+        return self._run_dense(D, aux, iters, x0, record)
+
+    @partial(jax.jit, static_argnames=("self", "iters", "record"))
+    def _run_dense(
         self,
         D: Array,
         aux: Optional[Array],
@@ -184,8 +199,12 @@ class UnwrappedADMM:
                 # The one telemetry quantity that is not derivable from the
                 # carried n-vectors; costs an extra pass, so it only runs on
                 # the recording driver (solve(), the hot path, never pays).
+                # Routed through the engine's streaming rmatvec: the dense
+                # ``Dflat.astype(acc).T @ g`` would materialize a full
+                # accumulation-precision copy of D every iteration on
+                # streaming-class backends.
                 g = self.loss.grad(Dx, aux_f)
-                gsq = jnp.sum((Dflat.astype(acc).T @ g) ** 2)
+                gsq = jnp.sum(eng.rmatvec(Dflat, g) ** 2)
             else:
                 gsq = jnp.asarray(jnp.nan, acc)
             hist = (obj, r, s, gsq)
@@ -204,8 +223,18 @@ class UnwrappedADMM:
                           iters_used, history)
 
     # -- early-stopping driver (lax.while_loop), deployment path --
-    @partial(jax.jit, static_argnames=("self", "max_iters"))
     def solve(
+        self, D, aux: Optional[Array], max_iters: int = 500,
+        x0: Optional[Array] = None,
+    ) -> ADMMResult:
+        """``D`` is node-stacked dense (N, m_i, n) or a flat
+        :class:`BlockCSR`."""
+        if isinstance(D, BlockCSR):
+            return self._solve_sparse(D, aux, max_iters, x0=x0)
+        return self._solve_dense(D, aux, max_iters, x0)
+
+    @partial(jax.jit, static_argnames=("self", "max_iters"))
+    def _solve_dense(
         self, D: Array, aux: Optional[Array], max_iters: int = 500,
         x0: Optional[Array] = None,
     ) -> ADMMResult:
@@ -236,6 +265,101 @@ class UnwrappedADMM:
                  jnp.asarray(0, jnp.int32), jnp.asarray(False))
         y, lam, d, x, k, done = jax.lax.while_loop(cond, body, state)
         return ADMMResult(x, y.reshape(N, mi), lam.reshape(N, mi), k, None)
+
+    # -- sparse drivers: same semantics over a BlockCSR ---------------------
+    # The Gram setup is a HOST pass for sparse data (the O(nnz) gram has
+    # no fast XLA lowering — kernels/spgram/ops.py), so these drivers
+    # factor L outside the jitted loop and hand it in; the per-iteration
+    # body, stopping rule, telemetry and warm-start semantics are the
+    # dense drivers' own, through the engine's sparse backend.
+
+    def _sparse_setup(self, D: BlockCSR) -> Array:
+        G, _ = self.engine.gram(D)
+        return gram_lib.gram_factor(G, ridge=self.rho / self.tau)
+
+    def _sparse_init(self, D: BlockCSR, x0, m, n, acc):
+        from repro.kernels.spgram import ops as spgram_ops
+        if x0 is not None:
+            y = spgram_ops.matvec(D, x0.astype(acc))
+            lam = jnp.zeros((m,), acc)
+            d = self.engine.transpose_d(D, y, lam)
+        else:
+            y = jnp.zeros((m,), acc)
+            lam = jnp.zeros((m,), acc)
+            d = jnp.zeros((n,), acc)
+        return y, lam, d
+
+    def _run_sparse(self, D: BlockCSR, aux, iters, x0=None, record=True):
+        L = self._sparse_setup(D)
+        return self._run_sparse_jit(D, aux, L, iters, x0, record)
+
+    @partial(jax.jit, static_argnames=("self", "iters", "record"))
+    def _run_sparse_jit(self, D: BlockCSR, aux, L, iters, x0, record):
+        m, n = D.m, D.n
+        acc = gram_lib._acc_dtype(D.dtype)
+        eng = self.engine
+        Dres = eng.prepare(D)
+        aux_f = aux.reshape(m) if aux is not None else None
+        y, lam, d = self._sparse_init(D, x0, m, n, acc)
+
+        def body(carry, _):
+            y, lam, d, _, k_conv, k = carry
+            x = gram_lib.gram_solve(L, d)
+            st = eng.iterate(Dres, aux_f, y, lam, x, want_dual=True)
+            Dx, r, s, eps_pri, eps_dual = self._residuals_tolerances(
+                st, lam, m, n)
+            done = (r <= eps_pri) & (s <= eps_dual)
+            k_conv = jnp.where((k_conv < 0) & done, k, k_conv)
+            obj = self._objective(x, Dx, aux_f)
+            if record and self.loss.grad is not None:
+                g = self.loss.grad(Dx, aux_f)
+                gsq = jnp.sum(eng.rmatvec(D, g) ** 2)
+            else:
+                gsq = jnp.asarray(jnp.nan, acc)
+            hist = (obj, r, s, gsq)
+            return (st.y, st.lam, st.d, x, k_conv, k + 1), hist
+
+        init = (y, lam, d, jnp.zeros((n,), acc),
+                jnp.asarray(-1, jnp.int32), jnp.asarray(0, jnp.int32))
+        (y, lam, d, x, k_conv, _), hist = jax.lax.scan(
+            body, init, None, length=iters)
+        objs, rs, ss, gsqs = hist
+        history = (
+            ADMMHistory(objs, rs, ss, gsqs, k_conv) if record else None
+        )
+        iters_used = jnp.where(k_conv >= 0, k_conv + 1, iters)
+        return ADMMResult(x, y[None], lam[None], iters_used, history)
+
+    def _solve_sparse(self, D: BlockCSR, aux, max_iters, x0=None):
+        L = self._sparse_setup(D)
+        return self._solve_sparse_jit(D, aux, L, max_iters, x0)
+
+    @partial(jax.jit, static_argnames=("self", "max_iters"))
+    def _solve_sparse_jit(self, D: BlockCSR, aux, L, max_iters, x0):
+        m, n = D.m, D.n
+        acc = gram_lib._acc_dtype(D.dtype)
+        eng = self.engine
+        Dres = eng.prepare(D)
+        aux_f = aux.reshape(m) if aux is not None else None
+        y0, lam0, d0 = self._sparse_init(D, x0, m, n, acc)
+
+        def cond(state):
+            _, _, _, _, k, done = state
+            return (~done) & (k < max_iters)
+
+        def body(state):
+            y, lam, d, _, k, _ = state
+            x = gram_lib.gram_solve(L, d)
+            st = eng.iterate(Dres, aux_f, y, lam, x, want_dual=True)
+            _, r, s, eps_pri, eps_dual = self._residuals_tolerances(
+                st, lam, m, n)
+            done = (r <= eps_pri) & (s <= eps_dual)
+            return (st.y, st.lam, st.d, x, k + 1, done)
+
+        state = (y0, lam0, d0, jnp.zeros((n,), acc),
+                 jnp.asarray(0, jnp.int32), jnp.asarray(False))
+        y, lam, d, x, k, done = jax.lax.while_loop(cond, body, state)
+        return ADMMResult(x, y[None], lam[None], k, None)
 
     # -- out-of-core driver: D streams from a host/disk block store --------
     def solve_streaming(

@@ -1,0 +1,311 @@
+"""Padded block-CSR — the sparse data path's container (DESIGN.md §10).
+
+The paper's headline regime (5 Tb of rows on 7000+ cores) is SPARSE: the
+transpose reductions ``D^T D``, ``D^T(y - lam)`` cost O(nnz), not O(mn).
+:class:`BlockCSR` stores a tall (m, n) matrix so every solver pass keeps
+that asymptotic:
+
+  * rows are grouped into ``block_m``-row blocks; each block stores per-row
+    column indices + values padded to the matrix's max row-nnz ``kp``
+    (pad slots are ``(index 0, value 0)`` — a zero VALUE kills the padded
+    contribution under every gather-multiply, whatever it gathers), so
+    every pass is a ``lax.scan`` over static-shaped blocks — the same
+    scaffold the chunked engine and ShardedMatrixStore use;
+  * each block ALSO carries its local transpose: a per-block CSC with
+    block-LOCAL row ids, ``(n, kc)`` per block. This is the transpose
+    reduction applied to the format itself: the d/w/v reductions
+    ``D_b^T u_b`` become GATHERS from the block-resident (block_m,)
+    vector u_b instead of scatter-adds into the (n,) accumulator —
+    measured on CPU XLA, scatter-add runs ~70x slower per element than
+    gather (DESIGN.md §10), so the scatter formulation would forfeit the
+    entire sparsity win;
+  * duplicate column indices within a row are legal and SUM (both
+    ``to_dense`` and every reduction treat the entries as COO triples).
+
+Memory: ~``2 * nnz * (4 + itemsize)`` bytes plus padding slack — the CSR
+and CSC copies each hold every nonzero once. At 5% density and f32 that
+is ~13x under the dense bytes; stores built from this container scale
+with nnz, so the out-of-core path fits ~1/density more rows per device
+budget.
+
+Generators mirror ``data/synthetic`` (classification / lasso problems)
+with controllable density, building the sparse triples directly — the
+dense matrix never materializes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+_SLOT_MULT = 4            # pad kp / kc up to a multiple of this
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-max(int(v), 1) // mult) * mult
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BlockCSR:
+    """Padded block-CSR + per-block local CSC for a tall (m, n) matrix.
+
+    ``indices/values``: (nblocks, block_m, kp) — per-row padded CSR.
+    ``col_indices/col_values``: (nblocks, n, kc) — per-block padded CSC
+    with block-local row ids in [0, block_m). Rows beyond ``m`` in the
+    tail block are zero-nnz (static shapes; padding is free in
+    sparse-land). Registered as a pytree (arrays are children; m/n/nnz
+    ride as static aux) so solvers jit/scan over it directly.
+    """
+
+    indices: Array        # (nb, bm, kp) int32 column ids
+    values: Array         # (nb, bm, kp)
+    col_indices: Array    # (nb, n, kc) int32 block-local row ids
+    col_values: Array     # (nb, n, kc)
+    m: int
+    n: int
+    nnz: int
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return ((self.indices, self.values, self.col_indices,
+                 self.col_values), (self.m, self.n, self.nnz))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        idx, val, cidx, cval = children
+        m, n, nnz = aux
+        return cls(indices=idx, values=val, col_indices=cidx,
+                   col_values=cval, m=m, n=n, nnz=nnz)
+
+    # -- shape surface ------------------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.m, self.n)
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    @property
+    def nblocks(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def block_m(self) -> int:
+        return self.indices.shape[1]
+
+    @property
+    def kp(self) -> int:
+        return self.indices.shape[2]
+
+    @property
+    def kc(self) -> int:
+        return self.col_indices.shape[2]
+
+    @property
+    def density(self) -> float:
+        return self.nnz / float(max(self.m * self.n, 1))
+
+    @property
+    def nbytes(self) -> int:
+        return sum(np.asarray(a).nbytes for a in
+                   (self.indices, self.values, self.col_indices,
+                    self.col_values))
+
+    # -- residency ----------------------------------------------------------
+    def astype(self, dtype) -> "BlockCSR":
+        """Cast the VALUE arrays (indices stay int32) — the engine's
+        residency hook (bf16 values, f32 accumulation)."""
+        if jnp.dtype(dtype) == jnp.dtype(self.dtype):
+            return self
+        return dataclasses.replace(
+            self, values=self.values.astype(dtype),
+            col_values=self.col_values.astype(dtype))
+
+    def reblock(self, block_m: int) -> "BlockCSR":
+        """Rebuild with a different block height (the out-of-core path's
+        device-budget knob). Extracts the nonzero slots and re-runs the
+        COO builder; explicit STORED zeros are dropped (exact under
+        every reduction), duplicates survive."""
+        nb, bm, kp = self.indices.shape
+        val = np.asarray(self.values).reshape(nb * bm, kp)
+        idx = np.asarray(self.indices).reshape(nb * bm, kp)
+        rows, slots = np.nonzero(val)
+        return BlockCSR.from_coo(rows.astype(np.int64), idx[rows, slots],
+                                 val[rows, slots], self.m, self.n,
+                                 block_m=block_m)
+
+    # -- conversion ---------------------------------------------------------
+    def to_dense(self) -> Array:
+        """Dense (m, n) — duplicates SUM (COO semantics); pad slots are
+        value-0 so they contribute nothing."""
+        nb, bm, kp = self.indices.shape
+        rows = jnp.arange(nb * bm, dtype=jnp.int32).reshape(nb, bm, 1)
+        out = jnp.zeros((nb * bm, self.n), self.dtype)
+        out = out.at[jnp.broadcast_to(rows, self.indices.shape),
+                     self.indices].add(self.values)
+        return out[:self.m]
+
+    @classmethod
+    def from_dense(cls, D, block_m: Optional[int] = None) -> "BlockCSR":
+        """Extract the nonzeros of a dense (m, n) or node-stacked
+        (N, m_i, n) matrix. Exact: stored zeros do not exist in dense
+        input, so the round trip ``to_dense(from_dense(D)) == D``."""
+        D = np.asarray(D)
+        if D.ndim == 3:
+            D = D.reshape(-1, D.shape[-1])
+        m, n = D.shape
+        rows, cols = np.nonzero(D)
+        return cls.from_coo(rows.astype(np.int64), cols.astype(np.int32),
+                            D[rows, cols], m, n, block_m=block_m)
+
+    @classmethod
+    def from_coo(cls, rows, cols, vals, m: int, n: int,
+                 block_m: Optional[int] = None,
+                 kp: Optional[int] = None) -> "BlockCSR":
+        """Build from COO triples (duplicates kept — they sum)."""
+        rows = np.asarray(rows, np.int64)
+        cols = np.asarray(cols, np.int32)
+        vals = np.asarray(vals)
+        order = np.argsort(rows, kind="stable")
+        rows, cols, vals = rows[order], cols[order], vals[order]
+        counts = np.bincount(rows, minlength=m).astype(np.int64)
+        kp = kp or _round_up(counts.max() if m else 1, _SLOT_MULT)
+        if block_m is None:
+            # Lazy: repro.engine imports this module, so a top-level
+            # import of the autotuner would be circular.
+            from repro.engine import autotune
+            block_m = autotune.sparse_block_m(m, n, kp, vals.dtype)
+        bm = int(min(block_m, _round_up(max(m, 1), 8)))
+        nb = max(1, -(-m // bm))
+        mp = nb * bm
+
+        idx = np.zeros((mp, kp), np.int32)
+        val = np.zeros((mp, kp), vals.dtype)
+        starts = np.concatenate([[0], np.cumsum(counts)])
+        slot = np.arange(rows.shape[0], dtype=np.int64) - starts[rows]
+        idx[rows, slot] = cols
+        val[rows, slot] = vals
+
+        # per-block local CSC: sort triples by (block, col, row)
+        blocks = rows // bm
+        local = (rows % bm).astype(np.int32)
+        key = blocks * n + cols
+        corder = np.argsort(key, kind="stable")     # row-major in, so
+        bkey = key[corder]                          # rows stay sorted
+        ccnt = np.bincount(bkey, minlength=nb * n).astype(np.int64)
+        kc = _round_up(ccnt.max() if ccnt.size else 1, _SLOT_MULT)
+        cstarts = np.concatenate([[0], np.cumsum(ccnt)])
+        cslot = np.arange(bkey.shape[0], dtype=np.int64) - cstarts[bkey]
+        cidx = np.zeros((nb * n, kc), np.int32)
+        cval = np.zeros((nb * n, kc), vals.dtype)
+        cidx[bkey, cslot] = local[corder]
+        cval[bkey, cslot] = vals[corder]
+
+        return cls(indices=jnp.asarray(idx.reshape(nb, bm, kp)),
+                   values=jnp.asarray(val.reshape(nb, bm, kp)),
+                   col_indices=jnp.asarray(cidx.reshape(nb, n, kc)),
+                   col_values=jnp.asarray(cval.reshape(nb, n, kc)),
+                   m=int(m), n=int(n), nnz=int(vals.shape[0]))
+
+    def __repr__(self) -> str:
+        return (f"BlockCSR(m={self.m}, n={self.n}, nnz={self.nnz}, "
+                f"density={self.density:.4f}, block_m={self.block_m}, "
+                f"kp={self.kp}, kc={self.kc}, dtype={self.dtype})")
+
+
+def host_blocks(bcsr: BlockCSR):
+    """Per-block host numpy views ``(indices, values, col_indices,
+    col_values)`` — the store's write path."""
+    return (np.asarray(bcsr.indices), np.asarray(bcsr.values),
+            np.asarray(bcsr.col_indices), np.asarray(bcsr.col_values))
+
+
+# ---------------------------------------------------------------------------
+# sparse synthetic generators (data/synthetic.py analogues, O(nnz) build)
+# ---------------------------------------------------------------------------
+
+class SparseLassoProblem(NamedTuple):
+    D: BlockCSR
+    b: Array          # (m,)
+    x_true: Array     # (n,)
+    mu: Array
+
+
+class SparseClassifProblem(NamedTuple):
+    D: BlockCSR
+    labels: Array     # (m,) in {-1, +1}
+
+
+def _random_coo(rng, m: int, n: int, density: float, chunk: int = 1 << 15):
+    """Bernoulli(density) sparsity pattern, built row-chunk by row-chunk
+    so the dense mask never exceeds ``chunk * n`` — O(nnz) output."""
+    rows, cols = [], []
+    for s in range(0, m, chunk):
+        e = min(m, s + chunk)
+        mask = rng.random((e - s, n), dtype=np.float32) < density
+        r, c = np.nonzero(mask)
+        rows.append((r + s).astype(np.int64))
+        cols.append(c.astype(np.int32))
+    rows = np.concatenate(rows) if rows else np.zeros((0,), np.int64)
+    cols = np.concatenate(cols) if cols else np.zeros((0,), np.int32)
+    return rows, cols
+
+
+def random_block_csr(seed: int, m: int, n: int, density: float,
+                     block_m: Optional[int] = None,
+                     dtype=np.float32) -> BlockCSR:
+    """Gaussian values on a Bernoulli(density) pattern."""
+    rng = np.random.default_rng(seed)
+    rows, cols = _random_coo(rng, m, n, density)
+    vals = rng.standard_normal(rows.shape[0]).astype(dtype)
+    return BlockCSR.from_coo(rows, cols, vals, m, n, block_m=block_m)
+
+
+def sparse_classification_problem(
+    seed: int, m: int, n: int, density: float,
+    informative: int = 5, mean_shift: float = 1.0,
+    block_m: Optional[int] = None, dtype=np.float32,
+) -> SparseClassifProblem:
+    """Sparse two-class problem (paper §10.1 analogue): +1 rows get a
+    ``mean_shift`` added to their entries in the first ``informative``
+    columns — signal only where the sparsity pattern touches those
+    columns, so classes stay non-separable."""
+    rng = np.random.default_rng(seed)
+    rows, cols = _random_coo(rng, m, n, density)
+    vals = rng.standard_normal(rows.shape[0]).astype(dtype)
+    labels = np.where(rng.random(m) < 0.5, 1.0, -1.0).astype(dtype)
+    boost = (labels[rows] > 0) & (cols < informative)
+    vals = vals + mean_shift * boost.astype(dtype)
+    D = BlockCSR.from_coo(rows, cols, vals, m, n, block_m=block_m)
+    return SparseClassifProblem(D, jnp.asarray(labels))
+
+
+def sparse_lasso_problem(
+    seed: int, m: int, n: int, density: float, active: int = 10,
+    noise_sigma: float = 1.0, block_m: Optional[int] = None,
+    dtype=np.float32,
+) -> SparseLassoProblem:
+    """Sparse lasso problem: b = D x_true + noise, mu = 10% of
+    ||D^T b||_inf (the paper's rule) — both computed in O(nnz)."""
+    rng = np.random.default_rng(seed)
+    rows, cols = _random_coo(rng, m, n, density)
+    vals = rng.standard_normal(rows.shape[0]).astype(dtype)
+    x_true = np.zeros((n,), dtype)
+    idx = rng.permutation(n)[:active]
+    x_true[idx] = np.where(rng.random(active) < 0.5, 1.0, -1.0)
+    Dx = np.bincount(rows, weights=(vals * x_true[cols]).astype(np.float64),
+                     minlength=m).astype(dtype)
+    b = Dx + noise_sigma * rng.standard_normal(m).astype(dtype)
+    Dtb = np.bincount(cols, weights=(vals * b[rows]).astype(np.float64),
+                      minlength=n)
+    mu = 0.1 * float(np.abs(Dtb).max() or 1.0)
+    D = BlockCSR.from_coo(rows, cols, vals, m, n, block_m=block_m)
+    return SparseLassoProblem(D, jnp.asarray(b), jnp.asarray(x_true),
+                              jnp.asarray(mu, dtype))

@@ -24,6 +24,14 @@ On-disk format (``save`` / ``open``): a directory of ``block_*.npy`` (+
 cache becomes the block cache and the prefetch thread of the streaming
 engine overlaps page-in with compute.
 
+SPARSE stores (:meth:`from_sparse`) hold padded block-CSR blocks
+(``data/sparse.BlockCSR``): each block is its four index/value arrays,
+so store bytes scale with nnz — the out-of-core path fits ~1/density
+more rows per device budget. Sparse blocks carry static shapes (padding
+is free in sparse-land: pad rows are zero-nnz), so ``padded`` only
+selects the block's LOGICAL row count; ``block()`` returns a one-block
+``BlockCSR`` in place of the dense array.
+
 Fingerprinting lives HERE (the data layer owns content identity);
 ``repro.service.stats`` re-exports the helpers for backward compatibility.
 """
@@ -85,11 +93,12 @@ class ShardedMatrixStore:
     :meth:`open`. The solver never sees more than one block at a time.
     """
 
-    def __init__(self, blocks_D: Sequence[np.ndarray],
+    def __init__(self, blocks_D: Sequence,
                  blocks_aux: Optional[Sequence[np.ndarray]],
                  block_rows: int,
                  fingerprints: Sequence[str],
-                 path: Optional[str] = None):
+                 path: Optional[str] = None,
+                 sparse_meta: Optional[dict] = None):
         if not blocks_D:
             raise ValueError("store needs at least one block")
         if blocks_aux is not None and len(blocks_aux) != len(blocks_D):
@@ -101,9 +110,20 @@ class ShardedMatrixStore:
         self.block_rows = int(block_rows)
         self.fingerprints = list(fingerprints)
         self.path = path
-        self.n = int(blocks_D[0].shape[1])
-        self.m = int(sum(b.shape[0] for b in blocks_D))
-        self.dtype = np.dtype(blocks_D[0].dtype)
+        self.sparse_meta = dict(sparse_meta) if sparse_meta else None
+        if self.sparse_meta:
+            # blocks are (indices, values, col_indices, col_values) tuples
+            self.n = int(self.sparse_meta["n"])
+            self.m = int(self.sparse_meta["m"])
+            self.dtype = np.dtype(self.sparse_meta["dtype"])
+        else:
+            self.n = int(blocks_D[0].shape[1])
+            self.m = int(sum(b.shape[0] for b in blocks_D))
+            self.dtype = np.dtype(blocks_D[0].dtype)
+
+    @property
+    def sparse(self) -> bool:
+        return self.sparse_meta is not None
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -131,20 +151,62 @@ class ShardedMatrixStore:
                for i, bd in enumerate(blocks_D)]
         return cls(blocks_D, blocks_aux, block_rows, fps)
 
+    @classmethod
+    def from_sparse(cls, bcsr, aux=None) -> "ShardedMatrixStore":
+        """Store a :class:`repro.data.sparse.BlockCSR`: one store block
+        per CSR block (``block_rows = bcsr.block_m``), bytes scaling with
+        nnz. Fingerprints hash each block's (indices, values, aux) at
+        write time, like the dense path."""
+        from repro.data.sparse import host_blocks
+        idx, val, cidx, cval = host_blocks(bcsr)
+        nb = idx.shape[0]
+        if aux is not None:
+            aux = np.asarray(aux).reshape(-1)
+            if aux.shape[0] != bcsr.m:
+                raise ValueError(
+                    f"aux rows {aux.shape[0]} != D rows {bcsr.m}")
+        blocks, blocks_aux, fps = [], [], []
+        for k in range(nb):
+            blocks.append((np.ascontiguousarray(idx[k]),
+                           np.ascontiguousarray(val[k]),
+                           np.ascontiguousarray(cidx[k]),
+                           np.ascontiguousarray(cval[k])))
+            a_b = None
+            if aux is not None:
+                s = k * bcsr.block_m
+                a_b = np.ascontiguousarray(
+                    aux[s:s + min(bcsr.block_m, bcsr.m - s)])
+                blocks_aux.append(a_b)
+            fps.append(fingerprint_array(blocks[-1][0], blocks[-1][1],
+                                         a_b))
+        meta = {"m": bcsr.m, "n": bcsr.n, "nnz": bcsr.nnz,
+                "kp": bcsr.kp, "kc": bcsr.kc,
+                "dtype": np.dtype(bcsr.dtype).name}
+        return cls(blocks, blocks_aux if aux is not None else None,
+                   bcsr.block_m, fps, sparse_meta=meta)
+
     # -- persistence (memory-mapped reopen) ---------------------------------
+    _SPARSE_PARTS = ("idx", "val", "cidx", "cval")
+
     def save(self, path: str) -> str:
         """Write blocks as .npy files + a JSON manifest; reopen with
         :meth:`open` for memory-mapped (out-of-RAM) access."""
         os.makedirs(path, exist_ok=True)
         for i, b in enumerate(self._blocks_D):
-            np.save(os.path.join(path, f"block_{i:06d}.npy"), b)
+            if self.sparse:
+                for part, arr in zip(self._SPARSE_PARTS, b):
+                    np.save(os.path.join(path,
+                                         f"block_{i:06d}_{part}.npy"), arr)
+            else:
+                np.save(os.path.join(path, f"block_{i:06d}.npy"), b)
             if self._blocks_aux is not None:
                 np.save(os.path.join(path, f"aux_{i:06d}.npy"),
                         self._blocks_aux[i])
         meta = {"m": self.m, "n": self.n, "block_rows": self.block_rows,
                 "nblocks": self.nblocks, "dtype": self.dtype.name,
                 "has_aux": self._blocks_aux is not None,
-                "fingerprints": self.fingerprints}
+                "fingerprints": self.fingerprints,
+                "sparse": self.sparse_meta}
         with open(os.path.join(path, _META_NAME), "w") as f:
             json.dump(meta, f, indent=1)
         return path
@@ -155,16 +217,24 @@ class ShardedMatrixStore:
         so opening a multi-terabyte store costs only the manifest read."""
         with open(os.path.join(path, _META_NAME)) as f:
             meta = json.load(f)
-        blocks_D = [np.load(os.path.join(path, f"block_{i:06d}.npy"),
-                            mmap_mode="r")
-                    for i in range(meta["nblocks"])]
+        sparse_meta = meta.get("sparse")
+        if sparse_meta:
+            blocks_D = [tuple(
+                np.load(os.path.join(path, f"block_{i:06d}_{part}.npy"),
+                        mmap_mode="r") for part in cls._SPARSE_PARTS)
+                for i in range(meta["nblocks"])]
+        else:
+            blocks_D = [np.load(os.path.join(path, f"block_{i:06d}.npy"),
+                                mmap_mode="r")
+                        for i in range(meta["nblocks"])]
         blocks_aux = None
         if meta["has_aux"]:
             blocks_aux = [np.load(os.path.join(path, f"aux_{i:06d}.npy"),
                                   mmap_mode="r")
                           for i in range(meta["nblocks"])]
         return cls(blocks_D, blocks_aux, meta["block_rows"],
-                   meta["fingerprints"], path=path)
+                   meta["fingerprints"], path=path,
+                   sparse_meta=sparse_meta)
 
     # -- block access -------------------------------------------------------
     @property
@@ -177,6 +247,8 @@ class ShardedMatrixStore:
 
     @property
     def nbytes(self) -> int:
+        if self.sparse:
+            return sum(a.nbytes for b in self._blocks_D for a in b)
         return sum(b.nbytes for b in self._blocks_D)
 
     @property
@@ -192,15 +264,41 @@ class ShardedMatrixStore:
     def block_slice(self, k: int) -> slice:
         """Logical row range [start, stop) of block k (tail may be short)."""
         start = k * self.block_rows
-        return slice(start, start + self._blocks_D[k].shape[0])
+        if self.sparse:
+            stop = min(start + self.block_rows, self.m)
+        else:
+            stop = start + self._blocks_D[k].shape[0]
+        return slice(start, stop)
 
     def block(self, k: int, padded: bool = False
               ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
         """Block k as host arrays. ``padded=True`` zero-pads the tail block
         to the uniform (block_rows, n) shape so every device step compiles
-        once — exact, per the zero-row argument above."""
-        D_b = self._blocks_D[k]
+        once — exact, per the zero-row argument above. Sparse stores
+        return a one-block :class:`~repro.data.sparse.BlockCSR` whose
+        arrays are ALWAYS full-shape (pad rows are zero-nnz); ``padded``
+        only selects whether its logical ``m`` is the uniform block_rows
+        or the tail's true row count."""
         a_b = self._blocks_aux[k] if self._blocks_aux is not None else None
+        if self.sparse:
+            from repro.data.sparse import BlockCSR
+            idx, val, cidx, cval = self._blocks_D[k]
+            sl = self.block_slice(k)
+            rows = self.block_rows if padded else sl.stop - sl.start
+            # nnz is static pytree aux: it must be block-INDEPENDENT
+            # (slot capacity, never an exact count) or the streaming
+            # step would retrace per block AND pay a full host scan of
+            # the (possibly memory-mapped) values every sweep.
+            D_b = BlockCSR(indices=np.asarray(idx)[None],
+                           values=np.asarray(val)[None],
+                           col_indices=np.asarray(cidx)[None],
+                           col_values=np.asarray(cval)[None],
+                           m=int(rows), n=self.n,
+                           nnz=int(self.block_rows) * int(idx.shape[-1]))
+            if padded and a_b is not None and a_b.shape[0] != self.block_rows:
+                a_b = _pad_rows(np.asarray(a_b), self.block_rows)
+            return D_b, a_b
+        D_b = self._blocks_D[k]
         if padded and D_b.shape[0] != self.block_rows:
             D_b = _pad_rows(np.asarray(D_b), self.block_rows)
             if a_b is not None:
@@ -217,6 +315,8 @@ class ShardedMatrixStore:
 
     def __repr__(self) -> str:
         where = f"mmap:{self.path}" if self.path else "ram"
+        kind = (f"sparse nnz={self.sparse_meta['nnz']}, "
+                if self.sparse else "")
         return (f"ShardedMatrixStore(m={self.m}, n={self.n}, "
                 f"block_rows={self.block_rows}, nblocks={self.nblocks}, "
-                f"dtype={self.dtype.name}, {where})")
+                f"{kind}dtype={self.dtype.name}, {where})")

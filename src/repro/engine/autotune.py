@@ -127,6 +127,29 @@ def streaming_block_rows(m: int, n: int, dtype,
     return CACHE[key][0]
 
 
+def sparse_block_m(m: int, n: int, kp: int, dtype) -> int:
+    """Row-block height for the padded block-CSR path (DESIGN.md §10).
+
+    nnz-budgeted, not (m x n)-budgeted: a block's live bytes are its CSR
+    slice ``bm * kp * (4 + dsize)`` plus the same nonzeros again in the
+    local-CSC companion (padding slack rides in the 2x), plus the five
+    (bm,) iterate vectors — so the block height scales with 1/density
+    and the cache budget covers ~1/density more rows than the dense
+    chunked stream. Tall floor (1024): the local CSC pads each column to
+    the block's max per-column count, and that Poisson slack shrinks as
+    blocks grow.
+    """
+    kp = max(int(kp), 1)
+    key = ("sparse", int(m), int(n), kp, jnp.dtype(dtype).name)
+    if key not in CACHE:
+        dsize = _dsize(dtype)
+        rows = CACHE_BUDGET // max(1, 2 * kp * (4 + dsize) + 20)
+        cap = _row_cap(m, 8)
+        CACHE[key] = (_clamp_multiple(rows, 8, min(1024, cap),
+                                      min(16384, cap)),)
+    return CACHE[key][0]
+
+
 def chunked_block_rows(m: int, n: int, dtype) -> int:
     """Row-block length for the lax.scan streaming backend (CPU/GPU)."""
     key = ("chunked", int(m), int(n), jnp.dtype(dtype).name)

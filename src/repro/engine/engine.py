@@ -18,6 +18,15 @@ inlining einsums. The engine owns three interchangeable backends
                             the same one-pass-fused body; each block stays
                             cache-hot between its Dx and D^T uses, halving
                             memory traffic vs the two-pass formulation.
+  * ``sparse``            — padded block-CSR data (``data/sparse.BlockCSR``):
+                            the same scan shape with O(nnz) per-block work
+                            (``kernels/spgram``) — gather-based Dx and
+                            gather-based transpose reductions over the
+                            per-block local CSC (DESIGN.md §10). Selected
+                            by the DATA TYPE: BlockCSR input takes this
+                            path under every backend except an explicit
+                            ``reference`` (which densifies — the parity
+                            oracle).
   * ``reference``         — the textbook two-pass jnp oracle (Dx pass,
                             then a D^T pass); parity baseline.
 
@@ -27,6 +36,10 @@ back by capability: Pallas needs a kernel-supported coordinatewise prox
 coordinatewise prox; everything else lands on reference. bf16 data
 residency (``residency="bf16"``) halves iteration HBM bytes again on top
 of the fused pass — all accumulation stays f32 in-register regardless.
+``residency="auto"`` applies bf16 only where it is a measured win (the
+real-TPU pallas backend); on CPU/chunked backends the per-block upcast
+dominates the saved bytes (BENCH_engine.json: 0.55x/1.88x), so auto
+resolves to None there (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -39,18 +52,23 @@ import jax.numpy as jnp
 
 from repro.core import gram as gram_lib
 from repro.core.prox import ProxLoss
+from repro.data.sparse import BlockCSR
 from repro.engine import autotune
 from repro.kernels.admm_iter.ops import admm_iter_full
 from repro.kernels.gram import ops as gram_ops
+from repro.kernels.spgram import ops as spgram_ops
 
 Array = jax.Array
 
-BACKENDS = ("reference", "chunked", "pallas", "pallas_interpret")
+BACKENDS = ("reference", "chunked", "sparse", "pallas", "pallas_interpret")
 
 # Prox kinds the fused Pallas iteration kernel evaluates in-register.
 PALLAS_KINDS = frozenset({"logistic", "hinge", "l1", "least_squares"})
 
-RESIDENCY_DTYPES = {None: None, "bf16": jnp.bfloat16}
+# "auto" resolves per backend at prepare()-time: bf16 where the HBM-bytes
+# win is real (real-TPU pallas), None on CPU/chunked backends where the
+# per-block upcast is a measured slowdown (DESIGN.md §8).
+RESIDENCY_DTYPES = {None: None, "bf16": jnp.bfloat16, "auto": "auto"}
 
 
 class EngineStep(NamedTuple):
@@ -82,8 +100,19 @@ def gram_stats(D: Array, b: Optional[Array] = None, *,
     bounds the chunked backend's live block (None -> autotuned); the
     Pallas backends tile from the autotuner's VMEM budget instead.
     """
-    if backend == "auto":
-        backend = default_backend()
+    if isinstance(D, BlockCSR):
+        if backend == "reference":
+            # parity oracle: densify, then the textbook dense gram
+            Dd = D.to_dense()
+            if b is None:
+                return gram_lib.gram(Dd), None
+            return gram_lib.gram(Dd), gram_lib.gram_rhs(Dd, b)
+        # HOST-ONLY pass (scipy CSR matmul; see kernels/spgram/ops.py) —
+        # sparse setup runs outside jit, like every other store-driven
+        # setup pass in the repo.
+        return spgram_ops.sparse_gram_rhs(D, b)
+    if backend in ("auto", "sparse"):      # "sparse" is data-format-
+        backend = default_backend()        # selected; dense input streams
     m, n = D.shape
     if backend in ("pallas", "pallas_interpret") and D.dtype == jnp.float64:
         backend = "chunked"          # Pallas kernels are f32/bf16 only
@@ -139,6 +168,12 @@ class IterationEngine:
     # -- backend selection (rules documented in DESIGN.md §8) ---------------
     def resolve(self, dtype=jnp.float32) -> str:
         b = default_backend() if self.backend == "auto" else self.backend
+        if b == "sparse":
+            # "sparse" is a data-format backend: dense arrays have no
+            # sparse body, so a dense resolve lands on the device default
+            # (the format dispatch in iterate() picks sparse for BlockCSR
+            # under every backend except an explicit reference).
+            b = default_backend()
         if b in ("pallas", "pallas_interpret") and (
                 self.loss.name not in PALLAS_KINDS
                 or jnp.dtype(dtype) == jnp.float64):
@@ -147,47 +182,78 @@ class IterationEngine:
             b = "reference"
         return b
 
+    def resolve_residency(self, dtype=jnp.float32) -> Optional[str]:
+        """DESIGN.md §8 residency rule: explicit settings are honored
+        as-is; ``"auto"`` casts to bf16 only on the real-TPU pallas
+        backend — on CPU/chunked (and interpret-mode) backends the
+        per-block upcast dominates the saved bytes (measured 0.55x/1.88x
+        vs 4.89x in BENCH_engine.json), so auto resolves to None."""
+        if self.residency != "auto":
+            return self.residency
+        return "bf16" if self.resolve(dtype) == "pallas" else None
+
     # -- data residency -----------------------------------------------------
-    def prepare(self, D: Array) -> Array:
+    def prepare(self, D) -> Array:
         """Cast D ONCE to its iteration-residency dtype (bf16 halves the
-        per-iteration HBM bytes; accumulation stays f32 in-register)."""
-        dt = RESIDENCY_DTYPES[self.residency]
-        return D.astype(dt) if dt is not None and D.dtype != dt else D
+        per-iteration HBM bytes; accumulation stays f32 in-register).
+        BlockCSR casts its value arrays; indices stay int32."""
+        dt = RESIDENCY_DTYPES[self.resolve_residency(D.dtype)]
+        if dt is None or D.dtype == dt:
+            return D
+        return D.astype(dt)
 
     # -- setup: Gram (+ RHS) in one data pass -------------------------------
-    def gram(self, D: Array, b: Optional[Array] = None,
+    def gram(self, D, b: Optional[Array] = None,
              block_rows: Optional[int] = None):
-        return gram_stats(D, b, backend=self._gram_backend(D.dtype),
-                          block_rows=block_rows)
+        backend = self._gram_backend(D.dtype)
+        if isinstance(D, BlockCSR) and self.backend == "reference":
+            # the densify parity oracle must stay reachable for sparse
+            # Gram too (the reference->chunked mapping below is a
+            # dense-path preference, not an oracle bypass)
+            backend = "reference"
+        return gram_stats(D, b, backend=backend, block_rows=block_rows)
 
     def _gram_backend(self, dtype) -> str:
         b = default_backend() if self.backend == "auto" else self.backend
         return "chunked" if b == "reference" else b
 
-    # -- warm-start init: d from existing iterates, one pass ----------------
-    def transpose_d(self, D: Array, y: Array, lam: Array):
-        """d = D^T(y - lam) — setup-time only (cold starts get zeros
-        without touching D; warm starts pay one column pass).
-
-        Backend-dispatched like every other pass over D: the dense
-        ``gram_rhs`` up-casts ALL of D to accumulation precision at once,
-        which on warm starts would materialize a full f32 copy of a
-        bf16-resident D — the chunked stream up-casts one block at a
-        time instead (the Pallas backends route here too; there is no
-        rhs-only kernel and the scan is setup-time, not per-iteration).
-        """
+    # -- transpose application: D^T u without a dense upcast ----------------
+    def rmatvec(self, D, u: Array) -> Array:
+        """D^T u in accumulation precision, backend-dispatched like every
+        other pass over D: the dense ``gram_rhs`` up-casts ALL of D to
+        accumulation precision at once, which would materialize a full
+        f32 copy of a bf16-resident D — the streaming-class backends
+        (chunked, pallas, sparse) up-cast one block at a time instead.
+        Setup-time and telemetry passes (warm-start d, run()'s grad_sq)
+        route here; ``u`` may be (m,) or (m, r)."""
+        if isinstance(D, BlockCSR):
+            return spgram_ops.rmatvec(D, u)
         b = default_backend() if self.backend == "auto" else self.backend
         if b == "reference":
-            return gram_lib.gram_rhs(D, y - lam)
+            return gram_lib.gram_rhs(D, u)
         m, n = D.shape
         br = self.block_m or autotune.chunked_block_rows(m, n, D.dtype)
-        return gram_lib.gram_rhs_chunked(D, y - lam, br)
+        return gram_lib.gram_rhs_chunked(D, u, br)
+
+    # -- warm-start init: d from existing iterates, one pass ----------------
+    def transpose_d(self, D, y: Array, lam: Array):
+        """d = D^T(y - lam) — setup-time only (cold starts get zeros
+        without touching D; warm starts pay one column pass). The
+        dispatch lives in :meth:`rmatvec` (there is no rhs-only Pallas
+        kernel and the scan is setup-time, not per-iteration)."""
+        return self.rmatvec(D, y - lam)
 
     # -- the fused iteration body -------------------------------------------
-    def iterate(self, D: Array, aux: Optional[Array], y: Array, lam: Array,
+    def iterate(self, D, aux: Optional[Array], y: Array, lam: Array,
                 x: Array, want_dual: bool = True) -> EngineStep:
         """Given x^{k+1}: stream D once, producing y^{k+1}, lam^{k+1} and
-        the reduction(s) that drive iteration k+2 and the stopping rule."""
+        the reduction(s) that drive iteration k+2 and the stopping rule.
+        ``D`` is a dense (m, n) array or a :class:`BlockCSR`."""
+        if isinstance(D, BlockCSR):
+            if self.backend == "reference":
+                return self._iterate_reference(D.to_dense(), aux, y, lam,
+                                               x, want_dual)
+            return self._iterate_sparse(D, aux, y, lam, x, want_dual)
         backend = self.resolve(D.dtype)
         if (backend == "chunked" and self.backend == "auto"
                 and D.size * D.dtype.itemsize <= 16 * autotune.CACHE_BUDGET):
@@ -252,6 +318,15 @@ class IterationEngine:
         return EngineStep(ys.reshape(-1)[:m], ls.reshape(-1)[:m], d,
                           w if want_dual else None,
                           v if want_dual else None)
+
+    def _iterate_sparse(self, D: BlockCSR, aux, y, lam, x, want_dual):
+        """O(nnz) fused body: lax.scan over the static-shaped block-CSR
+        blocks, gather-based Dx and gather-based d/w/v over each block's
+        local CSC (kernels/spgram, DESIGN.md §10)."""
+        y_new, lam_new, d, w, v = spgram_ops.sparse_admm_iter_full(
+            D, aux, y, lam, x, loss=self.loss, delta=self.delta,
+            want_dual=want_dual)
+        return EngineStep(y_new, lam_new, d, w, v)
 
     def _iterate_pallas(self, D, aux, y, lam, x, interpret, want_dual):
         m, n = D.shape

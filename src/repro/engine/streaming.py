@@ -124,7 +124,7 @@ class SweepResult(NamedTuple):
 
 @lru_cache(maxsize=64)
 def _block_fns(engine: IterationEngine, has_aux: bool,
-               want_dual: bool = True):
+               want_dual: bool = True, sparse: bool = False):
     """Jitted per-block step / init / gram bodies for one engine config.
 
     Cached so every sweep reuses the same traced functions (jit's own
@@ -133,7 +133,10 @@ def _block_fns(engine: IterationEngine, has_aux: bool,
     instead of one per reduction, which is what lets the double-buffered
     pipeline stay dispatch-bound-free (DESIGN.md §9). ``want_dual=False``
     is the lean hot-path body (d-reduction only, no stopping-rule/
-    telemetry quantities — the streaming analogue of ``make_step``)."""
+    telemetry quantities — the streaming analogue of ``make_step``).
+    ``sparse=True`` stages one-block BlockCSR pytrees; the step body is
+    the engine's own format dispatch, only the warm-start init differs
+    (gather matvec instead of the dense one)."""
 
     def step(D_b, aux_b, y_b, lam_b, x, acc):
         st = engine.iterate(D_b, aux_b if has_aux else None, y_b, lam_b, x,
@@ -151,6 +154,11 @@ def _block_fns(engine: IterationEngine, has_aux: bool,
 
     def init(D_b, x0):
         """Warm start: y_b = D_b x0 and its d-contribution (lam = 0)."""
+        if sparse:
+            from repro.kernels.spgram import ops as spgram_ops
+            acc = gram_lib._acc_dtype(D_b.dtype)
+            y_b = spgram_ops.matvec(D_b, x0.astype(acc))
+            return y_b, spgram_ops.rmatvec(D_b, y_b)
         acc = gram_lib._acc_dtype(D_b.dtype)
         y_b = D_b.astype(acc) @ x0.astype(acc)
         return y_b, y_b @ D_b.astype(acc)
@@ -185,9 +193,13 @@ class StreamingEngine:
     # data as collected, the device only ever holds residency-dtype
     # blocks (the engine's residency idea applied at the H2D boundary).
 
-    def _cast(self, a: np.ndarray) -> np.ndarray:
-        if self.device_dtype is None or a.dtype == np.dtype(
-                self.device_dtype):
+    def _cast(self, a):
+        if self.device_dtype is None:
+            return a
+        if hasattr(a, "astype") and not isinstance(a, np.ndarray):
+            # BlockCSR: casts value arrays, indices stay int32
+            return a.astype(self.device_dtype)
+        if a.dtype == np.dtype(self.device_dtype):
             return a
         return a.astype(self.device_dtype)
 
@@ -219,6 +231,18 @@ class StreamingEngine:
 
     # -- setup: Gram over the store, one block resident at a time ----------
     def gram_from_store(self, store: ShardedMatrixStore) -> Array:
+        if store.sparse:
+            # Sparse gram is a HOST pass (kernels/spgram/ops.py): the
+            # blocks are host arrays already, so nothing is staged to
+            # the device — the O(nnz) CSR matmul folds block by block.
+            # No residency cast either: device_dtype exists to cut H2D
+            # bytes, and quantizing a host-only pass would only degrade G.
+            G = None
+            for k in range(store.nblocks):
+                D_b, _ = store.block(k, padded=True)
+                Gb, _ = self.engine.gram(D_b)
+                G = Gb if G is None else G + Gb
+            return G
         _, _, gram = _block_fns(self.engine, store.has_aux)
         acc = gram_lib._acc_dtype(self.residency_dtype(store))
         G = jnp.zeros((store.n, store.n), acc)
@@ -233,7 +257,8 @@ class StreamingEngine:
     # -- warm start: y = D x0 per block, d = D^T y in the same pass --------
     def init_from_x0(self, store: ShardedMatrixStore, x0: Array,
                      y: np.ndarray) -> Array:
-        _, init, _ = _block_fns(self.engine, store.has_aux)
+        _, init, _ = _block_fns(self.engine, store.has_aux,
+                                sparse=store.sparse)
         x0 = jax.device_put(x0)
         d = None
         blocks = staged(range(store.nblocks),
@@ -259,7 +284,8 @@ class StreamingEngine:
         hot-path body (d only; the other accumulators come back as their
         zero init)."""
         depth = self.prefetch if overlap in (None, True) else 0
-        step, _, _ = _block_fns(self.engine, store.has_aux, want_dual)
+        step, _, _ = _block_fns(self.engine, store.has_aux, want_dual,
+                                sparse=store.sparse)
         x = jax.device_put(x)
         facc = gram_lib._acc_dtype(self.residency_dtype(store))
         # one buffer per field: the carry is DONATED into the step, and

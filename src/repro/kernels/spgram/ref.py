@@ -1,0 +1,35 @@
+"""Reference semantics for the sparse kernels: densify, then run the
+textbook dense ops. Parity baseline for tests — O(mn), never a hot path."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import gram as gram_lib
+
+
+def gram_ref(bcsr):
+    """D^T D via densification."""
+    return gram_lib.gram(bcsr.to_dense())
+
+
+def gram_rhs_ref(bcsr, b):
+    """D^T b via densification."""
+    return gram_lib.gram_rhs(bcsr.to_dense(), b)
+
+
+def matvec_ref(bcsr, x):
+    D = bcsr.to_dense()
+    acc = gram_lib._acc_dtype(D.dtype)
+    return D.astype(acc) @ x.astype(acc)
+
+
+def admm_iter_ref(bcsr, aux, y, lam, x, *, loss, delta: float):
+    """Dense two-pass iteration body on the densified matrix."""
+    D = bcsr.to_dense()
+    acc = gram_lib._acc_dtype(D.dtype)
+    Df = D.astype(acc)
+    Dx = Df @ x.astype(acc)
+    y_new = loss.prox(Dx + lam, delta, aux)
+    lam_new = lam + Dx - y_new
+    dwv = Df.T @ jnp.stack([y_new - lam_new, y_new - y, lam_new], axis=1)
+    return y_new, lam_new, dwv[:, 0], dwv[:, 1], dwv[:, 2]

@@ -1,0 +1,160 @@
+"""Sparse transpose-reduction kernel bodies over padded block-CSR.
+
+The compute shapes here are the sparse analogue of the fused dense bodies
+(`kernels/admm_iter`, `kernels/gram`), with one structural inversion
+dictated by measurement (DESIGN.md §10): on XLA the accumulation side of
+every transpose reduction is a GATHER over the per-block local CSC, never
+a scatter-add — CPU XLA scatter-add runs ~70x slower per element than
+gather, which would forfeit the whole O(nnz) win. Per block:
+
+  * ``Dx``  — gather ``x`` at the CSR column ids, multiply, row-sum
+              (x is n-sized and cache-resident);
+  * prox / lam-update — elementwise on the (block_m,) vectors;
+  * d/w/v  — gather the block-resident u vectors (y'-lam', y'-y, lam';
+              block_m-sized, L1/L2-resident) at the local-CSC row ids,
+              multiply by the CSC values, column-sum → a full (n,)
+              contribution per block, accumulated by addition.
+
+Everything accumulates in f32 (f64 for f64 data) regardless of the value
+residency dtype — the same precision contract as the dense kernels; the
+w/v differences are formed on the block vectors BEFORE the reduction
+(the dense kernels' anti-cancellation rule).
+
+These are jnp-level XLA bodies, not Pallas: the data-dependent gathers
+have no MXU mapping, and on CPU/GPU XLA already emits the fused
+gather-multiply-reduce loops these shapes want. The module stays under
+``kernels/`` because it is the hot-path compute the engine's ``sparse``
+backend dispatches to.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gram as gram_lib
+
+Array = jax.Array
+
+
+def block_matvec(indices: Array, values: Array, x: Array) -> Array:
+    """One block's D_b @ x via CSR gather: (bm, kp) -> (bm,)."""
+    acc = gram_lib._acc_dtype(values.dtype)
+    return jnp.sum(values.astype(acc) * x.astype(acc)[indices], axis=-1)
+
+
+def block_rmatvec(col_indices: Array, col_values: Array, u: Array) -> Array:
+    """One block's D_b^T u_b via local-CSC gather: (n, kc) x (bm,) -> (n,).
+    ``u`` may also be (bm, r) stacked — returns (n, r)."""
+    acc = gram_lib._acc_dtype(col_values.dtype)
+    g = u.astype(acc)[col_indices]                  # (n, kc[, r])
+    if u.ndim == 1:
+        return jnp.sum(col_values.astype(acc) * g, axis=-1)
+    return jnp.einsum("nk,nkr->nr", col_values.astype(acc), g)
+
+
+def block_iter_body(loss, delta, idx_b, val_b, cidx_b, cval_b,
+                    aux_b: Optional[Array], y_b: Array, lam_b: Array,
+                    x: Array, want_dual: bool):
+    """The fused per-block iteration: gather-Dx, prox, lam-update and the
+    three gather-based transpose reductions, one pass over the block's
+    nonzeros. Returns (y', lam', d, w, v) with w/v None when
+    ``want_dual`` is False (the lean hot-path body)."""
+    Dx = block_matvec(idx_b, val_b, x)
+    y_new = loss.prox(Dx + lam_b, delta, aux_b)
+    lam_new = lam_b + Dx - y_new
+    d = block_rmatvec(cidx_b, cval_b, y_new - lam_new)
+    w = v = None
+    if want_dual:
+        w = block_rmatvec(cidx_b, cval_b, y_new - y_b)
+        v = block_rmatvec(cidx_b, cval_b, lam_new)
+    return y_new, lam_new, d, w, v
+
+
+def block_gram_scatter(indices: Array, values: Array, G: Array) -> Array:
+    """Fold one block's D_b^T D_b into G via per-row outer-product
+    scatter — the jit-safe FALLBACK gram (exact, duplicate- and
+    pad-safe: pad slots carry value 0). Orders of magnitude slower than
+    the host CSR path on CPU XLA (the scatter measurement above); used
+    only when scipy is unavailable or the caller needs a traced gram."""
+    acc = G.dtype
+    v = values.astype(acc)
+    outer = v[:, :, None] * v[:, None, :]
+    return G.at[indices[:, :, None], indices[:, None, :]].add(outer)
+
+
+def blocked_vector(x: Array, nb: int, bm: int) -> Array:
+    """(m,) -> (nb, bm) zero-padded — the iterate layout for the scan."""
+    m = x.shape[0]
+    pad = nb * bm - m
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x.reshape((nb, bm) + x.shape[1:])
+
+
+def sparse_iterate(loss, delta, bcsr, aux: Optional[Array], y: Array,
+                   lam: Array, x: Array, want_dual: bool = True
+                   ) -> Tuple[Array, Array, Array, Optional[Array],
+                              Optional[Array]]:
+    """Full fused iteration: lax.scan of :func:`block_iter_body` over the
+    static-shaped blocks, d/w/v accumulated as (n,) carries."""
+    m, n = bcsr.m, bcsr.n
+    nb, bm, _ = bcsr.indices.shape
+    acc = gram_lib._acc_dtype(bcsr.dtype)
+    xc = x.astype(acc)
+    ys = blocked_vector(y, nb, bm)
+    lams = blocked_vector(lam, nb, bm)
+    xs = [bcsr.indices, bcsr.values, bcsr.col_indices, bcsr.col_values,
+          ys, lams]
+    if aux is not None:
+        xs.append(blocked_vector(aux, nb, bm))
+
+    def body(carry, blk):
+        d, w, v = carry
+        idx_b, val_b, cidx_b, cval_b, y_b, lam_b = blk[:6]
+        a_b = blk[6] if aux is not None else None
+        y_nb, l_nb, d_b, w_b, v_b = block_iter_body(
+            loss, delta, idx_b, val_b, cidx_b, cval_b, a_b, y_b, lam_b,
+            xc, want_dual)
+        d = d + d_b
+        if want_dual:
+            w = w + w_b
+            v = v + v_b
+        return (d, w, v), (y_nb, l_nb)
+
+    zero = jnp.zeros((n,), acc)
+    (d, w, v), (ys, lams) = jax.lax.scan(body, (zero, zero, zero),
+                                         tuple(xs))
+    return (ys.reshape(-1)[:m], lams.reshape(-1)[:m], d,
+            w if want_dual else None, v if want_dual else None)
+
+
+def sparse_matvec(bcsr, x: Array) -> Array:
+    """D @ x over the block scan — warm starts and telemetry."""
+    m = bcsr.m
+    nb, bm, _ = bcsr.indices.shape
+
+    def body(_, blk):
+        idx_b, val_b = blk
+        return None, block_matvec(idx_b, val_b, x)
+
+    _, out = jax.lax.scan(body, None, (bcsr.indices, bcsr.values))
+    return out.reshape(-1)[:m]
+
+
+def sparse_rmatvec(bcsr, u: Array) -> Array:
+    """D^T u over the block scan; ``u`` is (m,) or (m, r)."""
+    n = bcsr.n
+    nb, bm, _ = bcsr.indices.shape
+    us = blocked_vector(u, nb, bm)
+    acc = gram_lib._acc_dtype(bcsr.dtype)
+    zero = jnp.zeros((n,) + u.shape[1:], acc)
+
+    def body(c, blk):
+        cidx_b, cval_b, u_b = blk
+        return c + block_rmatvec(cidx_b, cval_b, u_b), None
+
+    c, _ = jax.lax.scan(body, zero,
+                        (bcsr.col_indices, bcsr.col_values, us))
+    return c

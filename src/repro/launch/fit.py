@@ -12,6 +12,12 @@ is staged into a ``ShardedMatrixStore`` (host RAM, or memory-mapped under
 ``--store-dir``) sized by ``--device-budget-mb``, and the solve streams
 row blocks through the fused engine body with double-buffered transfers —
 the paper's 5 Tb regime, where D never fits the accelerator.
+
+``--density p`` generates the data SPARSE (Bernoulli(p) pattern) and —
+with the default ``--sparse-format blockcsr`` — runs the whole pipeline
+through the padded block-CSR path (DESIGN.md §10): O(nnz) iterations,
+O(nnz) Gram setup, nnz-scaled stores. ``--sparse-format dense``
+densifies the same data and runs the dense path (the comparison knob).
 """
 from __future__ import annotations
 
@@ -44,19 +50,32 @@ def _admm_params(problem):
 
 
 def _fit_streaming(args, D, aux, mu):
-    """Out-of-core fit: stage into a block store, stream the solve."""
+    """Out-of-core fit: stage into a block store, stream the solve.
+    ``D`` may be dense node-stacked or a BlockCSR (nnz-scaled store)."""
     from repro.core.unwrapped import UnwrappedADMM
+    from repro.data.sparse import BlockCSR
     from repro.data.store import ShardedMatrixStore
     from repro.engine import autotune
     from repro.service.stats import SufficientStats
 
-    n = D.shape[-1]
-    m = D.reshape(-1, n).shape[0]
-    br = autotune.streaming_block_rows(
-        m, n, D.dtype, budget_bytes=args.device_budget_mb * 2 ** 20)
-    store = ShardedMatrixStore.from_arrays(
-        np.asarray(D.reshape(-1, n)), np.asarray(aux.reshape(-1)),
-        block_rows=br)
+    if isinstance(D, BlockCSR):
+        # Honor the device budget like the dense branch: the pipeline
+        # holds up to 4 blocks in flight (DESIGN.md §9), so re-block
+        # when 4x the current per-block bytes exceeds it.
+        budget = args.device_budget_mb * 2 ** 20
+        per_block = D.nbytes // max(D.nblocks, 1)
+        if 4 * per_block > budget:
+            bytes_per_row = max(per_block // D.block_m, 1)
+            D = D.reblock(max(8, budget // (4 * bytes_per_row)))
+        store = ShardedMatrixStore.from_sparse(D, np.asarray(aux))
+    else:
+        n = D.shape[-1]
+        m = D.reshape(-1, n).shape[0]
+        br = autotune.streaming_block_rows(
+            m, n, D.dtype, budget_bytes=args.device_budget_mb * 2 ** 20)
+        store = ShardedMatrixStore.from_arrays(
+            np.asarray(D.reshape(-1, n)), np.asarray(aux.reshape(-1)),
+            block_rows=br)
     if args.store_dir:
         store = ShardedMatrixStore.open(store.save(args.store_dir))
     print(f"store: {store} (budget {args.device_budget_mb} MiB "
@@ -76,6 +95,32 @@ def _fit_streaming(args, D, aux, mu):
     loss, rho, tau = _admm_params(args.problem)
     solver = UnwrappedADMM(loss=loss, tau=tau, rho=rho)
     res = solver.solve_streaming(store, max_iters=args.iters, record=True)
+    return FitResult(res.x, int(res.iters), res.history.objective,
+                     "transpose", args.problem)
+
+
+def _fit_sparse(args, bcsr, aux, mu):
+    """In-memory sparse fit over the block-CSR engine backend."""
+    from repro.core.unwrapped import UnwrappedADMM
+    from repro.service.stats import SufficientStats
+
+    if args.method != "transpose":
+        raise SystemExit("--density blockcsr supports --method transpose "
+                         "only (consensus is a dense-data path)")
+    print(f"sparse: {bcsr}", flush=True)
+    if args.problem == "lasso":
+        from repro.core.fasta import transpose_reduction_lasso
+        stats = SufficientStats.from_data(bcsr, aux)
+        fr = transpose_reduction_lasso(stats.G, stats.c, mu,
+                                       iters=args.iters)
+        return FitResult(fr.x, int(fr.iters), fr.objective, "transpose",
+                         "lasso")
+    if args.problem not in ("logistic", "svm"):
+        raise SystemExit(f"--density does not support {args.problem!r} "
+                         f"(needs a separable ProxLoss on Dx)")
+    loss, rho, tau = _admm_params(args.problem)
+    solver = UnwrappedADMM(loss=loss, tau=tau, rho=rho)
+    res = solver.run(bcsr, aux, iters=args.iters)
     return FitResult(res.x, int(res.iters), res.history.objective,
                      "transpose", args.problem)
 
@@ -103,27 +148,60 @@ def main(argv=None):
     ap.add_argument("--store-dir", default=None,
                     help="persist the block store here (memory-mapped "
                          "reopen) instead of holding it in host RAM")
+    ap.add_argument("--density", type=float, default=None,
+                    help="generate SPARSE data with this Bernoulli "
+                         "density (0 < p <= 1); omit for dense")
+    ap.add_argument("--sparse-format", default="blockcsr",
+                    choices=["blockcsr", "dense"],
+                    help="with --density: run the padded block-CSR path "
+                         "(O(nnz) per pass) or densify for comparison")
     args = ap.parse_args(argv)
 
     key = jax.random.PRNGKey(args.seed)
     N, mi, n = args.nodes, args.rows_per_node, args.features
     het = 1.0 if args.heterogeneous else 0.0
     t0 = time.time()
-    if args.problem == "lasso":
-        prob = synthetic.lasso_problem(key, N, mi, n, heterogeneity=het)
-        D, aux = prob.D, prob.b
-        mu = args.mu if args.mu is not None else float(prob.mu)
+    sparse_input = False
+    if args.density is not None:
+        from repro.data import sparse as sparse_data
+        m = N * mi
+        if args.problem == "lasso":
+            prob = sparse_data.sparse_lasso_problem(args.seed, m, n,
+                                                    args.density)
+            D, aux = prob.D, prob.b
+            mu = args.mu if args.mu is not None else float(prob.mu)
+        else:
+            prob = sparse_data.sparse_classification_problem(
+                args.seed, m, n, args.density)
+            D, aux = prob.D, prob.labels
+            mu = args.mu if args.mu is not None else 1.0
+        if args.sparse_format == "dense":
+            D = D.to_dense().reshape(N, mi, n)
+            aux = aux.reshape(N, mi)
+        else:
+            sparse_input = True
+        gib = (D.nbytes if sparse_input else N * mi * n * 4) / 2 ** 30
+        print(f"data: {m} rows x {n} features at density "
+              f"{args.density} -> {args.sparse_format} "
+              f"({gib:.3f} GiB) in {time.time()-t0:.1f}s", flush=True)
     else:
-        prob = synthetic.classification_problem(key, N, mi, n,
-                                                heterogeneity=het)
-        D, aux = prob.D, prob.labels
-        mu = args.mu if args.mu is not None else 1.0
-    t_data = time.time() - t0
-    print(f"data: {N} nodes x {mi} rows x {n} features "
-          f"({N*mi*n*4/2**30:.2f} GiB) in {t_data:.1f}s", flush=True)
+        if args.problem == "lasso":
+            prob = synthetic.lasso_problem(key, N, mi, n, heterogeneity=het)
+            D, aux = prob.D, prob.b
+            mu = args.mu if args.mu is not None else float(prob.mu)
+        else:
+            prob = synthetic.classification_problem(key, N, mi, n,
+                                                    heterogeneity=het)
+            D, aux = prob.D, prob.labels
+            mu = args.mu if args.mu is not None else 1.0
+        t_data = time.time() - t0
+        print(f"data: {N} nodes x {mi} rows x {n} features "
+              f"({N*mi*n*4/2**30:.2f} GiB) in {t_data:.1f}s", flush=True)
 
     t0 = time.time()
-    if args.streaming:
+    if sparse_input and not args.streaming:
+        res = _fit_sparse(args, D, aux, mu)
+    elif args.streaming:
         res = _fit_streaming(args, D, aux, mu)
     elif args.multi_device and args.method == "transpose" \
             and args.problem in ("logistic", "svm"):
@@ -153,9 +231,31 @@ def main(argv=None):
     print(f"[{args.method}] {args.problem}: {res.iters} iters in {dt:.1f}s",
           flush=True)
 
-    D2 = np.asarray(D.reshape(-1, n))
-    a2 = np.asarray(aux.reshape(-1))
     x = np.asarray(res.x)
+    a2 = np.asarray(aux).reshape(-1)
+    if sparse_input:
+        # O(nnz) diagnostics: everything below needs only Dx / D^T r.
+        from repro.kernels.spgram import ops as spgram_ops
+        Dx = np.asarray(spgram_ops.matvec(D, jnp.asarray(x)))
+        if args.problem == "lasso":
+            grad = np.asarray(spgram_ops.rmatvec(
+                D, jnp.asarray(Dx - a2)))
+            on = np.abs(x) > 1e-7
+            viol = max(float(np.abs(grad[on] + mu * np.sign(x[on])).max())
+                       if on.any() else 0.0,
+                       float(np.maximum(np.abs(grad[~on]) - mu, 0).max())
+                       if (~on).any() else 0.0)
+            print(f"KKT violation: {viol:.2e}, support: {int(on.sum())}")
+        elif args.problem == "logistic":
+            obj = float(np.sum(np.logaddexp(0.0, -a2 * Dx)))
+            acc = float(np.mean(np.sign(Dx) == a2))
+            print(f"objective: {obj:.2f}, train acc: {acc:.4f}")
+        else:
+            obj = float(np.sum(np.maximum(1.0 - a2 * Dx, 0.0))
+                        + 0.5 * np.sum(x * x))
+            print(f"objective: {obj:.2f}")
+        return res
+    D2 = np.asarray(D.reshape(-1, n))
     if args.problem == "lasso":
         viol, sup = lasso_kkt_gap(D2, a2, x, mu)
         print(f"KKT violation: {viol:.2e}, support err: {sup:.2e}")

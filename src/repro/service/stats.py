@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gram as gram_lib
+from repro.data.sparse import BlockCSR
 # Content fingerprinting lives with the data layer (the block store
 # fingerprints at write time); re-exported here for backward compatibility.
 from repro.data.store import (   # noqa: F401  (re-export)
@@ -45,6 +46,24 @@ from repro.data.store import (   # noqa: F401  (re-export)
 from repro.engine import gram_stats
 
 Array = jax.Array
+
+
+def _content_fingerprint(block_D, block_b) -> str:
+    """One definition of content identity for both formats: BlockCSR
+    hashes its index/value arrays, dense hashes the matrix — used by
+    from_data, update and downdate alike so the ingest and retire paths
+    can never disagree. The sparse arrays are CANONICALIZED to 2-D
+    (rows, kp) before hashing: fingerprint_array includes the shape, and
+    the store hashes per-block (block_m, kp) arrays while a one-block
+    BlockCSR view carries (1, block_m, kp) — same bytes, and they must
+    hash identically or retiring a store-ingested block would leave a
+    non-cancelling fingerprint."""
+    if isinstance(block_D, BlockCSR):
+        kp = block_D.kp
+        return fingerprint_array(
+            np.asarray(block_D.indices).reshape(-1, kp),
+            np.asarray(block_D.values).reshape(-1, kp), block_b)
+    return fingerprint_array(block_D, block_b)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -95,7 +114,9 @@ class SufficientStats:
                   backend: str = "auto") -> "SufficientStats":
         """One streaming pass over (D, b) — the paper's §4 reduction,
         dispatched through the iteration engine (DESIGN.md §8): the fused
-        Gram+RHS Pallas kernel on TPU, the chunked lax.scan elsewhere."""
+        Gram+RHS Pallas kernel on TPU, the chunked lax.scan elsewhere,
+        the O(nnz) spgram pass for :class:`BlockCSR` data (fingerprinted
+        over its index/value arrays)."""
         m, n = D.shape
         acc = gram_lib._acc_dtype(D.dtype)
         # one fused pass for (m,) and (m, r) rhs alike
@@ -103,7 +124,7 @@ class SufficientStats:
         if c is None:
             c = jnp.zeros((n,), acc)
         return cls(G=G, c=c, rows=int(m),
-                   fingerprint=fingerprint_array(D, b),
+                   fingerprint=_content_fingerprint(D, b),
                    labeled_rows=int(m) if b is not None else 0)
 
     @classmethod
@@ -117,7 +138,7 @@ class SufficientStats:
         """
         stats = cls.zero(store.n, dtype=dtype)
         for k, (D_b, b_b) in enumerate(store.iter_blocks(padded=False)):
-            stats = stats.update(jnp.asarray(D_b),
+            stats = stats.update(D_b if store.sparse else jnp.asarray(D_b),
                                  jnp.asarray(b_b) if b_b is not None
                                  else None,
                                  block_fingerprint=store.fingerprints[k])
@@ -130,12 +151,17 @@ class SufficientStats:
         Host-driven streaming ingest — the accumulation itself is jitted;
         fingerprinting hashes the concrete block (pass ``block_fingerprint``
         to skip hashing, e.g. when the caller already has a dataset key).
+        :class:`BlockCSR` blocks fold through the host spgram pass
+        (fingerprinted over their index/value arrays).
         """
         k, n = block_D.shape
         assert n == self.n, f"block width {n} != stats width {self.n}"
         if block_fingerprint is None:
-            block_fingerprint = fingerprint_array(block_D, block_b)
-        G, c = _accumulate(self.G, self.c, block_D, block_b)
+            block_fingerprint = _content_fingerprint(block_D, block_b)
+        if isinstance(block_D, BlockCSR):
+            G, c = _accumulate_sparse(self.G, self.c, block_D, block_b)
+        else:
+            G, c = _accumulate(self.G, self.c, block_D, block_b)
         return SufficientStats(
             G=G, c=c, rows=self.rows + int(k),
             fingerprint=combine_fingerprints(self.fingerprint,
@@ -148,8 +174,12 @@ class SufficientStats:
         """Retire a previously-ingested block (subtracts its fingerprint)."""
         k, n = block_D.shape
         if block_fingerprint is None:
-            block_fingerprint = fingerprint_array(block_D, block_b)
-        G, c = _accumulate(self.G, self.c, block_D, block_b, sign=-1.0)
+            block_fingerprint = _content_fingerprint(block_D, block_b)
+        if isinstance(block_D, BlockCSR):
+            G, c = _accumulate_sparse(self.G, self.c, block_D, block_b,
+                                      sign=-1.0)
+        else:
+            G, c = _accumulate(self.G, self.c, block_D, block_b, sign=-1.0)
         return SufficientStats(
             G=G, c=c, rows=self.rows - int(k),
             fingerprint=combine_fingerprints(self.fingerprint,
@@ -201,6 +231,16 @@ def _accumulate(G, c, block_D, block_b, sign=1.0):
     G = G + sign * Gb
     if cb is not None:
         c = c + sign * cb
+    return G, c
+
+
+def _accumulate_sparse(G, c, block_D, block_b, sign=1.0):
+    """Sparse fold — NOT jitted: the O(nnz) gram is a host pass
+    (kernels/spgram/ops.py); only the adds run on device."""
+    Gb, cb = gram_stats(block_D, block_b)
+    G = G + sign * Gb.astype(G.dtype)
+    if cb is not None:
+        c = c + sign * cb.astype(c.dtype)
     return G, c
 
 

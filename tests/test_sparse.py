@@ -1,0 +1,402 @@
+"""Sparse block-CSR data path (ISSUE 4): container round trips, engine
+backend parity across every kernel prox kind (single step + full solve +
+history), edge cases (zero-nnz blocks, duplicate column indices,
+m % block_m tails), the nnz-scaled store (RAM + mmap round trip,
+fingerprint reuse in SufficientStats.from_store), the streaming sparse
+solve, and the engine-adjacent satellites (rmatvec-routed grad_sq
+telemetry, residency="auto" resolution)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import gram as gram_lib
+from repro.core.prox import (
+    make_hinge,
+    make_l1,
+    make_least_squares,
+    make_logistic,
+)
+from repro.core.unwrapped import UnwrappedADMM
+from repro.data.sparse import (
+    BlockCSR,
+    random_block_csr,
+    sparse_classification_problem,
+    sparse_lasso_problem,
+)
+from repro.data.store import ShardedMatrixStore, fingerprint_array
+from repro.engine import IterationEngine, autotune, gram_stats
+from repro.kernels.spgram import ops as spgram_ops
+from repro.kernels.spgram import ref as spgram_ref
+from repro.service.stats import SufficientStats
+
+jax.config.update("jax_platform_name", "cpu")
+
+LOSSES = [(make_logistic(), 0.5), (make_hinge(0.7), 1.0),
+          (make_l1(0.3), 1.0), (make_least_squares(), 2.0)]
+
+
+@pytest.fixture(scope="module")
+def classif():
+    # m % block_m != 0 on purpose: every fixture consumer crosses a tail
+    return sparse_classification_problem(0, 1100, 24, 0.15, block_m=256)
+
+
+def _rand_state(m, n, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    y = jax.random.normal(ks[0], (m,))
+    lam = jax.random.normal(ks[1], (m,))
+    x = jax.random.normal(ks[2], (n,)) * 0.1
+    return y, lam, x
+
+
+# ---------------------------------------------------------------------------
+# container: conversion, padding, duplicates, zero blocks
+# ---------------------------------------------------------------------------
+
+def test_dense_round_trip_and_properties():
+    rng = np.random.default_rng(0)
+    D = rng.standard_normal((137, 23)).astype(np.float32)
+    D[rng.random((137, 23)) < 0.8] = 0
+    b = BlockCSR.from_dense(D, block_m=48)
+    np.testing.assert_array_equal(np.asarray(b.to_dense()), D)
+    assert b.shape == (137, 23)
+    assert b.nnz == int(np.count_nonzero(D))
+    assert b.nblocks == 3 and b.block_m == 48        # 137 -> 3 x 48 tail-padded
+    assert abs(b.density - b.nnz / (137 * 23)) < 1e-12
+    # pad slots carry value 0 (the exactness contract)
+    val = np.asarray(b.values)
+    assert val.shape[0] * val.shape[1] == 144        # padded row count
+
+
+def test_duplicate_column_indices_sum():
+    """Duplicates are COO semantics: they SUM, in to_dense and in every
+    reduction (gathers sum the slots; scatter-free by construction)."""
+    rows = np.array([0, 0, 0, 1, 2, 2])
+    cols = np.array([1, 1, 3, 0, 2, 2])
+    vals = np.array([1.0, 2.0, 4.0, 5.0, 3.0, -1.0], np.float32)
+    b = BlockCSR.from_coo(rows, cols, vals, m=3, n=4, block_m=2)
+    want = np.array([[0, 3, 0, 4], [5, 0, 0, 0], [0, 0, 2, 0]], np.float32)
+    np.testing.assert_array_equal(np.asarray(b.to_dense()), want)
+    x = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    np.testing.assert_allclose(np.asarray(spgram_ops.matvec(b, x)),
+                               want @ np.asarray(x), rtol=1e-6)
+    u = jnp.asarray([1.0, -2.0, 0.5])
+    np.testing.assert_allclose(np.asarray(spgram_ops.rmatvec(b, u)),
+                               want.T @ np.asarray(u), rtol=1e-6)
+    G, c = gram_stats(b, u)
+    np.testing.assert_allclose(np.asarray(G), want.T @ want,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c), want.T @ np.asarray(u),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_zero_nnz_blocks_and_empty_matrix():
+    """A block of all-zero rows (and a fully empty matrix) must be legal:
+    pad slots only, nothing leaks into any reduction."""
+    D = np.zeros((300, 8), np.float32)
+    D[250:, :2] = 1.0                    # blocks 0 and 1 are zero-nnz
+    b = BlockCSR.from_dense(D, block_m=100)
+    np.testing.assert_array_equal(np.asarray(b.to_dense()), D)
+    empty = BlockCSR.from_dense(np.zeros((64, 8), np.float32), block_m=32)
+    assert empty.nnz == 0
+    np.testing.assert_array_equal(np.asarray(empty.to_dense()), 0)
+    G, _ = gram_stats(empty)
+    np.testing.assert_array_equal(np.asarray(G), 0)
+    y, lam, x = _rand_state(300, 8)
+    eng = IterationEngine(loss=make_l1(0.3), tau=1.0)
+    ref = eng.iterate(jnp.asarray(D), None, y, lam, x)
+    st = eng.iterate(b, None, y, lam, x)
+    for got, want in zip(st, ref):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine parity: fused sparse body vs dense reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("loss,tau", LOSSES,
+                         ids=[l.name for l, _ in LOSSES])
+def test_iterate_sparse_parity(classif, loss, tau):
+    bcsr, labels = classif.D, classif.labels
+    Dd = bcsr.to_dense()
+    m, n = bcsr.shape
+    assert m % bcsr.block_m != 0          # tail block in play
+    y, lam, x = _rand_state(m, n, seed=7)
+    a = None if loss.name == "l1" else labels
+    ref = IterationEngine(loss=loss, tau=tau, backend="reference").iterate(
+        Dd, a, y, lam, x)
+    st = IterationEngine(loss=loss, tau=tau).iterate(bcsr, a, y, lam, x)
+    scale = max(float(jnp.max(jnp.abs(ref.d))), 1.0)
+    np.testing.assert_allclose(np.asarray(st.y), np.asarray(ref.y),
+                               atol=3e-5)
+    np.testing.assert_allclose(np.asarray(st.lam), np.asarray(ref.lam),
+                               atol=3e-5)
+    for got, want in [(st.d, ref.d), (st.w, ref.w), (st.v, ref.v)]:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-3 * scale)
+    assert st.y.shape == (m,) and st.lam.shape == (m,)
+    # backend="reference" on sparse input densifies (the parity oracle)
+    ref2 = IterationEngine(loss=loss, tau=tau,
+                           backend="reference").iterate(bcsr, a, y, lam, x)
+    np.testing.assert_allclose(np.asarray(ref2.d), np.asarray(ref.d),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_gram_backend_parity(classif):
+    bcsr, labels = classif.D, classif.labels
+    G, c = gram_stats(bcsr, labels)
+    Gr = spgram_ref.gram_ref(bcsr)
+    cr = spgram_ref.gram_rhs_ref(bcsr, labels)
+    np.testing.assert_allclose(np.asarray(G), np.asarray(Gr),
+                               rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(cr),
+                               rtol=1e-5, atol=1e-3)
+    # multi-RHS rides the same pass
+    B = jax.random.normal(jax.random.PRNGKey(1), (bcsr.m, 3))
+    _, C = gram_stats(bcsr, B)
+    np.testing.assert_allclose(np.asarray(C),
+                               np.asarray(spgram_ref.gram_rhs_ref(bcsr, B)),
+                               rtol=1e-5, atol=1e-3)
+    # the jit-safe scatter fallback agrees with the host path
+    from repro.kernels.spgram import ops as ops_mod
+    acc = gram_lib._acc_dtype(bcsr.dtype)
+    np.testing.assert_allclose(np.asarray(ops_mod._gram_fallback(bcsr, acc)),
+                               np.asarray(G), rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("problem", ["logistic", "svm", "least_squares"])
+def test_run_parity_solve_and_history(classif, problem):
+    """Full fixed-iteration solve: same (x, history) sparse vs dense."""
+    bcsr, labels = classif.D, classif.labels
+    Dd = bcsr.to_dense()[None]
+    kw = {"logistic": dict(loss=make_logistic(), tau=0.1),
+          "svm": dict(loss=make_hinge(1.0), tau=0.5, rho=1.0),
+          "least_squares": dict(loss=make_least_squares(), tau=1.0),
+          }[problem]
+    rs = UnwrappedADMM(**kw).run(bcsr, labels, iters=40)
+    rd = UnwrappedADMM(backend="chunked", **kw).run(Dd, labels[None],
+                                                    iters=40)
+    nx = float(jnp.linalg.norm(rs.x - rd.x) / jnp.linalg.norm(rd.x))
+    assert nx < 2e-4, nx
+    np.testing.assert_allclose(np.asarray(rs.history.objective),
+                               np.asarray(rd.history.objective),
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(rs.history.primal_res),
+                               np.asarray(rd.history.primal_res),
+                               atol=1e-3)
+    assert rs.y.shape == (1, bcsr.m)      # N=1 stacking convention
+
+
+def test_l1_lasso_through_stats(classif):
+    """Sparse lasso rides the stats path: identical FASTA solution."""
+    from repro.core.fasta import transpose_reduction_lasso
+    prob = sparse_lasso_problem(2, 800, 32, 0.1)
+    stats = SufficientStats.from_data(prob.D, prob.b)
+    G, c = gram_stats(prob.D, prob.b, backend="reference")  # densified
+    xs = transpose_reduction_lasso(stats.G, stats.c, float(prob.mu),
+                                   iters=800).x
+    xd = transpose_reduction_lasso(G, c, float(prob.mu), iters=800).x
+    np.testing.assert_allclose(np.asarray(xs), np.asarray(xd),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_solve_sparse_stopping_and_warm_start(classif):
+    bcsr, labels = classif.D, classif.labels
+    solver = UnwrappedADMM(loss=make_logistic(), tau=0.1)
+    cold = solver.solve(bcsr, labels, max_iters=300)
+    assert int(cold.iters) < 300
+    dense = UnwrappedADMM(loss=make_logistic(), tau=0.1,
+                          backend="chunked").solve(
+        bcsr.to_dense()[None], labels[None], max_iters=300)
+    # same stopping rule; a few iterations of slack is the documented
+    # backend behavior (DESIGN.md §3: f32 prox noise floors the dual
+    # residual, so the dual test crosses on noise dips)
+    assert abs(int(cold.iters) - int(dense.iters)) <= 5
+    nx = float(jnp.linalg.norm(cold.x - dense.x)
+               / jnp.linalg.norm(dense.x))
+    assert nx < 1e-4, nx
+    # x0 threads through: one warm iteration differs from one cold one
+    w1 = solver.run(bcsr, labels, iters=1, x0=cold.x, record=False)
+    c1 = solver.run(bcsr, labels, iters=1, record=False)
+    assert float(jnp.linalg.norm(w1.x - c1.x)) > 1e-3
+
+
+def test_residency_bf16_values_only(classif):
+    eng = IterationEngine(loss=make_logistic(), tau=0.5,
+                          residency="bf16")
+    bres = eng.prepare(classif.D)
+    assert bres.values.dtype == jnp.bfloat16
+    assert bres.col_values.dtype == jnp.bfloat16
+    assert bres.indices.dtype == jnp.int32
+    y, lam, x = _rand_state(classif.D.m, classif.D.n)
+    st = eng.iterate(bres, classif.labels, y, lam, x)
+    assert st.d.dtype == jnp.float32      # f32 accumulation contract
+
+
+# ---------------------------------------------------------------------------
+# store: nnz-scaled blocks, mmap round trip, fingerprint reuse
+# ---------------------------------------------------------------------------
+
+def test_sparse_store_round_trip(tmp_path, classif):
+    bcsr, labels = classif.D, classif.labels
+    ram = ShardedMatrixStore.from_sparse(bcsr, labels)
+    assert ram.sparse and ram.m == bcsr.m and ram.nblocks == bcsr.nblocks
+    # store bytes scale with nnz, not m*n (asserted at a realistic
+    # density/width — the tiny fixture is dominated by padding slack)
+    low = random_block_csr(3, 4000, 256, 0.02)
+    assert ShardedMatrixStore.from_sparse(low).nbytes \
+        < 0.25 * low.m * low.n * 4
+    disk = ShardedMatrixStore.open(ram.save(str(tmp_path / "s")))
+    assert disk.sparse and disk.fingerprints == ram.fingerprints
+    assert disk.sparse_meta == ram.sparse_meta
+    # blocks reassemble exactly (RAM and mmap alike)
+    for store in (ram, disk):
+        parts = []
+        for k in range(store.nblocks):
+            D_b, a_b = store.block(k, padded=False)
+            sl = store.block_slice(k)
+            assert D_b.m == sl.stop - sl.start == a_b.shape[0]
+            parts.append(np.asarray(D_b.to_dense()))
+        np.testing.assert_array_equal(np.concatenate(parts),
+                                      np.asarray(bcsr.to_dense()))
+    # padded read keeps static shapes with the tail's logical m widened
+    D_p, a_p = disk.block(disk.nblocks - 1, padded=True)
+    assert D_p.m == disk.block_rows and a_p.shape == (disk.block_rows,)
+
+
+def test_sparse_store_fingerprint_reuse(tmp_path, classif, monkeypatch):
+    """from_store folds the store's write-time fingerprints — it must
+    never re-hash block content (on a real store that pass costs as much
+    as the Gram itself)."""
+    bcsr, labels = classif.D, classif.labels
+    store = ShardedMatrixStore.open(
+        ShardedMatrixStore.from_sparse(bcsr, labels).save(
+            str(tmp_path / "s")))
+    ref = SufficientStats.from_data(bcsr, labels)     # hashes, by design
+    import repro.service.stats as stats_mod
+
+    def boom(*a, **k):
+        raise AssertionError("from_store re-hashed a block")
+
+    monkeypatch.setattr(stats_mod, "fingerprint_array", boom)
+    s = SufficientStats.from_store(store)
+    assert s.fingerprint == store.fingerprint
+    assert s.rows == bcsr.m and s.labeled_rows == bcsr.m
+    np.testing.assert_allclose(np.asarray(s.G), np.asarray(ref.G),
+                               rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s.c), np.asarray(ref.c),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_sparse_store_downdate_cancels_fingerprint(classif):
+    """Retiring every store-ingested block must restore the ZERO stats
+    exactly, fingerprint included — store write-time hashes and
+    update/downdate content hashes are the same canonical (rows, kp)
+    form (a shape-dependent hash of the one-block view would leave a
+    non-cancelling fingerprint)."""
+    bcsr, labels = classif.D, classif.labels
+    store = ShardedMatrixStore.from_sparse(bcsr, labels)
+    stats = SufficientStats.from_store(store)
+    for k in range(store.nblocks):
+        D_b, a_b = store.block(k, padded=False)
+        stats = stats.downdate(D_b, jnp.asarray(a_b))
+    zero = SufficientStats.zero(bcsr.n)
+    assert stats.fingerprint == zero.fingerprint
+    assert stats.rows == 0 and stats.labeled_rows == 0
+    np.testing.assert_allclose(np.asarray(stats.G), 0, atol=1e-2)
+
+
+def test_sparse_streaming_solve_parity(tmp_path, classif):
+    """solve_streaming over a sparse mmap store == in-memory sparse
+    solve (same stopping rule, same x), warm start included."""
+    bcsr, labels = classif.D, classif.labels
+    store = ShardedMatrixStore.open(
+        ShardedMatrixStore.from_sparse(bcsr, labels).save(
+            str(tmp_path / "s")))
+    solver = UnwrappedADMM(loss=make_logistic(), tau=0.1)
+    mem = solver.solve(bcsr, labels, max_iters=200)
+    stream = solver.solve_streaming(store, max_iters=200, record=True)
+    # block-ordered summation may cross the noise-floored dual test a
+    # step apart (DESIGN.md §3)
+    assert abs(int(stream.iters) - int(mem.iters)) <= 2
+    nx = float(jnp.linalg.norm(stream.x - mem.x)
+               / jnp.linalg.norm(mem.x))
+    assert nx < 1e-5, nx
+    warm = solver.solve_streaming(store, max_iters=200, x0=mem.x)
+    assert int(warm.iters) <= int(mem.iters) + 2
+
+
+# ---------------------------------------------------------------------------
+# satellites: grad_sq telemetry routing, residency="auto", autotune
+# ---------------------------------------------------------------------------
+
+def test_grad_sq_streams_without_dense_upcast(classif, monkeypatch):
+    """run()'s grad_sq telemetry routes through the engine's rmatvec: on
+    streaming-class backends the dense gram_rhs (which materializes a
+    full accumulation-precision copy of D) must never be hit; the
+    reference backend still uses it."""
+    prob = sparse_classification_problem(5, 700, 16, 0.2, block_m=128)
+    D3 = prob.D.to_dense()[None]
+    from repro.engine import engine as engine_mod
+
+    def boom(*a, **k):
+        raise AssertionError("dense gram_rhs called from a streaming "
+                             "backend")
+
+    monkeypatch.setattr(engine_mod.gram_lib, "gram_rhs", boom)
+    # distinctive tau so no earlier trace of this config is cached
+    solver = UnwrappedADMM(loss=make_logistic(), tau=0.07,
+                           backend="chunked")
+    res = solver.run(D3, prob.labels[None], iters=3, record=True)
+    assert np.isfinite(np.asarray(res.history.grad_sq)).all()
+    sp = UnwrappedADMM(loss=make_logistic(), tau=0.07)
+    res = sp.run(prob.D, prob.labels, iters=3, record=True)
+    assert np.isfinite(np.asarray(res.history.grad_sq)).all()
+    with pytest.raises(AssertionError, match="dense gram_rhs"):
+        UnwrappedADMM(loss=make_logistic(), tau=0.07,
+                      backend="reference").run(D3, prob.labels[None],
+                                               iters=3, record=True)
+
+
+def test_residency_auto_resolution():
+    """DESIGN.md §8 rule: auto -> None on CPU/chunked backends (bf16 is a
+    measured slowdown there), bf16 only on real-TPU pallas; explicit
+    bf16 stays honored as-is."""
+    auto = IterationEngine(loss=make_logistic(), tau=1.0,
+                           residency="auto")
+    # on this CPU host auto resolves to chunked -> residency None
+    assert auto.resolve() in ("chunked", "pallas")
+    if auto.resolve() == "chunked":
+        assert auto.resolve_residency() is None
+        D = jax.random.normal(jax.random.PRNGKey(0), (64, 8))
+        assert auto.prepare(D).dtype == jnp.float32
+    explicit = IterationEngine(loss=make_logistic(), tau=1.0,
+                               residency="bf16")
+    assert explicit.resolve_residency() == "bf16"
+    D = jax.random.normal(jax.random.PRNGKey(0), (64, 8))
+    assert explicit.prepare(D).dtype == jnp.bfloat16
+    interp = IterationEngine(loss=make_logistic(), tau=1.0,
+                             backend="pallas_interpret", residency="auto")
+    assert interp.resolve_residency() is None    # interpret mode is CPU
+    with pytest.raises(ValueError):
+        IterationEngine(loss=make_logistic(), tau=1.0, residency="fp8")
+
+
+def test_sparse_autotune_blocks():
+    bm = autotune.sparse_block_m(1 << 17, 512, 26, jnp.float32)
+    assert 1024 <= bm <= 16384 and bm % 8 == 0
+    # denser rows -> shorter blocks (nnz-budgeted, not (m x n)-budgeted)
+    assert autotune.sparse_block_m(1 << 17, 512, 128, jnp.float32) < bm
+    # never taller than the padded row count
+    assert autotune.sparse_block_m(300, 64, 4, jnp.float32) <= 304
+    assert ("sparse", 1 << 17, 512, 26, "float32") in autotune.CACHE
+
+
+def test_generators_hit_requested_density():
+    b = random_block_csr(0, 4000, 64, 0.05)
+    assert abs(b.density - 0.05) < 0.01
+    prob = sparse_classification_problem(1, 2000, 32, 0.1)
+    assert set(np.unique(np.asarray(prob.labels))) <= {-1.0, 1.0}
+    assert abs(prob.D.density - 0.1) < 0.02
