@@ -1,0 +1,220 @@
+"""Multi-process cluster benchmark — BENCH_cluster.json (DESIGN.md §11).
+
+Sweeps worker counts over one logistic solve through the coordinator/
+worker runtime and records what the paper's deployment claim is actually
+made of:
+
+  * BYTES ON THE WIRE per iteration — measured at the sockets (framing
+    included), with and without int8 error-feedback compression, against
+    the O(m) an equivalent consensus/data-parallel round would move
+    (shipping any m-sized object once per iteration). The transpose
+    reduction ships three n-vectors per worker per iteration and one
+    n-vector broadcast back; that ratio, not wall clock on one VM, is
+    the paper's C5 scaling claim.
+  * PARITY — every cluster point must reproduce the single-process
+    ``UnwrappedADMM.run`` x at the same iteration count (the runtime is
+    an execution substrate, not an approximation — except compressed
+    mode, which is held to the established objective-gap bar instead,
+    since int8 jitter perturbs x by ~1/127 pointwise while the
+    objective is quadratically flat at the optimum).
+  * HONEST host gating — multi-process scaling needs at least one core
+    per worker PLUS the coordinator; on a 2-core CI VM every worker
+    count timeshares the same two cores (and pays per-process jax
+    startup), so wall-clock speedup is structurally unavailable and the
+    acceptance gates any speedup expectation on
+    ``cpu_count >= workers + 1``. Parity and wire-byte accounting are
+    host-independent and required everywhere.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+JSON_PATH = None          # set by benchmarks.run when --json is given
+
+TAU = 0.1
+TINY = dict(eps_rel=1e-9, eps_abs=1e-12)   # fixed-iteration parity runs
+
+
+def _problem(m, n, seed=0):
+    rng = np.random.default_rng(seed)
+    D = rng.standard_normal((m, n)).astype(np.float32)
+    aux = np.sign(rng.standard_normal((m,))).astype(np.float32)
+    return D, aux
+
+
+def _reference(D, aux, iters):
+    from repro.core.prox import make_logistic
+    from repro.core.unwrapped import UnwrappedADMM
+    solver = UnwrappedADMM(loss=make_logistic(), tau=TAU)
+    res = solver.run(D[None], aux[None], iters=iters)
+    return np.asarray(res.x)
+
+
+def _wire_totals(res):
+    """Measured frame bytes per iteration, split by role: reductions
+    (worker->parent->coordinator 'contrib' hops) and the coordinator's
+    x broadcasts ('iter'). Worker counters arrive with the shutdown."""
+    t = res.telemetry
+    sc = t["shutdown_counters"]
+    worker_tx = sc["workers"].get("sent_bytes", {})
+    reduction = worker_tx.get("contrib", 0)
+    broadcast = t["coordinator_broadcast_tx_bytes"]
+    other = sum(v for k, v in worker_tx.items() if k != "contrib") + sum(
+        v for k, v in sc["coordinator"].get("sent_bytes", {}).items()
+        if k != "iter")
+    iters = max(t["iters"], 1)
+    return {
+        "reduction_bytes_per_iter": round(reduction / iters, 1),
+        "broadcast_bytes_per_iter": round(broadcast / iters, 1),
+        "control_bytes_total": other,
+        "tree_depth": t["tree_depth"],
+    }
+
+
+def _one_point(D, aux, workers, iters, compress, store_path):
+    from repro.cluster.coordinator import ClusterConfig, cluster_solve
+    cfg = ClusterConfig(n_workers=workers, compress=compress)
+    t0 = time.perf_counter()
+    res = cluster_solve(store_path, None, {"name": "logistic"}, tau=TAU,
+                        max_iters=iters, config=cfg, **TINY)
+    total_s = time.perf_counter() - t0
+    return res, total_s
+
+
+def run(rows, quick: bool = False):
+    from repro.cluster import compress as compress_lib
+    from repro.cluster.coordinator import _ensure_store
+    from repro.core.oracles import logistic_objective
+
+    if quick:
+        m, n, iters, sweep = 1 << 12, 32, 8, [1, 2]
+    else:
+        m, n, iters, sweep = 1 << 15, 128, 16, [1, 2, 4]
+    D, aux = _problem(m, n)
+    ref_x = _reference(D, aux, iters)
+    ref_obj = logistic_objective(D, aux, ref_x)
+    store_path, store_created = _ensure_store(
+        D, aux, None, max(sweep),
+        block_rows=max(64, m // (2 * max(sweep))))
+
+    cpus = os.cpu_count() or 1
+    consensus_bytes = 4 * m          # ONE m-sized f32 object per round
+    points = []
+    base_wall = None
+    for w in sweep:
+        res, total_s = _one_point(D, aux, w, iters, False, store_path)
+        rel = float(np.linalg.norm(res.x - ref_x)
+                    / max(np.linalg.norm(ref_x), 1e-30))
+        wire = _wire_totals(res)
+        wall = res.telemetry["wall_s"]
+        if w == 1:
+            base_wall = wall
+        rec = {
+            "workers": w, "m": m, "n": n, "iters": res.iters,
+            "compress": False,
+            "solve_wall_s": wall,
+            "total_wall_s_incl_spawn": round(total_s, 3),
+            "us_per_iter": round(wall / max(res.iters, 1) * 1e6, 1),
+            "speedup_vs_1_worker": (round(base_wall / wall, 3)
+                                    if base_wall else None),
+            "rel_x_err_vs_single_process": rel,
+            "payload_bytes_per_nvec": compress_lib.wire_bytes(n, False),
+            "consensus_scheme_bytes_per_iter": consensus_bytes,
+            **wire,
+        }
+        rec["reduction_vs_consensus_ratio"] = round(
+            rec["reduction_bytes_per_iter"] / consensus_bytes, 6)
+        points.append(rec)
+        rows.append(f"cluster_w{w}_m{m}_n{n},"
+                    f"{rec['us_per_iter']},"
+                    f"relx{rel:.1e}_"
+                    f"{rec['reduction_bytes_per_iter']:.0f}B/iter")
+
+    # compressed point: int8 EF on every hop, objective-gap parity bar
+    wc = sweep[-1] if len(sweep) > 1 else 1
+    res_c, _ = _one_point(D, aux, wc, iters, True, store_path)
+    obj_c = logistic_objective(D, aux, np.asarray(res_c.x))
+    gap_c = float(abs(obj_c - ref_obj) / abs(ref_obj))
+    wire_c = _wire_totals(res_c)
+    comp_rec = {
+        "workers": wc, "m": m, "n": n, "iters": res_c.iters,
+        "compress": True,
+        "solve_wall_s": res_c.telemetry["wall_s"],
+        "rel_obj_gap_vs_single_process": gap_c,
+        "payload_bytes_per_nvec": compress_lib.wire_bytes(n, True),
+        "payload_bytes_per_nvec_uncompressed":
+            compress_lib.wire_bytes(n, False),
+        "consensus_scheme_bytes_per_iter": consensus_bytes,
+        **wire_c,
+    }
+    comp_rec["reduction_vs_consensus_ratio"] = round(
+        comp_rec["reduction_bytes_per_iter"] / consensus_bytes, 6)
+    rows.append(f"cluster_w{wc}_compressed,"
+                f"{comp_rec['solve_wall_s']*1e6/max(res_c.iters,1):.1f},"
+                f"objgap{gap_c:.1e}_"
+                f"{comp_rec['reduction_bytes_per_iter']:.0f}B/iter")
+
+    parity_ok = all(p["rel_x_err_vs_single_process"] < 1e-4
+                    for p in points) and gap_c < 1e-3
+    wire_ok = all(p["reduction_bytes_per_iter"]
+                  < 0.5 * consensus_bytes for p in points + [comp_rec])
+    # at quick's n=32 the per-message framing (~300 B of dict keys and
+    # scalars) rivals 4n = 128 B of payload, so the compression ratio is
+    # only meaningful at the full-size point — measured always, gated
+    # only there (null on --quick, the other benches' convention)
+    compression_wins = (None if quick else bool(
+        comp_rec["reduction_bytes_per_iter"]
+        < 0.7 * max(p["reduction_bytes_per_iter"] for p in points
+                    if p["workers"] == wc)))
+    # scaling is only claimable with a core per worker + coordinator;
+    # workers also default to single-threaded compute, so a big host is
+    # required before wall-clock means anything
+    scaling_gate = cpus >= max(sweep) + 1
+    best_speedup = max((p["speedup_vs_1_worker"] or 0.0) for p in points)
+    rows.append(f"cluster_host_gate,0,cpus{cpus}_scaling_"
+                + ("applies" if scaling_gate else "not_claimable"))
+    if store_created:
+        import shutil
+        shutil.rmtree(store_path, ignore_errors=True)
+
+    if JSON_PATH:
+        payload = {
+            "generated_by": "benchmarks/cluster_bench.py",
+            "host_cpus": cpus,
+            "quick": quick,
+            "problem": {"kind": "logistic", "m": m, "n": n,
+                        "iters": iters, "tau": TAU},
+            "points": points,
+            "compressed_point": comp_rec,
+            "acceptance": {
+                "criterion": (
+                    "every worker count reproduces the single-process "
+                    "solve (x rel err < 1e-4 uncompressed; objective "
+                    "gap < 1e-3 compressed); per-iteration reduction "
+                    "wire bytes stay O(n-vectors) — under half the "
+                    "4m bytes a consensus/data-parallel round would "
+                    "move — and int8 compression measurably cuts them; "
+                    "wall-clock speedup is only claimed when the host "
+                    "has >= workers+1 cores (this VM's 2 cores "
+                    "timeshare every process, so the sweep documents "
+                    "communication and correctness, not scaling)"),
+                "parity_ok": parity_ok,
+                "wire_bytes_ok": wire_ok,
+                "compression_cuts_wire_bytes": compression_wins,
+                "scaling_gate_applies": scaling_gate,
+                "best_speedup_vs_1_worker": best_speedup,
+                "speedup_ok": (best_speedup >= 1.3 if scaling_gate
+                               else None),
+                "pass": bool(parity_ok and wire_ok
+                             and compression_wins is not False
+                             and (best_speedup >= 1.3
+                                  if scaling_gate else True)),
+            },
+        }
+        with open(JSON_PATH, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")

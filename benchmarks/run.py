@@ -24,12 +24,14 @@ MODULES = {
     "engine": "benchmarks.engine_bench",      # iteration-engine backends
     "streaming": "benchmarks.streaming_bench",  # out-of-core block streaming
     "sparse": "benchmarks.sparse_bench",      # block-CSR vs dense chunked
+    "cluster": "benchmarks.cluster_bench",    # multi-process runtime
 }
 
 # modules that can emit a machine-readable result: module key -> default path
 JSON_MODULES = {"engine": "BENCH_engine.json",
                 "streaming": "BENCH_streaming.json",
-                "sparse": "BENCH_sparse.json"}
+                "sparse": "BENCH_sparse.json",
+                "cluster": "BENCH_cluster.json"}
 
 
 def main(argv=None) -> None:

@@ -1,0 +1,41 @@
+"""repro.cluster — multi-process coordinator/worker runtime (DESIGN.md §11).
+
+The paper's deployment shape (5 Tb over 7000+ cores) is separate
+PROCESSES shipping n-length transpose reductions to a solver node —
+not a single-process shard_map. This package closes that gap:
+
+  * :mod:`compress`    — int8 error-feedback wire compression, shared
+                         with ``core/distributed.py``'s psum;
+  * :mod:`transport`   — length-prefixed socket framing + byte counters;
+  * :mod:`reduction`   — per-iteration contribution container and the
+                         tree-reduce topology;
+  * :mod:`membership`  — worker registry, heartbeats, block ownership
+                         and reassignment plans;
+  * :mod:`worker`      — the worker process: owns store row blocks, runs
+                         the fused iteration body, ships reductions;
+  * :mod:`coordinator` — the solver node: global x-update, broadcast,
+                         fault recovery, bounded-staleness aggregation.
+
+``compress`` is imported eagerly (``core/distributed`` depends on it);
+the runtime modules load lazily so importing :mod:`repro.core` never
+pays for the cluster machinery.
+"""
+from repro.cluster import compress  # noqa: F401  (eager: core.distributed)
+
+_LAZY = {
+    "ClusterConfig": "repro.cluster.coordinator",
+    "ClusterCoordinator": "repro.cluster.coordinator",
+    "ClusterResult": "repro.cluster.coordinator",
+    "cluster_solve": "repro.cluster.coordinator",
+    "cluster_stats": "repro.cluster.coordinator",
+}
+
+__all__ = ["compress"] + sorted(_LAZY)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(_LAZY[name])
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

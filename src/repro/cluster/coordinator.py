@@ -1,0 +1,795 @@
+"""The cluster coordinator — the paper's "central server", productionized.
+
+Drives a fault-tolerant unwrapped-ADMM solve over worker PROCESSES
+(DESIGN.md §11). Per iteration the coordinator does exactly what Alg. 2
+assigns the central node: solve the cached-Gram system for x from the
+summed n-vector reduction d, broadcast x, wait for the next reduction.
+Everything m-sized stays at the workers; the coordinator's working set
+is O(n^2) (the factor) + O(n) per iteration + the x-history it keeps
+for recovery.
+
+Fault tolerance (strict mode): worker death is detected by link EOF
+(one socket read after a SIGKILL) or heartbeat age. Recovery marks the
+worker dead, spreads its orphaned blocks over the least-loaded
+survivors (store fingerprints verify content at the new owner), ships
+the x-history so the new owner REPLAYS the fused body to reconstruct
+the orphans' iterates exactly, bumps the topology epoch, and re-issues
+the in-flight iteration — survivors answer the retry from their cached
+per-block contributions, so a retry costs one pass over the orphaned
+blocks only. The solve then continues to the same answer as an
+undisturbed run.
+
+Bounded staleness (``staleness S > 0``): star topology; the coordinator
+proceeds once a quorum of workers has contributed at the current
+iteration AND no live worker lags more than S iterations; missing
+workers are represented by their latest cached reduction, and a late
+arrival REPLACES its stale cache entry — coordinator-side error
+feedback: the stale estimate's error is corrected the moment the true
+reduction lands, rather than lost. Inexact per-iteration reductions of
+this kind are exactly what consensus-ADMM theory tolerates (Chang et
+al. 2014), and the transpose reduction is partition-insensitive (Wu et
+al. 2024), which is what makes elastic membership sound here.
+
+Checkpoint/resume: every ``checkpoint_every`` iterations the
+coordinator gathers (y, lam) slices from the workers, assembles the
+full iterate, and persists (x, y, lam, d, iter) through
+``repro.checkpoint.manager.CheckpointManager``; ``resume=True``
+restores the newest step and continues. The gathered state also
+becomes the recovery base, truncating the replayed x-history.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import shutil
+import tempfile
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.cluster import compress
+from repro.cluster.membership import Membership, WorkerInfo
+from repro.cluster.reduction import Contribution, TreeTopology, decode
+from repro.cluster.transport import (
+    ByteCounter,
+    ConnectionClosed,
+    Listener,
+)
+from repro.cluster.worker import make_loss, worker_entry
+
+REDUCTION_TAGS = ("contrib",)            # what counts as reduction wire
+BROADCAST_TAGS = ("iter",)
+
+
+class ClusterError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    """Runtime shape. ``staleness == 0`` is the strict mode: tree reduce,
+    every block in every iteration, retries on failure. ``staleness =
+    S > 0`` switches to star + quorum with the bound S."""
+
+    n_workers: int = 2
+    compress: bool = False
+    fanout: int = 2
+    staleness: int = 0
+    quorum: float = 1.0
+    heartbeat_interval_s: float = 0.5
+    heartbeat_timeout_s: float = 15.0
+    register_timeout_s: float = 180.0
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0
+    resume: bool = False
+    backend: str = "auto"
+    limit_threads: bool = True
+    jax_platforms: Optional[str] = None
+    worker_overrides: Dict[int, dict] = dataclasses.field(
+        default_factory=dict)
+
+    def __post_init__(self):
+        if self.staleness > 0 and self.checkpoint_every > 0:
+            # a checkpoint needs every block at ONE iteration; quorum
+            # mode holds workers at mixed iterations by design, so the
+            # gather would skip every round — refuse loudly instead of
+            # silently never writing a checkpoint the user relies on
+            raise ValueError(
+                "checkpointing requires the strict synchronous mode "
+                "(staleness=0): bounded-staleness iterates are never "
+                "at a single consistent iteration")
+        if not 0.0 < self.quorum <= 1.0:
+            raise ValueError(f"quorum must be in (0, 1], got {self.quorum}")
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    x: np.ndarray
+    iters: int
+    converged: bool
+    history: Optional[dict]              # objective/primal_res/dual_res lists
+    telemetry: dict
+
+
+class ClusterCoordinator:
+    def __init__(self, store_path: str, loss: dict, tau: float = 1.0,
+                 rho: float = 0.0, eps_rel: float = 1e-3,
+                 eps_abs: float = 1e-6,
+                 config: Optional[ClusterConfig] = None):
+        from repro.data.store import ShardedMatrixStore
+
+        self.cfg = config or ClusterConfig()
+        self.store_path = store_path
+        self.store = ShardedMatrixStore.open(store_path)
+        self.loss_spec = dict(loss)
+        self.loss = make_loss(self.loss_spec)
+        self.tau, self.rho = float(tau), float(rho)
+        self.eps_rel, self.eps_abs = float(eps_rel), float(eps_abs)
+        self.members = Membership()
+        self.counter = ByteCounter()
+        self.listener = Listener()
+        self._events: "queue.Queue" = queue.Queue()
+        self._epoch = 0
+        self._topology: Optional[TreeTopology] = None
+        self._started = False
+        self._stats = None
+        # recovery base: iterates at _base_iter (None = zeros) + x since
+        self._base_iter = 0
+        self._base_y: Optional[np.ndarray] = None
+        self._base_lam: Optional[np.ndarray] = None
+        self._x_hist: List[np.ndarray] = []   # [i] -> x of iter _base+i+1
+        self._latest: Dict[int, Contribution] = {}   # staleness cache
+        self._iters_run = 0
+        self._retries = 0
+        self._shutdown_result: Optional[dict] = None
+
+    # -- lifecycle ----------------------------------------------------------
+    def __enter__(self):
+        self.start()
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+
+    def _worker_config(self, wid: int) -> dict:
+        cfg = {"store_path": self.store_path, "loss": self.loss_spec,
+               "tau": self.tau, "backend": self.cfg.backend,
+               "compress": self.cfg.compress,
+               "staleness": self.cfg.staleness > 0,
+               "heartbeat_interval": self.cfg.heartbeat_interval_s,
+               "limit_threads": self.cfg.limit_threads,
+               "jax_platforms": self.cfg.jax_platforms}
+        cfg.update(self.cfg.worker_overrides.get(wid, {}))
+        return cfg
+
+    def start(self):
+        """Spawn workers, collect registrations, assign blocks."""
+        import multiprocessing as mp
+        if self._started:
+            return
+        ctx = mp.get_context("spawn")
+        host, port = self.listener.address
+        procs = {}
+        for wid in range(self.cfg.n_workers):
+            p = ctx.Process(target=worker_entry,
+                            args=(wid, host, port, self._worker_config(wid)),
+                            daemon=True)
+            p.start()
+            procs[wid] = p
+        try:
+            self._await_registrations(procs)
+        except BaseException:
+            # a failed start must not leak spawned processes into a
+            # long-lived host (daemon=True only reaps at interpreter
+            # exit) — __exit__ never runs when __enter__ raises
+            for p in procs.values():
+                if p.is_alive():
+                    p.terminate()
+            self.listener.close()
+            raise
+        plan = self.members.initial_assignment(self.store.nblocks)
+        for wid, blocks in plan.items():
+            self._send_assign(wid, blocks, upto_iter=self._base_iter)
+        self._broadcast_topology()
+        self._started = True
+
+    def _await_registrations(self, procs):
+        deadline = time.monotonic() + self.cfg.register_timeout_s
+        while len(self.members.workers) < self.cfg.n_workers:
+            conn = self.listener.accept(timeout=1.0, counter=self.counter)
+            if conn is None:
+                dead_early = [w for w, p in procs.items()
+                              if not p.is_alive()
+                              and w not in self.members.workers]
+                if dead_early:
+                    raise ClusterError(
+                        f"workers {dead_early} exited before registering "
+                        "(exitcodes "
+                        f"{[procs[w].exitcode for w in dead_early]}); if "
+                        "launching from a script, guard the entry point "
+                        "with `if __name__ == '__main__':` — the spawn "
+                        "start method re-imports __main__")
+                if time.monotonic() > deadline:
+                    raise ClusterError(
+                        f"only {len(self.members.workers)} of "
+                        f"{self.cfg.n_workers} workers registered in "
+                        f"{self.cfg.register_timeout_s:.0f}s")
+                continue
+            msg = conn.recv(timeout=30.0)
+            if msg is None or msg.get("type") != "register":
+                conn.close()
+                continue
+            wid = int(msg["wid"])
+            if msg["store_fingerprint"] != self.store.fingerprint:
+                raise ClusterError(
+                    f"worker {wid} opened a store with fingerprint "
+                    f"{msg['store_fingerprint'][:12]}… != coordinator's "
+                    f"{self.store.fingerprint[:12]}…")
+            info = WorkerInfo(wid=wid, conn=conn,
+                              peer_addr=tuple(msg["peer_addr"]),
+                              process=procs.get(wid))
+            self.members.add(info)
+            threading.Thread(target=self._rx, args=(wid, conn),
+                             daemon=True).start()
+
+    def shutdown(self) -> dict:
+        """Stop workers, fold their byte counters in, reap processes.
+        Returns the aggregate counter snapshot. Idempotent."""
+        if self._shutdown_result is not None:
+            return self._shutdown_result
+        worker_counters = ByteCounter()
+        alive = self.members.alive()
+        for w in alive:
+            try:
+                w.conn.send("stop")
+            except ConnectionClosed:
+                w.alive = False
+        waiting = {w.wid for w in alive if w.alive}
+        deadline = time.monotonic() + 10.0
+        while waiting and time.monotonic() < deadline:
+            try:
+                wid, msg = self._events.get(timeout=0.5)
+            except queue.Empty:
+                continue
+            if msg is None:
+                waiting.discard(wid)
+            elif msg.get("type") == "bye":
+                worker_counters.merge(msg["counters"])
+                waiting.discard(wid)
+        for w in self.members.workers.values():
+            if w.process is not None:
+                w.process.join(timeout=5.0)
+                if w.process.is_alive():
+                    w.process.terminate()
+            if w.conn is not None:
+                w.conn.close()
+        self.listener.close()
+        self._started = False
+        self._shutdown_result = {"coordinator": self.counter.snapshot(),
+                                 "workers": worker_counters.snapshot()}
+        return self._shutdown_result
+
+    # -- plumbing -----------------------------------------------------------
+    def _rx(self, wid: int, conn):
+        try:
+            while True:
+                self._events.put((wid, conn.recv()))
+        except ConnectionClosed:
+            self._events.put((wid, None))
+
+    def _send(self, wid: int, msg_type: str, **payload) -> bool:
+        w = self.members.get(wid)
+        try:
+            w.conn.send(msg_type, **payload)
+            return True
+        except ConnectionClosed:
+            self._events.put((wid, None))
+            return False
+
+    def _send_assign(self, wid: int, blocks: List[int], upto_iter: int,
+                     force: bool = False):
+        """Ship ownership of ``blocks``: recovery base slices (if any)
+        plus the x-history needed to replay up to ``upto_iter``.
+        ``force`` overwrites iterates the worker already holds (the
+        resume path)."""
+        base_state = None
+        if self._base_y is not None:
+            base_state = {}
+            for bid in blocks:
+                sl = self.store.block_slice(bid)
+                base_state[bid] = (self._base_y[sl].copy(),
+                                   self._base_lam[sl].copy())
+        hist = self._x_hist[: max(0, upto_iter - self._base_iter)]
+        self._send(wid, "assign", blocks=list(blocks),
+                   base_iter=self._base_iter, base_state=base_state,
+                   force=force,
+                   x_history=(np.stack(hist) if hist else
+                              np.zeros((0, self.store.n), np.float32)))
+
+    def _broadcast_topology(self):
+        wids = self.members.alive_ids()
+        if self.cfg.staleness > 0:
+            self._topology = None        # star: everyone reports directly
+            for wid in wids:
+                self._send(wid, "topology", epoch=self._epoch, parent=None,
+                           nchildren=0)
+            return
+        topo = TreeTopology.build(wids, fanout=self.cfg.fanout,
+                                  epoch=self._epoch)
+        self._topology = topo
+        for wid in wids:
+            parent = topo.parent(wid)
+            self._send(wid, "topology", epoch=self._epoch,
+                       parent=(self.members.get(parent).peer_addr
+                               if parent is not None else None),
+                       nchildren=len(topo.children(wid)))
+
+    def _broadcast_iter(self, k: int, x: np.ndarray):
+        for wid in self.members.alive_ids():
+            self._send(wid, "iter", k=k, x=np.asarray(x, np.float32),
+                       epoch=self._epoch)
+
+    # -- failure handling ---------------------------------------------------
+    def _mark_and_recover(self, dead_wids, current_iter: Optional[int],
+                          x_k: Optional[np.ndarray]):
+        orphans = set()
+        for wid in dead_wids:
+            orphans |= self.members.mark_dead(wid)
+        if not orphans and not dead_wids:
+            return
+        plan = self.members.reassignment_plan(sorted(orphans))
+        # replay target: the state BEFORE the in-flight iteration — the
+        # retry (strict) or the next broadcast (staleness) advances the
+        # orphans onward from there
+        upto = (current_iter - 1) if current_iter is not None else (
+            self._base_iter + len(self._x_hist))
+        for wid, blocks in plan.items():
+            self._send_assign(wid, blocks, upto_iter=upto)
+        if self.cfg.staleness > 0:
+            for wid in dead_wids:
+                self._latest.pop(wid, None)
+            return                       # star: epoch stays, late msgs fold
+        self._epoch += 1
+        self._broadcast_topology()
+        if current_iter is not None:
+            self._retries += 1
+            self._broadcast_iter(current_iter, x_k)
+
+    def _poll_failures(self) -> List[int]:
+        """Heartbeat-age check. MUST run on every wait-loop pass, not
+        only when the event queue idles: live workers heartbeat every
+        interval, so a busy queue would otherwise starve the check and
+        a HUNG (not dead) worker — open link, no EOF — would never be
+        declared dead."""
+        return self.members.stale(self.cfg.heartbeat_timeout_s)
+
+    def _handle_common(self, wid: int, msg) -> Optional[Tuple[int, dict]]:
+        """Events any wait-loop must absorb; returns the message back
+        when the caller should interpret it."""
+        if msg is None:
+            return (wid, None)           # death, caller recovers
+        t = msg.get("type")
+        if t == "heartbeat":
+            self.members.beat(wid)
+            return None
+        if t == "error":
+            raise ClusterError(
+                f"worker {wid} failed:\n{msg['traceback']}")
+        if t in ("assigned", "bye"):
+            return None
+        return (wid, msg)
+
+    # -- setup reduction: sufficient stats ----------------------------------
+    def stats(self):
+        """Merged :class:`SufficientStats` over all blocks — the setup
+        all-reduce of Alg. 2 lines 2-3 (and the WHOLE solve for
+        quadratic-data-term fits, paper §4). The merged fingerprint must
+        equal the store's, proving every block was folded exactly once
+        across whatever membership survived."""
+        from repro.service.stats import SufficientStats
+        if self._stats is not None:
+            return self._stats
+        if not self._started:
+            self.start()
+        pending: Dict[int, List[int]] = {}
+        for w in self.members.alive():
+            blocks = sorted(w.blocks)
+            pending[w.wid] = blocks
+            self._send(w.wid, "stats", blocks=blocks)
+        merged = SufficientStats.zero(self.store.n)
+        folded: set = set()
+        while len(folded) < self.store.nblocks:
+            dead = self._poll_failures()
+            if dead:
+                self._stats_recover(dead, pending, folded)
+            try:
+                wid, msg = self._events.get(
+                    timeout=self.cfg.heartbeat_interval_s)
+            except queue.Empty:
+                continue
+            ev = self._handle_common(wid, msg)
+            if ev is None:
+                continue
+            wid, msg = ev
+            if msg is None:
+                self._stats_recover([wid], pending, folded)
+                continue
+            if msg.get("type") != "stats":
+                continue
+            blocks = set(msg["blocks"])
+            if blocks & folded:
+                continue                 # re-request already covered
+            merged = merged.merge(SufficientStats.from_payload(msg))
+            folded |= blocks
+            # drop only the ANSWERED blocks: a re-requested orphan may
+            # still be outstanding at this worker, and forgetting it
+            # would strand the block if this worker dies too
+            left = [b for b in pending.get(wid, []) if b not in folded]
+            if left:
+                pending[wid] = left
+            else:
+                pending.pop(wid, None)
+        if merged.fingerprint != self.store.fingerprint:
+            raise ClusterError(
+                "merged stats fingerprint != store fingerprint: some "
+                "block was folded zero or twice across the membership")
+        self._stats = merged
+        return merged
+
+    def _stats_recover(self, dead, pending, folded):
+        self._mark_and_recover(dead, None, None)
+        for wid in dead:
+            lost = [b for b in pending.pop(wid, []) if b not in folded]
+            for bid in lost:
+                owner = self.members.owner_of(bid)
+                pending.setdefault(owner, []).append(bid)
+                self._send(owner, "stats", blocks=[bid])
+
+    # -- the solve ----------------------------------------------------------
+    def solve(self, max_iters: int = 500, record: bool = True
+              ) -> ClusterResult:
+        from repro.core import gram as gram_lib
+        import jax.numpy as jnp
+
+        if self._iters_run:
+            # worker iterates persist across calls but d/x/history here
+            # restart from zero — a second solve would silently diverge
+            # from any single-process run. One coordinator, one solve.
+            raise ClusterError(
+                "this coordinator already ran a solve; create a new "
+                "ClusterCoordinator (or use checkpoint_dir + resume "
+                "to continue a solve across runs)")
+        if not self._started:
+            self.start()
+        st = self.stats()
+        L = gram_lib.gram_factor(st.G, ridge=self.rho / self.tau)
+        m, n = self.store.m, self.store.n
+        pad_obj = self._pad_objective()
+
+        d = np.zeros((n,), np.float32)
+        x = np.zeros((n,), np.float32)   # returned as-is if 0 iterations
+        k0 = 0
+        manager = None
+        if self.cfg.checkpoint_dir:
+            from repro.checkpoint.manager import CheckpointManager
+            manager = CheckpointManager(self.cfg.checkpoint_dir)
+            if self.cfg.resume and manager.latest_step() is not None:
+                k0, d, x = self._restore(manager)
+        if self.cfg.staleness > 0:
+            self._latest: Dict[int, Contribution] = {}
+
+        objs, rs, ss = [], [], []
+        converged = False
+        k = k0
+        t0 = time.monotonic()
+        while k < max_iters and not converged:
+            k += 1
+            x = np.asarray(gram_lib.gram_solve(L, jnp.asarray(d)),
+                           np.float32)
+            assert len(self._x_hist) == k - 1 - self._base_iter
+            self._x_hist.append(x)
+            self._broadcast_iter(k, x)
+            total = (self._collect_stale(k) if self.cfg.staleness > 0
+                     else self._collect_strict(k, x))
+            d = total.d.astype(np.float32)
+            r = float(np.sqrt(total.scalars["r_sq"]))
+            s = self.tau * float(np.linalg.norm(total.w))
+            eps_pri = np.sqrt(m) * self.eps_abs + self.eps_rel * max(
+                np.sqrt(total.scalars["dx_sq"]),
+                np.sqrt(total.scalars["y_sq"]))
+            eps_dual = np.sqrt(n) * self.eps_abs + (
+                self.eps_rel * self.tau * float(np.linalg.norm(total.v)))
+            if record:
+                obj = total.scalars["obj"] - pad_obj
+                if self.rho:
+                    obj += 0.5 * self.rho * float(np.sum(x * x))
+                objs.append(obj)
+                rs.append(r)
+                ss.append(s)
+            converged = bool(r <= eps_pri and s <= eps_dual)
+            if (manager is not None and self.cfg.checkpoint_every
+                    and k % self.cfg.checkpoint_every == 0):
+                self._checkpoint(manager, k, x, d)
+        self._iters_run += k - k0
+        history = ({"objective": objs, "primal_res": rs, "dual_res": ss}
+                   if record else None)
+        return ClusterResult(x=x, iters=k, converged=converged,
+                             history=history,
+                             telemetry=self._telemetry(k - k0,
+                                                       time.monotonic() - t0))
+
+    # -- collection: strict (tree) ------------------------------------------
+    def _collect_strict(self, k: int, x_k: np.ndarray) -> Contribution:
+        """Wait for full coverage of iteration k at the current epoch;
+        recover + retry on any death. In tree mode that is ONE message
+        (the root's merged partial) per attempt."""
+        acc = Contribution.zero(k, self.store.n)
+        seen: set = set()
+        while True:
+            dead = self._poll_failures()
+            if dead:
+                acc = Contribution.zero(k, self.store.n)
+                seen = set()
+                self._mark_and_recover(dead, k, x_k)
+            try:
+                wid, msg = self._events.get(
+                    timeout=self.cfg.heartbeat_interval_s)
+            except queue.Empty:
+                continue
+            ev = self._handle_common(wid, msg)
+            if ev is None:
+                continue
+            wid, msg = ev
+            if msg is None:
+                acc = Contribution.zero(k, self.store.n)
+                seen = set()
+                self._mark_and_recover([wid], k, x_k)
+                continue
+            if msg.get("type") != "contrib":
+                continue
+            if msg["epoch"] != self._epoch:
+                continue                 # partial of a dead topology
+            c = decode(msg["payload"])
+            if c.iteration != k or set(c.workers) & seen:
+                continue
+            self.members.beat(wid)
+            acc = acc.merge(c)
+            seen |= set(c.workers)
+            if acc.rows >= self.store.m:
+                assert acc.rows == self.store.m, \
+                    f"row overcount: {acc.rows} > {self.store.m}"
+                return acc
+
+    # -- collection: bounded staleness (star) -------------------------------
+    def _collect_stale(self, k: int) -> Contribution:
+        """Proceed once >= quorum of live workers contributed at k and
+        nobody lags more than ``staleness``; absent workers are
+        represented by their newest cached reduction (replaced — not
+        lost — when the late message lands)."""
+        S, q = self.cfg.staleness, self.cfg.quorum
+        while True:
+            alive = self.members.alive_ids()
+            fresh = sum(1 for w in alive
+                        if self._latest.get(w) is not None
+                        and self._latest[w].iteration == k)
+            oldest = min((self._latest[w].iteration
+                          for w in alive if self._latest.get(w)),
+                         default=0)
+            have_any = all(self._latest.get(w) is not None for w in alive)
+            if (have_any and fresh >= max(1, int(np.ceil(q * len(alive))))
+                    and oldest >= k - S):
+                acc = Contribution.zero(k, self.store.n)
+                for w in alive:
+                    # stale entries merge AS IF current — the (bounded)
+                    # inexactness the mode accepts by construction
+                    acc = acc.merge(dataclasses.replace(
+                        self._latest[w], iteration=k))
+                return acc
+            dead = self._poll_failures()
+            if dead:
+                self._mark_and_recover(dead, k, None)
+            try:
+                wid, msg = self._events.get(
+                    timeout=self.cfg.heartbeat_interval_s)
+            except queue.Empty:
+                continue
+            ev = self._handle_common(wid, msg)
+            if ev is None:
+                continue
+            wid, msg = ev
+            if msg is None:
+                self._mark_and_recover([wid], k, None)
+                continue
+            if msg.get("type") != "contrib":
+                continue
+            c = decode(msg["payload"])
+            w = c.workers[0]
+            prev = self._latest.get(w)
+            if prev is None or c.iteration > prev.iteration:
+                self._latest[w] = c
+                self.members.get(w).last_iteration = c.iteration
+                self.members.beat(w)
+
+    # -- checkpoint / resume ------------------------------------------------
+    def _gather_iterates(self, k: int
+                         ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Assemble full (y, lam) from worker slices; None if membership
+        changed mid-gather (caller skips this checkpoint round)."""
+        for wid in self.members.alive_ids():
+            if not self._send(wid, "checkpoint"):
+                return None
+        y = np.zeros((self.store.m,), np.float32)
+        lam = np.zeros((self.store.m,), np.float32)
+        covered: set = set()
+        deadline = time.monotonic() + self.cfg.heartbeat_timeout_s
+        while covered != set(range(self.store.nblocks)):
+            if time.monotonic() > deadline:
+                return None
+            try:
+                wid, msg = self._events.get(timeout=0.5)
+            except queue.Empty:
+                continue
+            ev = self._handle_common(wid, msg)
+            if ev is None:
+                continue
+            wid, msg = ev
+            if msg is None:
+                self._mark_and_recover([wid], None, None)
+                return None
+            if msg.get("type") != "ckpt":
+                continue
+            for bid, (y_b, lam_b, b_iter) in msg["blocks"].items():
+                if b_iter != k:
+                    return None          # raced a retry; skip this round
+                sl = self.store.block_slice(int(bid))
+                y[sl], lam[sl] = y_b, lam_b
+                covered.add(int(bid))
+        return y, lam
+
+    def _checkpoint(self, manager, k: int, x: np.ndarray, d: np.ndarray):
+        got = self._gather_iterates(k)
+        if got is None:
+            return                       # try again next interval
+        y, lam = got
+        manager.save(k, {"x": x, "y": y, "lam": lam, "d": d},
+                     extra={"kind": "cluster_solve", "iter": k,
+                            "loss": self.loss_spec, "tau": self.tau,
+                            "rho": self.rho,
+                            "store_fingerprint": self.store.fingerprint})
+        # the checkpoint is also the new recovery base: replays start
+        # here, and the x-history before it can be dropped
+        self._base_iter, self._base_y, self._base_lam = k, y, lam
+        self._x_hist = []
+
+    def _restore(self, manager) -> Tuple[int, np.ndarray, np.ndarray]:
+        like = {"x": np.zeros((self.store.n,), np.float32),
+                "y": np.zeros((self.store.m,), np.float32),
+                "lam": np.zeros((self.store.m,), np.float32),
+                "d": np.zeros((self.store.n,), np.float32)}
+        tree, extra = manager.restore(like)
+        if extra.get("kind") != "cluster_solve":
+            raise ClusterError(f"not a cluster checkpoint: {extra}")
+        if extra.get("store_fingerprint") != self.store.fingerprint:
+            raise ClusterError("checkpoint belongs to a different store")
+        k = int(extra["iter"])
+        self._base_iter = k
+        self._base_y = np.asarray(tree["y"], np.float32)
+        self._base_lam = np.asarray(tree["lam"], np.float32)
+        self._x_hist = []
+        for w in self.members.alive():
+            self._send_assign(w.wid, sorted(w.blocks), upto_iter=k,
+                              force=True)
+        # x rides along so a resume at k >= max_iters returns the
+        # checkpointed solution instead of the zero init
+        return (k, np.asarray(tree["d"], np.float32),
+                np.asarray(tree["x"], np.float32))
+
+    # -- telemetry ----------------------------------------------------------
+    def _pad_objective(self) -> float:
+        # one pad-row objective contract for the streaming AND cluster
+        # drivers (engine.streaming.store_pad_objective)
+        from repro.engine.streaming import store_pad_objective
+        return store_pad_objective(self.store, self.loss)
+
+    def _telemetry(self, iters: int, wall_s: float) -> dict:
+        n = self.store.n
+        coord = self.counter.snapshot()
+        reduction_rx = sum(coord["received_bytes"].get(t, 0)
+                           for t in REDUCTION_TAGS)
+        bcast_tx = sum(coord["sent_bytes"].get(t, 0)
+                       for t in BROADCAST_TAGS)
+        return {
+            "workers_spawned": self.cfg.n_workers,
+            "workers_alive": len(self.members.alive()),
+            "deaths": list(self.members.deaths),
+            "blocks_reassigned": self.members.reassignments,
+            "iteration_retries": self._retries,
+            "iters": iters,
+            "wall_s": round(wall_s, 3),
+            "epoch": self._epoch,
+            "tree_depth": (self._topology.depth()
+                           if self._topology else 1),
+            "coordinator_reduction_rx_bytes": reduction_rx,
+            "coordinator_broadcast_tx_bytes": bcast_tx,
+            "reduction_rx_bytes_per_iter": (
+                round(reduction_rx / iters, 1) if iters else 0.0),
+            "payload_bytes_per_nvec": compress.wire_bytes(
+                n, self.cfg.compress),
+            "payload_bytes_per_nvec_uncompressed": compress.wire_bytes(
+                n, False),
+            "counters": coord,
+        }
+
+
+# ---------------------------------------------------------------------------
+# convenience drivers (launch/fit.py, benchmarks, tests)
+# ---------------------------------------------------------------------------
+
+def _ensure_store(D, aux, store_dir: Optional[str], n_workers: int,
+                  block_rows: Optional[int] = None) -> Tuple[str, bool]:
+    """Stage host arrays (or pass through an existing store dir).
+    Returns (path, created): ``created`` stores are the convenience
+    drivers' to delete after shutdown — a dataset-sized temp directory
+    must not outlive the solve."""
+    from repro.data.store import ShardedMatrixStore
+    if isinstance(D, str):
+        return D, False
+    created = store_dir is None
+    if created:
+        store_dir = tempfile.mkdtemp(prefix="cluster_store_")
+    D = np.asarray(D)
+    if D.ndim == 3:
+        D = D.reshape(-1, D.shape[-1])
+    if block_rows is None:
+        # >= 2 blocks per worker so a death has something to spread
+        block_rows = max(1, -(-D.shape[0] // (2 * max(n_workers, 1))))
+    store = ShardedMatrixStore.from_arrays(
+        D, None if aux is None else np.asarray(aux).reshape(-1),
+        block_rows=block_rows)
+    store.save(store_dir)
+    return store_dir, created
+
+
+def cluster_solve(D, aux, loss: dict, tau: float, rho: float = 0.0,
+                  max_iters: int = 300, store_dir: Optional[str] = None,
+                  config: Optional[ClusterConfig] = None,
+                  block_rows: Optional[int] = None,
+                  eps_rel: float = 1e-3, eps_abs: float = 1e-6,
+                  record: bool = True) -> ClusterResult:
+    """One-call multi-process solve: stage the store, run the cluster,
+    tear it down. ``D`` may be host arrays or a saved store path."""
+    config = config or ClusterConfig()
+    path, created = _ensure_store(D, aux, store_dir, config.n_workers,
+                                  block_rows)
+    try:
+        with ClusterCoordinator(path, loss, tau=tau, rho=rho,
+                                eps_rel=eps_rel, eps_abs=eps_abs,
+                                config=config) as coord:
+            res = coord.solve(max_iters=max_iters, record=record)
+            res.telemetry["shutdown_counters"] = coord.shutdown()
+        return res
+    finally:
+        if created:
+            shutil.rmtree(path, ignore_errors=True)
+
+
+def cluster_stats(D, aux, store_dir: Optional[str] = None,
+                  config: Optional[ClusterConfig] = None,
+                  block_rows: Optional[int] = None):
+    """Distributed sufficient-stats ingest (the paper-§4 regression
+    path: lasso/ridge solves never iterate over the cluster — one
+    stats reduction, then the coordinator solves locally)."""
+    config = config or ClusterConfig()
+    path, created = _ensure_store(D, aux, store_dir, config.n_workers,
+                                  block_rows)
+    try:
+        with ClusterCoordinator(path, {"name": "least_squares"},
+                                config=config) as coord:
+            st = coord.stats()
+            telemetry = coord.shutdown()
+        return st, telemetry
+    finally:
+        if created:
+            shutil.rmtree(path, ignore_errors=True)

@@ -1,0 +1,181 @@
+"""Socket transport for the cluster runtime — framing, counters, failure.
+
+Stdlib-only (``socket`` + ``pickle``; no MPI, no grpc): messages are
+length-prefixed pickles of ``{"type": str, ...}`` dicts whose values are
+plain Python and numpy arrays. The framing is deliberately boring — the
+interesting contract is the ACCOUNTING: every connection counts frame
+bytes per message type, because "what crosses the wire per iteration"
+is the paper's headline quantity and BENCH_cluster.json records it
+(n-vector reductions vs the O(m) a consensus scheme would move).
+
+Failure model: a peer death surfaces as EOF/ECONNRESET on ``recv``
+(raised as :class:`ConnectionClosed`) — the coordinator's per-worker
+receiver threads translate that into a death event, which is how a
+SIGKILLed worker is detected within one read rather than one heartbeat
+timeout.
+
+Trust model: pickle over a socket means the transport must only ever be
+pointed at the coordinator's own spawned workers (localhost by default).
+This is a cluster runtime for a solver you launched, not a public
+endpoint — do not expose the listener beyond hosts you control.
+"""
+from __future__ import annotations
+
+import pickle
+import socket
+import struct
+import threading
+from typing import Dict, Optional, Tuple
+
+_LEN = struct.Struct(">Q")
+
+
+class ConnectionClosed(Exception):
+    """Peer went away (EOF / reset) — the transport-level death signal."""
+
+
+class ByteCounter:
+    """Thread-safe per-message-type frame byte/count totals."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.sent: Dict[str, int] = {}
+        self.sent_msgs: Dict[str, int] = {}
+        self.received: Dict[str, int] = {}
+        self.received_msgs: Dict[str, int] = {}
+
+    def add(self, direction: str, tag: str, nbytes: int):
+        with self._lock:
+            b, m = ((self.sent, self.sent_msgs) if direction == "tx"
+                    else (self.received, self.received_msgs))
+            b[tag] = b.get(tag, 0) + nbytes
+            m[tag] = m.get(tag, 0) + 1
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"sent_bytes": dict(self.sent),
+                    "sent_msgs": dict(self.sent_msgs),
+                    "received_bytes": dict(self.received),
+                    "received_msgs": dict(self.received_msgs)}
+
+    def merge(self, other: dict):
+        """Fold another counter's :meth:`snapshot` into this one (the
+        coordinator aggregates worker-reported counters at shutdown)."""
+        with self._lock:
+            for mine, key in ((self.sent, "sent_bytes"),
+                              (self.sent_msgs, "sent_msgs"),
+                              (self.received, "received_bytes"),
+                              (self.received_msgs, "received_msgs")):
+                for tag, v in other.get(key, {}).items():
+                    mine[tag] = mine.get(tag, 0) + v
+
+    def total(self, direction: str = "tx") -> int:
+        with self._lock:
+            src = self.sent if direction == "tx" else self.received
+            return sum(src.values())
+
+
+class Connection:
+    """One framed duplex channel. ``send`` is locked (multiple threads —
+    main loop + heartbeat — share the coordinator link); ``recv`` must
+    stay single-threaded per connection (one receiver thread each)."""
+
+    def __init__(self, sock: socket.socket,
+                 counter: Optional[ByteCounter] = None):
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._sock = sock
+        self._send_lock = threading.Lock()
+        self.counter = counter or ByteCounter()
+        self.closed = False
+
+    @property
+    def peer(self) -> Tuple[str, int]:
+        return self._sock.getpeername()
+
+    def send(self, msg_type: str, **payload):
+        frame = pickle.dumps({"type": msg_type, **payload},
+                             protocol=pickle.HIGHEST_PROTOCOL)
+        header = _LEN.pack(len(frame))
+        try:
+            with self._send_lock:
+                self._sock.sendall(header + frame)
+        except OSError as e:
+            self.closed = True
+            raise ConnectionClosed(str(e)) from e
+        self.counter.add("tx", msg_type, len(header) + len(frame))
+
+    def _recv_exact(self, n: int) -> bytes:
+        buf = bytearray()
+        while len(buf) < n:
+            try:
+                chunk = self._sock.recv(n - len(buf))
+            except socket.timeout:
+                raise
+            except OSError as e:
+                self.closed = True
+                raise ConnectionClosed(str(e)) from e
+            if not chunk:
+                self.closed = True
+                raise ConnectionClosed("EOF")
+            buf.extend(chunk)
+        return bytes(buf)
+
+    def recv(self, timeout: Optional[float] = None) -> Optional[dict]:
+        """Next message, or None on IDLE timeout. Raises
+        ConnectionClosed on peer death. Only a timeout with ZERO bytes
+        read returns None: once the first header byte has arrived the
+        peer is alive and mid-send, so the rest of the frame is read
+        blocking — a mid-header timeout must never drop buffered bytes
+        and desynchronize the length-prefixed stream."""
+        self._sock.settimeout(timeout)
+        try:
+            first = self._recv_exact(1)
+        except socket.timeout:
+            return None
+        self._sock.settimeout(None)          # finish the frame blocking
+        header = first + self._recv_exact(_LEN.size - 1)
+        frame = self._recv_exact(_LEN.unpack(header)[0])
+        msg = pickle.loads(frame)
+        self.counter.add("rx", msg.get("type", "?"),
+                         _LEN.size + len(frame))
+        return msg
+
+    def close(self):
+        self.closed = True
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self._sock.close()
+
+
+class Listener:
+    """Bound server socket (port 0 -> OS-assigned; workers report theirs
+    back to the coordinator at registration)."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0):
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(64)
+        self.address: Tuple[str, int] = self._sock.getsockname()
+
+    def accept(self, timeout: Optional[float] = None,
+               counter: Optional[ByteCounter] = None
+               ) -> Optional[Connection]:
+        self._sock.settimeout(timeout)
+        try:
+            sock, _ = self._sock.accept()
+        except socket.timeout:
+            return None
+        return Connection(sock, counter=counter)
+
+    def close(self):
+        self._sock.close()
+
+
+def connect(address: Tuple[str, int], timeout: float = 10.0,
+            counter: Optional[ByteCounter] = None) -> Connection:
+    sock = socket.create_connection(address, timeout=timeout)
+    sock.settimeout(None)
+    return Connection(sock, counter=counter)

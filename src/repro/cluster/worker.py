@@ -1,0 +1,442 @@
+"""The cluster worker process — owns row blocks, ships n-vector reductions.
+
+One worker = one OS process (spawned by the coordinator, or launched by
+hand pointing at the coordinator's address). It:
+
+  * opens the shared :class:`~repro.data.store.ShardedMatrixStore`
+    READ-ONLY (mmap) and verifies every assigned block's content against
+    the store's write-time fingerprints before touching it;
+  * keeps the m_i-sized iterates (y, lam) of its blocks in HOST numpy
+    buffers and runs the per-iteration body through the SAME jitted
+    fused step the streaming engine uses (``engine.streaming
+    .block_step_fns`` -> ``IterationEngine.iterate``) — one device-
+    resident block at a time, so worker device memory is bounded by one
+    block;
+  * per iteration ships ONE :class:`~repro.cluster.reduction
+    .Contribution` (three n-vectors + scalars) up the reduce tree —
+    merging its children's partials first — optionally int8-compressed
+    with per-sender error feedback;
+  * heartbeats the coordinator and dies loudly (any exception is
+    reported upstream as an ``error`` message before exit).
+
+Recovery contract: a worker's iterates are a deterministic function of
+(block content, x_1..x_k), so the coordinator never backs them up — an
+``assign`` mid-solve carries a base state (possibly empty) plus the
+x-history since, and the new owner REPLAYS the fused body over just
+those blocks to reconstruct (y, lam) exactly. Per-block iteration
+counters make retried broadcasts idempotent: a block already at
+iteration k answers from its cached contribution instead of applying
+the prox twice.
+
+Fault injection for tests: ``die_at_iter`` SIGKILLs the process upon
+receiving that iteration's broadcast; ``slow_ms`` delays each iteration
+(the straggler knob the bounded-staleness mode is measured against).
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+import time
+import traceback
+from typing import Dict, Optional
+
+from repro.cluster.transport import (
+    ByteCounter,
+    Connection,
+    ConnectionClosed,
+    Listener,
+    connect,
+)
+
+_HEARTBEAT_TYPES = ("heartbeat",)
+
+
+def make_loss(spec: dict):
+    """ProxLoss from a picklable spec — the coordinator cannot ship the
+    ProxLoss itself (closures don't pickle), so both ends build it from
+    ``{"name": ..., **params}`` through this one factory."""
+    from repro.core import prox
+    name = spec["name"]
+    if name == "logistic":
+        return prox.make_logistic()
+    if name == "hinge":
+        return prox.make_hinge(float(spec.get("C", 1.0)))
+    if name == "least_squares":
+        return prox.make_least_squares()
+    if name == "l1":
+        return prox.make_l1(float(spec.get("mu", 1.0)))
+    raise ValueError(f"unknown cluster loss {name!r}")
+
+
+def _setup_env(config: dict):
+    """Thread/platform knobs BEFORE first jax backend init. Many worker
+    processes timeshare the host's cores; unbounded per-process XLA/BLAS
+    pools thrash, so workers default to single-threaded compute (the
+    coordinator overrides via config on big hosts)."""
+    if config.get("jax_platforms"):
+        os.environ["JAX_PLATFORMS"] = config["jax_platforms"]
+    if config.get("limit_threads", True):
+        os.environ.setdefault("OMP_NUM_THREADS", "1")
+        os.environ.setdefault("OPENBLAS_NUM_THREADS", "1")
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_cpu_multi_thread_eigen" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_cpu_multi_thread_eigen=false"
+            ).strip()
+
+
+class WorkerRuntime:
+    """Single-threaded state machine over one inbox; receiver threads
+    (coordinator link + one per peer connection) only enqueue."""
+
+    def __init__(self, wid: int, coord_addr, config: dict):
+        import jax  # noqa: F401  (backend init happens under _setup_env)
+
+        from repro.data.store import ShardedMatrixStore
+
+        self.wid = wid
+        self.config = config
+        self.counter = ByteCounter()
+        self.store = ShardedMatrixStore.open(config["store_path"])
+        self.loss = make_loss(config["loss"])
+        self.tau = float(config.get("tau", 1.0))
+        self.compress = bool(config.get("compress", False))
+        self.staleness = bool(config.get("staleness", False))
+        self._ef_err = None               # error-feedback residual for d
+
+        from repro.engine import IterationEngine
+        from repro.engine.streaming import block_step_fns
+
+        self.engine = IterationEngine(
+            loss=self.loss, tau=self.tau,
+            backend=config.get("backend", "auto"))
+        self._step, _, _ = block_step_fns(
+            self.engine, self.store.has_aux, True,
+            sparse=self.store.sparse)
+        self._step_lean, _, _ = block_step_fns(
+            self.engine, self.store.has_aux, False,
+            sparse=self.store.sparse)
+
+        # per-block state: padded host iterates + iteration counter +
+        # cached last contribution (idempotent retries)
+        self.blocks: Dict[int, dict] = {}
+
+        self.inbox: "queue.Queue" = queue.Queue()
+        self.peers = Listener()           # children connect here
+        self.coord = connect(tuple(coord_addr), counter=self.counter)
+        self._parent_conns: Dict[tuple, Connection] = {}
+        self.topology = {"epoch": -1, "parent": None, "nchildren": 0}
+        self._task = None                 # in-flight tree reduce
+        self._peer_buf = []               # children ahead of our own iter
+        self._stop = threading.Event()
+
+    # -- threads -----------------------------------------------------------
+    def _coord_rx(self):
+        try:
+            while not self._stop.is_set():
+                msg = self.coord.recv()
+                self.inbox.put(("cmd", msg))
+        except ConnectionClosed:
+            self.inbox.put(("cmd_closed", None))
+
+    def _peer_rx(self, conn: Connection):
+        try:
+            while not self._stop.is_set():
+                msg = conn.recv()
+                if msg.get("type") == "contrib":
+                    self.inbox.put(("peer", msg))
+        except ConnectionClosed:
+            pass
+
+    def _peer_accept(self):
+        while not self._stop.is_set():
+            conn = self.peers.accept(timeout=0.5, counter=self.counter)
+            if conn is not None:
+                threading.Thread(target=self._peer_rx, args=(conn,),
+                                 daemon=True).start()
+
+    def _heartbeat(self):
+        interval = float(self.config.get("heartbeat_interval", 0.5))
+        while not self._stop.is_set():
+            try:
+                self.coord.send("heartbeat", wid=self.wid,
+                                t=time.monotonic())
+            except ConnectionClosed:
+                return
+            self._stop.wait(interval)
+
+    # -- block state -------------------------------------------------------
+    def _init_block(self, bid: int, base_iter: int, base=None):
+        import numpy as np
+        if not self.store.verify_block(bid):
+            raise RuntimeError(
+                f"worker {self.wid}: store block {bid} content does not "
+                f"match its write-time fingerprint — refusing assignment")
+        br = self.store.block_rows
+        y = np.zeros((br,), np.float32)
+        lam = np.zeros((br,), np.float32)
+        if base is not None:
+            y_l, lam_l = base
+            y[: len(y_l)] = y_l
+            lam[: len(lam_l)] = lam_l
+        self.blocks[bid] = {"y": y, "lam": lam, "iter": int(base_iter),
+                            "contrib": None}
+
+    def _apply_block(self, bid: int, x_dev, k: int, want_dual: bool):
+        """Advance one block's iterates by one fused step; cache its
+        contribution for iteration k."""
+        import jax
+        import numpy as np
+
+        from repro.cluster.reduction import Contribution
+        from repro.engine.streaming import _zero_sweep
+
+        st = self.blocks[bid]
+        D_b, a_b = self.store.block(bid, padded=True)
+        step = self._step if want_dual else self._step_lean
+        acc = _zero_sweep(self.store.n, jax.numpy.float32)
+        y_new, lam_new, acc = step(
+            jax.device_put(np.ascontiguousarray(D_b)),
+            jax.device_put(a_b) if a_b is not None else None,
+            jax.device_put(st["y"]), jax.device_put(st["lam"]),
+            x_dev, acc)
+        st["y"] = np.asarray(y_new)
+        st["lam"] = np.asarray(lam_new)
+        st["iter"] = k
+        if want_dual:
+            sl = self.store.block_slice(bid)
+            st["contrib"] = Contribution(
+                iteration=k, workers=(self.wid,),
+                rows=sl.stop - sl.start,
+                d=np.asarray(acc.d), w=np.asarray(acc.w),
+                v=np.asarray(acc.v),
+                scalars={"r_sq": float(acc.r_sq),
+                         "dx_sq": float(acc.dx_sq),
+                         "y_sq": float(acc.y_sq),
+                         "obj": float(acc.obj)})
+
+    def _replay(self, bids, x_history):
+        """Reconstruct (y, lam) for newly assigned blocks: the lean body
+        over just these blocks, once per historical x."""
+        import jax
+        import numpy as np
+        for x in np.asarray(x_history, np.float32):
+            x_dev = jax.device_put(x)
+            for bid in bids:
+                self._apply_block(bid, x_dev, self.blocks[bid]["iter"] + 1,
+                                  want_dual=False)
+
+    # -- message handlers ---------------------------------------------------
+    def _on_assign(self, msg):
+        base_iter = int(msg.get("base_iter", 0))
+        base_state = msg.get("base_state") or {}
+        force = bool(msg.get("force", False))   # resume: overwrite state
+        fresh = []
+        for bid in msg["blocks"]:
+            if force or bid not in self.blocks:
+                self._init_block(bid, base_iter, base_state.get(bid))
+                fresh.append(bid)
+        hist = msg.get("x_history")
+        if hist is not None and len(hist) and fresh:
+            self._replay(fresh, hist)
+        self.coord.send("assigned", wid=self.wid, blocks=list(self.blocks),
+                        at_iter={b: self.blocks[b]["iter"]
+                                 for b in self.blocks})
+
+    def _on_stats(self, msg):
+        import numpy as np
+
+        from repro.service.stats import SufficientStats
+        bids = msg.get("blocks")
+        if bids is None:
+            bids = sorted(self.blocks)
+        stats = SufficientStats.zero(self.store.n)
+        for bid in bids:
+            D_b, a_b = self.store.block(bid, padded=False)
+            stats = stats.update(
+                D_b if self.store.sparse else np.asarray(D_b),
+                np.asarray(a_b) if a_b is not None else None,
+                block_fingerprint=self.store.fingerprints[bid])
+        self.coord.send("stats", wid=self.wid, blocks=list(bids),
+                        **stats.to_payload())
+
+    def _on_topology(self, msg):
+        self.topology = {"epoch": int(msg["epoch"]),
+                         "parent": (tuple(msg["parent"])
+                                    if msg["parent"] else None),
+                         "nchildren": int(msg["nchildren"])}
+        if self._task and self._task["epoch"] < self.topology["epoch"]:
+            self._task = None             # partials of a dead topology
+
+    def _on_iter(self, msg):
+        import jax
+        import numpy as np
+
+        from repro.cluster.reduction import Contribution
+
+        k = int(msg["k"])
+        if (not self.staleness
+                and int(msg["epoch"]) != self.topology["epoch"]):
+            # a broadcast from a topology that died before we got to it;
+            # the coordinator has already re-issued this iteration under
+            # the new epoch (FIFO per link makes this purely defensive)
+            return
+        die_at = self.config.get("die_at_iter")
+        if die_at is not None and k >= int(die_at):
+            os.kill(os.getpid(), 9)       # fault injection: SIGKILL
+        slow = float(self.config.get("slow_ms", 0.0))
+        if slow:
+            time.sleep(slow / 1e3)
+        x_dev = jax.device_put(np.asarray(msg["x"], np.float32))
+        own = Contribution.zero(k, self.store.n)
+        for bid in sorted(self.blocks):
+            st = self.blocks[bid]
+            if st["iter"] < k:
+                self._apply_block(bid, x_dev, k, want_dual=True)
+            c = st["contrib"]
+            assert c is not None and c.iteration == k, \
+                f"block {bid} at iter {st['iter']}, contrib for {k}?"
+            own = own.merge(c)
+        own = Contribution(iteration=k, workers=(self.wid,),
+                           rows=own.rows, d=own.d, w=own.w, v=own.v,
+                           scalars=own.scalars)
+        self._task = {"k": k, "epoch": int(msg["epoch"]),
+                      "partial": own,
+                      "need": self.topology["nchildren"]}
+        # children may have delivered before our own broadcast arrived
+        buf, self._peer_buf = self._peer_buf, []
+        for pending in buf:
+            self._on_peer(pending)
+        self._maybe_transmit()
+
+    def _on_peer(self, msg):
+        from repro.cluster.reduction import decode
+        t = self._task
+        ep, it = msg["epoch"], msg["payload"]["iteration"]
+        if t is None or ep > t["epoch"] or (ep == t["epoch"]
+                                            and it > t["k"]):
+            # AHEAD of us (fast child beat our own iter broadcast):
+            # buffer — dropping it would deadlock the parent's wait.
+            # Each child sends once per (k, epoch), so the live window
+            # is bounded by the child count; the cap only sheds entries
+            # from topologies that died before we processed them.
+            if ep >= self.topology["epoch"]:
+                self._peer_buf.append(msg)
+                cap = 2 * max(1, self.topology["nchildren"]) + 8
+                del self._peer_buf[:-cap]
+            return
+        if ep < t["epoch"] or it < t["k"]:
+            return                        # partial of a dead topology
+        t["partial"] = t["partial"].merge(decode(msg["payload"]))
+        t["need"] -= 1
+        self._maybe_transmit()
+
+    def _maybe_transmit(self):
+        from repro.cluster.reduction import encode
+        t = self._task
+        if t is None or t["need"] > 0:
+            return
+        payload, self._ef_err = encode(t["partial"], self.compress,
+                                       self._ef_err)
+        parent = self.topology["parent"]
+        self._task = None
+        if parent is None:
+            self.coord.send("contrib", wid=self.wid, epoch=t["epoch"],
+                            payload=payload)
+            return
+        try:
+            conn = self._parent_conns.get(parent)
+            if conn is None or conn.closed:
+                conn = connect(parent, counter=self.counter)
+                self._parent_conns[parent] = conn
+            conn.send("contrib", wid=self.wid, epoch=t["epoch"],
+                      payload=payload)
+        except (ConnectionClosed, OSError):
+            # parent died: the coordinator's failure detector will
+            # rebuild the topology and re-issue this iteration; our
+            # cached per-block contributions make the retry cheap.
+            self._parent_conns.pop(parent, None)
+
+    def _on_checkpoint(self, msg):
+        state = {}
+        for bid, st in self.blocks.items():
+            sl = self.store.block_slice(bid)
+            valid = sl.stop - sl.start
+            state[bid] = (st["y"][:valid].copy(), st["lam"][:valid].copy(),
+                          st["iter"])
+        self.coord.send("ckpt", wid=self.wid, blocks=state)
+
+    # -- main loop ----------------------------------------------------------
+    def run(self):
+        threading.Thread(target=self._coord_rx, daemon=True).start()
+        threading.Thread(target=self._peer_accept, daemon=True).start()
+        self.coord.send("register", wid=self.wid,
+                        peer_addr=self.peers.address,
+                        store_fingerprint=self.store.fingerprint,
+                        pid=os.getpid())
+        threading.Thread(target=self._heartbeat, daemon=True).start()
+        handlers = {"assign": self._on_assign, "stats": self._on_stats,
+                    "topology": self._on_topology, "iter": self._on_iter,
+                    "checkpoint": self._on_checkpoint}
+        while True:
+            kind, msg = self.inbox.get()
+            if kind == "cmd_closed":
+                break                     # coordinator gone: exit quietly
+            if kind == "peer":
+                self._on_peer(msg)
+                continue
+            mtype = msg.get("type")
+            if mtype == "stop":
+                # every link (coordinator, peer server, parent hops)
+                # shares self.counter, so one snapshot covers them all
+                self.coord.send("bye", wid=self.wid,
+                                counters=self.counter.snapshot())
+                break
+            if mtype in _HEARTBEAT_TYPES:
+                continue
+            if mtype == "iter" and self.staleness:
+                # bounded-staleness drain: a slow worker computes against
+                # the NEWEST broadcast x rather than queueing up history
+                msg = self._drain_to_newest(msg)
+            handlers[mtype](msg)
+        self._stop.set()
+        self.coord.close()
+
+    def _drain_to_newest(self, msg):
+        while True:
+            try:
+                kind, nxt = self.inbox.get_nowait()
+            except queue.Empty:
+                return msg
+            if kind == "peer":
+                self._on_peer(nxt)
+            elif kind == "cmd" and nxt.get("type") == "iter":
+                msg = nxt                 # supersedes the queued one
+            elif kind == "cmd" and nxt.get("type") in _HEARTBEAT_TYPES:
+                continue
+            else:
+                self.inbox.put((kind, nxt))   # non-iter cmd: keep order
+                return msg
+
+
+def worker_entry(wid: int, coord_host: str, coord_port: int, config: dict):
+    """multiprocessing spawn target. Sets thread/platform env BEFORE the
+    jax backend initializes, then hands off to the runtime; any failure
+    is reported to the coordinator as an ``error`` message."""
+    _setup_env(config)
+    rt = None
+    try:
+        rt = WorkerRuntime(wid, (coord_host, coord_port), config)
+        rt.run()
+    except Exception:
+        tb = traceback.format_exc()
+        try:
+            if rt is not None:
+                rt.coord.send("error", wid=wid, traceback=tb)
+            else:
+                conn = connect((coord_host, coord_port))
+                conn.send("error", wid=wid, traceback=tb)
+        except Exception:
+            pass
+        raise

@@ -31,27 +31,17 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import gram as gram_lib
 from repro.core.prox import ProxLoss, soft_threshold
+# One shared int8 error-feedback implementation for every wire: the
+# shard_map psum here and the multi-process cluster transport
+# (repro.cluster) quantize with the same blocks/scales. The underscored
+# names are re-exports kept for backward compatibility.
+from repro.cluster.compress import (
+    dequantize_int8 as _dequantize_int8,  # noqa: F401  (re-export)
+    ef_compress,
+    quantize_int8 as _quantize_int8,      # noqa: F401  (re-export)
+)
 
 Array = jax.Array
-
-
-# ---------------------------------------------------------------------------
-# int8 error-feedback compression for the d-reduction (beyond-paper)
-# ---------------------------------------------------------------------------
-
-def _quantize_int8(v: Array, block: int = 256) -> Tuple[Array, Array]:
-    n = v.shape[0]
-    nb = -(-n // block)
-    pad = nb * block - n
-    vp = jnp.pad(v, (0, pad)).reshape(nb, block)
-    scale = jnp.max(jnp.abs(vp), axis=1, keepdims=True) / 127.0
-    scale = jnp.maximum(scale, 1e-30)
-    q = jnp.clip(jnp.round(vp / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def _dequantize_int8(q: Array, scale: Array, n: int) -> Array:
-    return (q.astype(jnp.float32) * scale).reshape(-1)[:n]
 
 
 def compressed_psum(v: Array, axis_names, err: Array) -> Tuple[Array, Array]:
@@ -61,9 +51,7 @@ def compressed_psum(v: Array, axis_names, err: Array) -> Tuple[Array, Array]:
     instead of 4.
     """
     n = v.shape[0]
-    corrected = v + err
-    q, scale = _quantize_int8(corrected)
-    new_err = corrected - _dequantize_int8(q, scale, n)
+    q, scale, new_err = ef_compress(v, err)
     # int8 all-gather over the innermost (largest) data axis...
     ax = axis_names[-1]
     qg = jax.lax.all_gather(q, ax)                # (Nax, nb, block) int8

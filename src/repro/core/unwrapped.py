@@ -366,6 +366,8 @@ class UnwrappedADMM:
         self, store, max_iters: int = 500, x0: Optional[Array] = None,
         record: bool = False, overlap: bool = True, prefetch: int = 2,
         device_dtype: Optional[str] = None,
+        checkpoint_dir: Optional[str] = None, checkpoint_every: int = 0,
+        resume: bool = False,
     ) -> ADMMResult:
         """``solve`` for data that does not fit device memory: ``store``
         is a :class:`repro.data.store.ShardedMatrixStore` (host RAM or
@@ -376,11 +378,20 @@ class UnwrappedADMM:
         by one block regardless of m. Same stopping rule and warm-start
         semantics as ``solve``; ``overlap=False`` degrades to the naive
         synchronous transfer loop (the benchmark baseline).
+
+        ``checkpoint_dir`` + ``checkpoint_every=K`` persist the loop
+        state (x, y, lam, d, iter) every K iterations through
+        :class:`repro.checkpoint.manager.CheckpointManager`;
+        ``resume=True`` restores the newest step and continues
+        bitwise-compatibly after a kill (the checkpoint refuses to
+        resume against a store with a different content fingerprint).
         """
         from repro.engine.streaming import solve_streaming as _solve
         return _solve(self, store, max_iters=max_iters, x0=x0,
                       record=record, overlap=overlap, prefetch=prefetch,
-                      device_dtype=device_dtype)
+                      device_dtype=device_dtype,
+                      checkpoint_dir=checkpoint_dir,
+                      checkpoint_every=checkpoint_every, resume=resume)
 
 
 # ---------------------------------------------------------------------------

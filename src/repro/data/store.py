@@ -305,6 +305,24 @@ class ShardedMatrixStore:
                 a_b = _pad_rows(np.asarray(a_b), self.block_rows)
         return D_b, a_b
 
+    def verify_block(self, k: int) -> bool:
+        """Re-hash block k's CONTENT and compare against its write-time
+        fingerprint. The cluster runtime's reassignment path calls this
+        before a new owner computes on an orphaned block: ownership
+        moves by index, so the fingerprint is what guarantees the
+        survivor's store really holds the same rows the dead worker
+        held (a stale or torn mmap fails here instead of corrupting the
+        solve). Hashes exactly what write time hashed: the UNPADDED
+        dense block (or the sparse index/value arrays) plus aux."""
+        a_b = self._blocks_aux[k] if self._blocks_aux is not None else None
+        if self.sparse:
+            idx, val, _, _ = self._blocks_D[k]
+            fp = fingerprint_array(np.ascontiguousarray(idx),
+                                   np.ascontiguousarray(val), a_b)
+        else:
+            fp = fingerprint_array(self._blocks_D[k], a_b)
+        return fp == self.fingerprints[k]
+
     def iter_blocks(self, padded: bool = False
                     ) -> Iterator[Tuple[np.ndarray, Optional[np.ndarray]]]:
         """The store's contract with the streaming engine: ``(D_block,

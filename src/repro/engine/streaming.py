@@ -171,6 +171,25 @@ def _block_fns(engine: IterationEngine, has_aux: bool,
             jax.jit(gram, donate_argnums=(0,)))
 
 
+# Public alias: the cluster worker (repro.cluster.worker) drives the same
+# jitted per-block fused body over ITS owned blocks — one implementation
+# of the iteration step for the streaming and multi-process paths.
+block_step_fns = _block_fns
+
+
+def store_pad_objective(store: ShardedMatrixStore, loss) -> float:
+    """f's value on the tail block's pad rows. Pad iterates stay at
+    zero (zero D rows, zero aux), so this is a CONSTANT the driver
+    subtracts from each sweep's objective — the only pad quantity that
+    is not exactly zero (e.g. logistic: log 2 per pad row). One
+    definition for the streaming driver and the cluster coordinator."""
+    pad = store.nblocks * store.block_rows - store.m
+    if pad == 0:
+        return 0.0
+    z = jnp.zeros((pad,), jnp.float32)
+    return float(loss.value(z, z if store.has_aux else None))
+
+
 # ---------------------------------------------------------------------------
 # the streaming engine
 # ---------------------------------------------------------------------------
@@ -320,16 +339,9 @@ class StreamingEngine:
 
     # -- pad-objective correction ------------------------------------------
     def pad_objective(self, store: ShardedMatrixStore) -> float:
-        """f's value on the tail block's pad rows. Pad iterates stay at
-        zero (zero D rows, zero aux), so this is a CONSTANT the driver
-        subtracts from each sweep's objective — the only pad quantity
-        that is not exactly zero (e.g. logistic: log 2 per pad row)."""
-        pad = store.nblocks * store.block_rows - store.m
-        if pad == 0:
-            return 0.0
-        z = jnp.zeros((pad,), jnp.float32)
-        a = z if store.has_aux else None
-        return float(self.engine.loss.value(z, a))
+        """See :func:`store_pad_objective` — shared with the cluster
+        coordinator so the two drivers cannot drift."""
+        return store_pad_objective(store, self.engine.loss)
 
 
 # ---------------------------------------------------------------------------
@@ -339,7 +351,9 @@ class StreamingEngine:
 def solve_streaming(solver, store: ShardedMatrixStore, max_iters: int = 500,
                     x0: Optional[Array] = None, record: bool = False,
                     overlap: bool = True, prefetch: int = 2,
-                    device_dtype: Optional[str] = None):
+                    device_dtype: Optional[str] = None,
+                    checkpoint_dir: Optional[str] = None,
+                    checkpoint_every: int = 0, resume: bool = False):
     """Out-of-core unwrapped ADMM over a row-block store.
 
     Same semantics as ``UnwrappedADMM.solve`` (Boyd stopping rule, warm
@@ -348,6 +362,18 @@ def solve_streaming(solver, store: ShardedMatrixStore, max_iters: int = 500,
     m-sized iterates live in host numpy buffers. Returns an
     ``ADMMResult`` with ``y``/``lam`` shaped (1, m) (the node-stacked
     convention with N=1); ``history`` is populated when ``record``.
+
+    Long solves survive kills: ``checkpoint_dir`` + ``checkpoint_every
+    = K`` persist the full loop state (x, y, lam, d, iter) through
+    :class:`repro.checkpoint.manager.CheckpointManager` every K
+    iterations (atomic commits — a SIGKILL mid-save leaves the previous
+    step intact), and ``resume=True`` restores the newest step and
+    continues BITWISE-compatibly: the restored state is exactly the
+    live state, so the remaining iterations replay the identical
+    op sequence (``tests/test_cluster.py`` asserts bit equality).
+    ``record`` history restarts from the resume point. The checkpoint
+    is bound to the store's content fingerprint — resuming against
+    different data refuses instead of converging somewhere else.
     """
     from repro.core.unwrapped import ADMMHistory, ADMMResult
 
@@ -362,16 +388,37 @@ def solve_streaming(solver, store: ShardedMatrixStore, max_iters: int = 500,
 
     y = np.zeros((m,), jnp.dtype(acc).name)
     lam = np.zeros((m,), jnp.dtype(acc).name)
-    if x0 is not None:
+    k = 0
+    manager = None
+    if checkpoint_dir is not None:
+        from repro.checkpoint.manager import CheckpointManager
+        manager = CheckpointManager(checkpoint_dir)
+    if manager is not None and resume and manager.latest_step() is not None:
+        like = {"x": jnp.zeros((n,), acc), "y": jnp.zeros((m,), acc),
+                "lam": jnp.zeros((m,), acc), "d": jnp.zeros((n,), acc)}
+        tree, extra = manager.restore(like)
+        if extra.get("kind") != "streaming_solve":
+            raise ValueError(f"not a streaming checkpoint: {extra}")
+        if extra.get("store_fingerprint") != store.fingerprint:
+            raise ValueError(
+                "checkpoint was written against a different store "
+                "(content fingerprint mismatch)")
+        y[:] = np.asarray(tree["y"])
+        lam[:] = np.asarray(tree["lam"])
+        d = tree["d"]
+        k = int(extra["iter"])
+        x_init = tree["x"]       # returned as-is if no iterations remain
+    elif x0 is not None:
         d = seng.init_from_x0(store, jnp.asarray(x0, acc), y)
+        x_init = jnp.zeros((n,), acc)
     else:
         d = jnp.zeros((n,), acc)
+        x_init = jnp.zeros((n,), acc)
 
     pad_obj = seng.pad_objective(store)
     objs, rs, ss = [], [], []
     k_conv = -1
-    x = jnp.zeros((n,), acc)
-    k = 0
+    x = x_init
     while k < max_iters:
         x = gram_lib.gram_solve(L, d)
         sw = seng.sweep(store, x, y, lam, overlap=overlap)
@@ -390,6 +437,12 @@ def solve_streaming(solver, store: ShardedMatrixStore, max_iters: int = 500,
             objs.append(obj)
             rs.append(r)
             ss.append(s)
+        if manager is not None and checkpoint_every \
+                and k % checkpoint_every == 0:
+            manager.save(k, {"x": x, "y": jnp.asarray(y),
+                             "lam": jnp.asarray(lam), "d": d},
+                         extra={"kind": "streaming_solve", "iter": k,
+                                "store_fingerprint": store.fingerprint})
         if r <= eps_pri and s <= eps_dual:
             k_conv = k - 1
             break

@@ -18,6 +18,17 @@ with the default ``--sparse-format blockcsr`` — runs the whole pipeline
 through the padded block-CSR path (DESIGN.md §10): O(nnz) iterations,
 O(nnz) Gram setup, nnz-scaled stores. ``--sparse-format dense``
 densifies the same data and runs the dense path (the comparison knob).
+
+``--cluster N`` runs the solve over N worker PROCESSES (DESIGN.md §11):
+the data is staged into a shared block store, each worker owns a set of
+row blocks and ships only n-length reductions per iteration, and the
+coordinator (this process) does the global x-update — the paper's
+actual deployment shape, with heartbeats, block reassignment on worker
+death, and optional int8-compressed tree reduction
+(``--cluster-compress``) or bounded-staleness quorum aggregation
+(``--cluster-staleness S``). Lasso under ``--cluster`` is the paper-§4
+regression path: ONE distributed stats reduction, then a local FASTA
+solve — no per-iteration communication at all.
 """
 from __future__ import annotations
 
@@ -41,12 +52,15 @@ from repro.sharding import compat
 
 
 def _admm_params(problem):
-    """(loss, rho, tau) for the separable-loss ADMM paths — ONE table for
-    the streaming and multi-device branches, so a calibration change
-    cannot leave them inconsistent."""
+    """(loss, rho, tau, spec) for the separable-loss ADMM paths — ONE
+    table for the streaming, multi-device AND cluster branches, so a
+    calibration change cannot leave them inconsistent. ``spec`` is the
+    picklable form cluster workers rebuild the same loss from
+    (``repro.cluster.worker.make_loss``)."""
     if problem == "logistic":
-        return make_logistic(), 0.0, 0.1
-    return make_hinge(1.0), 1.0, 0.5          # svm
+        return make_logistic(), 0.0, 0.1, {"name": "logistic"}
+    C = 1.0                                    # svm
+    return make_hinge(C), 1.0, 0.5, {"name": "hinge", "C": C}
 
 
 def _fit_streaming(args, D, aux, mu):
@@ -92,10 +106,63 @@ def _fit_streaming(args, D, aux, mu):
     if args.problem not in ("logistic", "svm"):
         raise SystemExit(f"--streaming does not support {args.problem!r} "
                          f"(needs a separable ProxLoss on Dx)")
-    loss, rho, tau = _admm_params(args.problem)
+    loss, rho, tau, _ = _admm_params(args.problem)
     solver = UnwrappedADMM(loss=loss, tau=tau, rho=rho)
-    res = solver.solve_streaming(store, max_iters=args.iters, record=True)
+    res = solver.solve_streaming(store, max_iters=args.iters, record=True,
+                                 checkpoint_dir=args.checkpoint_dir,
+                                 checkpoint_every=args.checkpoint_every,
+                                 resume=args.resume)
     return FitResult(res.x, int(res.iters), res.history.objective,
+                     "transpose", args.problem)
+
+
+def _fit_cluster(args, D, aux, mu):
+    """Multi-process fit: stage a shared block store, spawn workers,
+    solve through the cluster coordinator (DESIGN.md §11)."""
+    from repro.cluster.coordinator import (
+        ClusterConfig,
+        cluster_solve,
+        cluster_stats,
+    )
+
+    cfg = ClusterConfig(
+        n_workers=args.cluster,
+        compress=args.cluster_compress,
+        staleness=args.cluster_staleness,
+        quorum=0.5 if args.cluster_staleness else 1.0,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        resume=args.resume,
+    )
+    if args.problem == "lasso":
+        from repro.core.fasta import transpose_reduction_lasso
+        stats, telemetry = cluster_stats(D, aux, store_dir=args.store_dir,
+                                         config=cfg)
+        wire = sum(telemetry["workers"].get("sent_bytes", {}).values())
+        print(f"cluster stats: {stats.rows} rows over {args.cluster} "
+              f"workers, {wire} worker-tx bytes total", flush=True)
+        fr = transpose_reduction_lasso(stats.G, stats.c, mu,
+                                       iters=args.iters)
+        return FitResult(fr.x, int(fr.iters), fr.objective, "transpose",
+                         "lasso")
+    if args.problem not in ("logistic", "svm"):
+        raise SystemExit(f"--cluster does not support {args.problem!r} "
+                         f"(needs a separable ProxLoss on Dx)")
+    _, rho, tau, spec = _admm_params(args.problem)
+    res = cluster_solve(D, aux, spec, tau=tau, rho=rho,
+                        max_iters=args.iters, store_dir=args.store_dir,
+                        config=cfg)
+    t = res.telemetry
+    print(f"cluster: {t['workers_alive']}/{t['workers_spawned']} workers "
+          f"alive, {len(t['deaths'])} deaths, "
+          f"{t['blocks_reassigned']} blocks reassigned, "
+          f"{t['reduction_rx_bytes_per_iter']:.0f} reduction B/iter "
+          f"at the coordinator "
+          f"({t['payload_bytes_per_nvec']} B payload per n-vector)",
+          flush=True)
+    hist = (jnp.asarray(res.history["objective"])
+            if res.history else None)
+    return FitResult(jnp.asarray(res.x), int(res.iters), hist,
                      "transpose", args.problem)
 
 
@@ -118,7 +185,7 @@ def _fit_sparse(args, bcsr, aux, mu):
     if args.problem not in ("logistic", "svm"):
         raise SystemExit(f"--density does not support {args.problem!r} "
                          f"(needs a separable ProxLoss on Dx)")
-    loss, rho, tau = _admm_params(args.problem)
+    loss, rho, tau, _ = _admm_params(args.problem)
     solver = UnwrappedADMM(loss=loss, tau=tau, rho=rho)
     res = solver.run(bcsr, aux, iters=args.iters)
     return FitResult(res.x, int(res.iters), res.history.objective,
@@ -148,6 +215,25 @@ def main(argv=None):
     ap.add_argument("--store-dir", default=None,
                     help="persist the block store here (memory-mapped "
                          "reopen) instead of holding it in host RAM")
+    ap.add_argument("--cluster", type=int, default=0, metavar="N",
+                    help="run the solve over N worker processes "
+                         "(coordinator/worker runtime, DESIGN.md §11)")
+    ap.add_argument("--cluster-compress", action="store_true",
+                    help="int8 error-feedback compression on every "
+                         "reduce hop (with --cluster)")
+    ap.add_argument("--cluster-staleness", type=int, default=0,
+                    metavar="S",
+                    help="bounded-staleness quorum aggregation: proceed "
+                         "on a quorum, tolerate reductions up to S "
+                         "iterations old (0 = strict synchronous)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="persist solver state here every "
+                         "--checkpoint-every iterations (streaming and "
+                         "cluster paths)")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest checkpoint in "
+                         "--checkpoint-dir")
     ap.add_argument("--density", type=float, default=None,
                     help="generate SPARSE data with this Bernoulli "
                          "density (0 < p <= 1); omit for dense")
@@ -199,7 +285,12 @@ def main(argv=None):
               f"({N*mi*n*4/2**30:.2f} GiB) in {t_data:.1f}s", flush=True)
 
     t0 = time.time()
-    if sparse_input and not args.streaming:
+    if args.cluster:
+        if sparse_input:
+            raise SystemExit("--cluster currently takes dense data "
+                             "(use --sparse-format dense)")
+        res = _fit_cluster(args, D, aux, mu)
+    elif sparse_input and not args.streaming:
         res = _fit_sparse(args, D, aux, mu)
     elif args.streaming:
         res = _fit_streaming(args, D, aux, mu)
@@ -207,7 +298,7 @@ def main(argv=None):
             and args.problem in ("logistic", "svm"):
         ndev = len(jax.devices())
         mesh = compat.make_mesh((ndev,), ("data",))
-        loss, rho, tau = _admm_params(args.problem)
+        loss, rho, tau, _ = _admm_params(args.problem)
         solver = DistributedUnwrappedADMM(
             loss=loss, tau=tau, rho=rho, data_axes=("data",))
         m = N * mi

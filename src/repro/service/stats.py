@@ -197,6 +197,25 @@ class SufficientStats:
                                              other.fingerprint),
             labeled_rows=self.labeled_rows + other.labeled_rows)
 
+    # -- wire transfer ------------------------------------------------------
+    def to_payload(self) -> dict:
+        """Picklable host representation for cross-process shipment (the
+        cluster runtime's setup reduction: workers build local stats,
+        the coordinator :meth:`merge`-s the payloads — fingerprints
+        included, so the merged fingerprint proves every store block was
+        folded exactly once)."""
+        return {"G": np.asarray(self.G), "c": np.asarray(self.c),
+                "rows": int(self.rows), "fingerprint": self.fingerprint,
+                "labeled_rows": int(self.labeled_rows)}
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "SufficientStats":
+        return cls(G=jnp.asarray(payload["G"]),
+                   c=jnp.asarray(payload["c"]),
+                   rows=int(payload["rows"]),
+                   fingerprint=payload["fingerprint"],
+                   labeled_rows=int(payload["labeled_rows"]))
+
     def factor(self, ridge: float = 0.0) -> Array:
         """Cholesky factor of (G + ridge I) — O(n^3), done once then cached."""
         return gram_lib.gram_factor(self.G, ridge=ridge)

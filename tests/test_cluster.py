@@ -1,0 +1,377 @@
+"""Multi-process cluster runtime (ISSUE 5 tentpole): shared int8-EF
+compression, tree-reduce contributions, membership/reassignment plans,
+store content verification, streaming + cluster checkpoint/resume, and
+real-process solves — including worker SIGKILL mid-solve with block
+reassignment — against the single-process reference."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.cluster import compress
+from repro.cluster.membership import DeadCluster, Membership, WorkerInfo
+from repro.cluster.reduction import (
+    Contribution,
+    TreeTopology,
+    decode,
+    encode,
+)
+from repro.core.oracles import logistic_objective
+from repro.core.prox import make_logistic
+from repro.core.unwrapped import UnwrappedADMM
+from repro.data.store import ShardedMatrixStore
+
+jax.config.update("jax_platform_name", "cpu")
+
+TAU = 0.1
+TINY = dict(eps_rel=1e-9, eps_abs=1e-12)   # fixed-iteration parity runs
+
+
+def _problem(m=1200, n=20, seed=0):
+    rng = np.random.default_rng(seed)
+    D = rng.standard_normal((m, n)).astype(np.float32)
+    aux = np.sign(rng.standard_normal((m,))).astype(np.float32)
+    return D, aux
+
+
+@pytest.fixture(scope="module")
+def ref40():
+    """Single-process reference: 40 fixed iterations on the module
+    problem (the cluster runs must land on the same x)."""
+    D, aux = _problem()
+    solver = UnwrappedADMM(loss=make_logistic(), tau=TAU)
+    res = solver.run(D[None], aux[None], iters=40)
+    return D, aux, np.asarray(res.x)
+
+
+# ---------------------------------------------------------------------------
+# compression (shared with core/distributed.py)
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    for n in (7, 32, 256, 700):
+        v = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        q, s = compress.quantize_int8(v)
+        r = compress.dequantize_int8(q, s, n)
+        # symmetric int8: error <= half a quantization step per group
+        assert float(jnp.max(jnp.abs(v - r))) <= float(jnp.max(s)) * 0.5001
+        assert q.dtype == jnp.int8
+
+
+def test_adaptive_group_never_inflates_payload():
+    # an n=32 vector must not be padded out to a 256-byte group
+    assert compress.wire_bytes(32, True) < compress.wire_bytes(32, False)
+    assert compress.wire_bytes(512, True) < 0.3 * compress.wire_bytes(
+        512, False)
+
+
+def test_error_feedback_unbiased_over_stream():
+    """Summing an EF-compressed stream tracks the true running sum to
+    one quantization step — the property that lets ADMM tolerate the
+    compressed reduction."""
+    rng = np.random.default_rng(1)
+    err = jnp.zeros((64,), jnp.float32)
+    true_sum = np.zeros(64)
+    deq_sum = np.zeros(64)
+    for _ in range(50):
+        v = jnp.asarray(rng.standard_normal(64), jnp.float32)
+        q, s, err = compress.ef_compress(v, err)
+        true_sum += np.asarray(v)
+        deq_sum += np.asarray(compress.dequantize_int8(q, s, 64))
+    # without EF the bias would grow ~ sqrt(iters) * step; with EF the
+    # gap stays bounded by the single residual still held in err
+    np.testing.assert_allclose(deq_sum, true_sum - np.asarray(err),
+                               rtol=0, atol=1e-4)
+
+
+def test_shard_map_path_reexports_shared_impl():
+    from repro.core import distributed
+    assert distributed._quantize_int8 is compress.quantize_int8
+    assert distributed._dequantize_int8 is compress.dequantize_int8
+
+
+# ---------------------------------------------------------------------------
+# reduction container + tree topology
+# ---------------------------------------------------------------------------
+
+def test_contribution_encode_decode_merge():
+    rng = np.random.default_rng(2)
+
+    def mk(wid, it=3):
+        return Contribution(
+            iteration=it, workers=(wid,), rows=100 + wid,
+            d=rng.standard_normal(24).astype(np.float32),
+            w=rng.standard_normal(24).astype(np.float32),
+            v=rng.standard_normal(24).astype(np.float32),
+            scalars={"r_sq": 1.0 * wid, "dx_sq": 2.0, "y_sq": 3.0,
+                     "obj": 4.0})
+
+    a, b = mk(0), mk(1)
+    m = a.merge(b)
+    assert m.workers == (0, 1) and m.rows == 201
+    np.testing.assert_allclose(m.d, a.d + b.d)
+    assert m.scalars["r_sq"] == 1.0
+
+    raw, _ = encode(a, compressed=False)
+    np.testing.assert_array_equal(decode(raw).d, a.d)
+    comp, err = encode(a, compressed=True)
+    got = decode(comp)
+    step = float(np.max(np.abs(a.d))) / 127
+    np.testing.assert_allclose(got.d, a.d, atol=0.51 * step + 1e-7)
+    assert err is not None                   # EF residual handed back
+    with pytest.raises(AssertionError):
+        a.merge(mk(2, it=4))                 # cross-iteration merge
+
+
+@pytest.mark.parametrize("nw,fanout", [(1, 2), (2, 2), (5, 2), (9, 3)])
+def test_tree_topology_structure(nw, fanout):
+    topo = TreeTopology.build(range(nw), fanout=fanout)
+    assert topo.parent(topo.root) is None
+    seen = set()
+    for wid in topo.order:
+        for c in topo.children(wid):
+            assert topo.parent(c) == wid
+            seen.add(c)
+        # every non-root reaches the root
+        hops, node = 0, wid
+        while topo.parent(node) is not None:
+            node = topo.parent(node)
+            hops += 1
+            assert hops <= nw
+        assert node == topo.root
+    assert seen == set(topo.order) - {topo.root}
+    assert topo.depth() >= 1
+
+
+def test_membership_assignment_and_reassignment():
+    mem = Membership()
+    for wid in range(3):
+        mem.add(WorkerInfo(wid=wid))
+    plan = mem.initial_assignment(10)
+    assert sorted(b for bs in plan.values() for b in bs) == list(range(10))
+    assert mem.coverage() == set(range(10))
+    orphans = mem.mark_dead(1)
+    assert orphans and mem.coverage() == set(range(10)) - orphans
+    plan2 = mem.reassignment_plan(sorted(orphans))
+    assert mem.coverage() == set(range(10))
+    assert set(plan2) <= {0, 2}
+    # balanced: nobody ends >1 block above the other survivor
+    loads = [len(mem.get(w).blocks) for w in (0, 2)]
+    assert abs(loads[0] - loads[1]) <= 1
+    mem.mark_dead(0)
+    orphans = mem.mark_dead(2)
+    with pytest.raises(DeadCluster):
+        mem.reassignment_plan(sorted(orphans))
+
+
+def test_store_verify_block_detects_tamper():
+    D, aux = _problem(400, 8)
+    store = ShardedMatrixStore.from_arrays(D, aux, block_rows=128)
+    assert all(store.verify_block(k) for k in range(store.nblocks))
+    store._blocks_D[1][0, 0] += 1.0          # corrupt one value
+    assert not store.verify_block(1)
+    assert store.verify_block(0)
+
+
+def test_stats_payload_roundtrip():
+    from repro.service.stats import SufficientStats
+    D, aux = _problem(300, 10)
+    st = SufficientStats.from_data(jnp.asarray(D), jnp.asarray(aux))
+    rt = SufficientStats.from_payload(st.to_payload())
+    np.testing.assert_array_equal(np.asarray(rt.G), np.asarray(st.G))
+    assert (rt.rows, rt.fingerprint, rt.labeled_rows) == (
+        st.rows, st.fingerprint, st.labeled_rows)
+    merged = st.merge(rt)
+    assert merged.rows == 2 * st.rows
+
+
+# ---------------------------------------------------------------------------
+# streaming checkpoint/resume (satellite): bitwise after a kill
+# ---------------------------------------------------------------------------
+
+def test_streaming_checkpoint_resume_bitwise(tmp_path):
+    D, aux = _problem(1500, 20, seed=1)
+    store = ShardedMatrixStore.from_arrays(D, aux, block_rows=400)
+    solver = UnwrappedADMM(loss=make_logistic(), tau=TAU)
+    ref = solver.solve_streaming(store, max_iters=30)
+    # "killed" at iteration 17 (last committed checkpoint: 15), resumed
+    solver.solve_streaming(store, max_iters=17,
+                           checkpoint_dir=str(tmp_path),
+                           checkpoint_every=5)
+    res = solver.solve_streaming(store, max_iters=30,
+                                 checkpoint_dir=str(tmp_path),
+                                 checkpoint_every=5, resume=True)
+    np.testing.assert_array_equal(np.asarray(res.x), np.asarray(ref.x))
+    assert int(res.iters) == int(ref.iters)
+    # resuming a COMPLETED solve must return the checkpointed x, not
+    # the zero init of a loop that never runs
+    res2 = solver.solve_streaming(store, max_iters=30,
+                                  checkpoint_dir=str(tmp_path),
+                                  checkpoint_every=5, resume=True)
+    np.testing.assert_array_equal(np.asarray(res2.x), np.asarray(ref.x))
+
+
+def test_streaming_checkpoint_refuses_foreign_store(tmp_path):
+    D, aux = _problem(600, 12, seed=2)
+    store = ShardedMatrixStore.from_arrays(D, aux, block_rows=200)
+    solver = UnwrappedADMM(loss=make_logistic(), tau=TAU)
+    solver.solve_streaming(store, max_iters=6,
+                           checkpoint_dir=str(tmp_path),
+                           checkpoint_every=3)
+    other = ShardedMatrixStore.from_arrays(D + 1.0, aux, block_rows=200)
+    with pytest.raises(ValueError, match="different store"):
+        solver.solve_streaming(other, max_iters=6,
+                               checkpoint_dir=str(tmp_path), resume=True)
+
+
+# ---------------------------------------------------------------------------
+# real multi-process solves
+# ---------------------------------------------------------------------------
+
+def _cluster_cfg(**kw):
+    from repro.cluster.coordinator import ClusterConfig
+    kw.setdefault("jax_platforms", "cpu")
+    kw.setdefault("heartbeat_timeout_s", 30)
+    kw.setdefault("register_timeout_s", 300)
+    return ClusterConfig(**kw)
+
+
+def test_config_rejects_staleness_plus_checkpointing():
+    from repro.cluster.coordinator import ClusterConfig
+    with pytest.raises(ValueError, match="strict synchronous"):
+        ClusterConfig(staleness=2, checkpoint_every=5)
+    with pytest.raises(ValueError, match="quorum"):
+        ClusterConfig(quorum=0.0)
+    ClusterConfig(staleness=2)           # staleness alone is fine
+
+
+def test_two_process_compressed_reduction_parity(ref40, tmp_path):
+    """Fast end-to-end gate: 2 REAL worker processes, int8-EF tree
+    reduction, must land on the single-process objective (the
+    established compressed-mode bar: x jitters ~1/127 pointwise, the
+    objective is quadratically flat at the optimum)."""
+    from repro.cluster.coordinator import cluster_solve
+    D, aux, ref_x = ref40
+    res = cluster_solve(D, aux, {"name": "logistic"}, tau=TAU,
+                        max_iters=40, config=_cluster_cfg(
+                            n_workers=2, compress=True),
+                        store_dir=str(tmp_path / "store"),
+                        block_rows=300, **TINY)
+    assert res.iters == 40
+    ref_obj = logistic_objective(D, aux, ref_x)
+    obj = logistic_objective(D, aux, np.asarray(res.x))
+    assert abs(obj - ref_obj) / abs(ref_obj) < 1e-3
+    # and the wire really carried int8: fewer reduction bytes per iter
+    # than the uncompressed 3 f32 n-vectors would need
+    per_iter = res.telemetry["reduction_rx_bytes_per_iter"]
+    assert per_iter < 2 * 3 * 4 * D.shape[1]
+
+
+@pytest.mark.slow
+def test_four_worker_solve_matches_single_process(ref40, tmp_path):
+    from repro.cluster.coordinator import cluster_solve
+    D, aux, ref_x = ref40
+    res = cluster_solve(D, aux, {"name": "logistic"}, tau=TAU,
+                        max_iters=40, config=_cluster_cfg(n_workers=4),
+                        store_dir=str(tmp_path / "store"),
+                        block_rows=150, **TINY)
+    rel = np.linalg.norm(res.x - ref_x) / np.linalg.norm(ref_x)
+    assert rel <= 1e-5, rel
+    t = res.telemetry
+    assert t["workers_alive"] == 4 and not t["deaths"]
+
+
+@pytest.mark.slow
+def test_worker_sigkill_reassignment_same_answer(ref40, tmp_path):
+    """The acceptance fault path: SIGKILL one of 4 workers mid-solve;
+    its blocks are reassigned (fingerprint-verified), the new owner
+    replays the x-history, and the solve converges to the same x."""
+    from repro.cluster.coordinator import cluster_solve
+    D, aux, ref_x = ref40
+    res = cluster_solve(
+        D, aux, {"name": "logistic"}, tau=TAU, max_iters=40,
+        config=_cluster_cfg(n_workers=4,
+                            worker_overrides={2: {"die_at_iter": 13}}),
+        store_dir=str(tmp_path / "store"), block_rows=150, **TINY)
+    rel = np.linalg.norm(res.x - ref_x) / np.linalg.norm(ref_x)
+    assert rel <= 1e-5, rel
+    t = res.telemetry
+    assert t["deaths"] == [2]
+    assert t["blocks_reassigned"] >= 1
+    assert t["iteration_retries"] >= 1
+    assert t["workers_alive"] == 3
+
+
+@pytest.mark.slow
+def test_cluster_lasso_stats_path(tmp_path):
+    """Lasso over the cluster is the paper-§4 path: one distributed
+    stats reduction (fingerprint-complete), then a local FASTA solve
+    identical to the single-process cached-Gram solve."""
+    from repro.cluster.coordinator import cluster_stats
+    from repro.core.fasta import transpose_reduction_lasso
+    from repro.service.stats import SufficientStats
+    rng = np.random.default_rng(3)
+    m, n = 1600, 24
+    D = rng.standard_normal((m, n)).astype(np.float32)
+    b = (D @ rng.standard_normal(n).astype(np.float32)
+         + 0.1 * rng.standard_normal(m).astype(np.float32))
+    store_dir = str(tmp_path / "store")
+    st, _ = cluster_stats(D, b, store_dir=store_dir,
+                          config=_cluster_cfg(n_workers=4),
+                          block_rows=200)
+    store = ShardedMatrixStore.open(store_dir)
+    ref_st = SufficientStats.from_store(store)
+    assert st.fingerprint == store.fingerprint == ref_st.fingerprint
+    assert st.rows == m and st.fully_labeled
+    fr = transpose_reduction_lasso(st.G, st.c, mu=5.0, iters=400)
+    fr_ref = transpose_reduction_lasso(ref_st.G, ref_st.c, mu=5.0,
+                                       iters=400)
+    rel = (np.linalg.norm(np.asarray(fr.x) - np.asarray(fr_ref.x))
+           / max(float(np.linalg.norm(np.asarray(fr_ref.x))), 1e-30))
+    assert rel <= 1e-5, rel
+
+
+@pytest.mark.slow
+def test_cluster_checkpoint_resume(ref40, tmp_path):
+    from repro.cluster.coordinator import cluster_solve
+    D, aux, ref_x = ref40
+    store_dir = str(tmp_path / "store")
+    ckpt = str(tmp_path / "ckpt")
+    common = dict(tau=TAU, store_dir=store_dir, block_rows=300, **TINY)
+    # "killed" after 12 iterations (checkpoints every 5 -> step 10)
+    cluster_solve(D, aux, {"name": "logistic"}, max_iters=12,
+                  config=_cluster_cfg(n_workers=2, checkpoint_dir=ckpt,
+                                      checkpoint_every=5), **common)
+    res = cluster_solve(D, aux, {"name": "logistic"}, max_iters=40,
+                        config=_cluster_cfg(n_workers=2,
+                                            checkpoint_dir=ckpt,
+                                            checkpoint_every=5,
+                                            resume=True), **common)
+    rel = np.linalg.norm(res.x - ref_x) / np.linalg.norm(ref_x)
+    assert rel <= 1e-5, rel
+    # resuming the COMPLETED solve (latest checkpoint at 40): zero
+    # iterations run, the checkpointed x comes back verbatim
+    res2 = cluster_solve(D, aux, {"name": "logistic"}, max_iters=40,
+                         config=_cluster_cfg(n_workers=2,
+                                             checkpoint_dir=ckpt,
+                                             checkpoint_every=5,
+                                             resume=True), **common)
+    np.testing.assert_array_equal(res2.x, res.x)
+
+
+@pytest.mark.slow
+def test_bounded_staleness_straggler(ref40, tmp_path):
+    """Quorum mode with a deliberate straggler: the coordinator
+    proceeds without it (within the staleness bound) and still reaches
+    the single-process objective."""
+    from repro.cluster.coordinator import cluster_solve
+    D, aux, ref_x = ref40
+    res = cluster_solve(
+        D, aux, {"name": "logistic"}, tau=TAU, max_iters=60,
+        config=_cluster_cfg(n_workers=2, staleness=3, quorum=0.5,
+                            worker_overrides={1: {"slow_ms": 40}}),
+        store_dir=str(tmp_path / "store"), block_rows=300, **TINY)
+    ref_obj = logistic_objective(D, aux, ref_x)
+    obj = logistic_objective(D, aux, np.asarray(res.x))
+    assert abs(obj - ref_obj) / abs(ref_obj) < 1e-3
