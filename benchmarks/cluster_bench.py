@@ -122,6 +122,10 @@ def run(rows, quick: bool = False):
             "speedup_vs_1_worker": (round(base_wall / wall, 3)
                                     if base_wall else None),
             "rel_x_err_vs_single_process": rel,
+            # per-worker timing breakdown (iters, wall per iter, replay /
+            # retry counts) folded by the coordinator from heartbeat +
+            # bye metric snapshots
+            "per_worker": res.telemetry.get("per_worker"),
             "payload_bytes_per_nvec": compress_lib.wire_bytes(n, False),
             "consensus_scheme_bytes_per_iter": consensus_bytes,
             **wire,
@@ -145,6 +149,7 @@ def run(rows, quick: bool = False):
         "compress": True,
         "solve_wall_s": res_c.telemetry["wall_s"],
         "rel_obj_gap_vs_single_process": gap_c,
+        "per_worker": res_c.telemetry.get("per_worker"),
         "payload_bytes_per_nvec": compress_lib.wire_bytes(n, True),
         "payload_bytes_per_nvec_uncompressed":
             compress_lib.wire_bytes(n, False),
@@ -182,8 +187,10 @@ def run(rows, quick: bool = False):
         shutil.rmtree(store_path, ignore_errors=True)
 
     if JSON_PATH:
+        from benchmarks.run import host_meta
         payload = {
             "generated_by": "benchmarks/cluster_bench.py",
+            "host_meta": host_meta(),
             "host_cpus": cpus,
             "quick": quick,
             "problem": {"kind": "logistic", "m": m, "n": n,

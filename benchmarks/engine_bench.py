@@ -121,8 +121,10 @@ def run(rows, quick: bool = False):
                        if r["m"] == 1 << 17 and r["n"] == 512
                        and r["backend"] == "chunked"
                        and r["residency"] is None), None)
+        from benchmarks.run import host_meta
         payload = {
             "generated_by": "benchmarks/engine_bench.py",
+            "host_meta": host_meta(),
             "device": jax.devices()[0].device_kind,
             "backend_platform": jax.default_backend(),
             "quick": quick,

@@ -14,6 +14,40 @@ import argparse
 import sys
 import time
 
+
+def host_meta() -> dict:
+    """Host/provenance block stamped into every BENCH_*.json payload —
+    one shared definition so a result can always be traced back to the
+    machine, software stack, and commit that produced it. Imports stay
+    lazy: bench modules ``from benchmarks.run import host_meta`` without
+    pulling jax at import time.
+    """
+    import os
+    import platform
+    import subprocess
+    meta: dict = {
+        "cpu_count": os.cpu_count(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+    }
+    try:
+        import jax
+        import jaxlib
+        meta["jax"] = jax.__version__
+        meta["jaxlib"] = jaxlib.__version__
+        meta["jax_backend"] = jax.default_backend()
+    except Exception:
+        meta["jax"] = meta["jaxlib"] = meta["jax_backend"] = None
+    try:
+        p = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)), timeout=5)
+        meta["git_sha"] = p.stdout.strip() if p.returncode == 0 else None
+    except Exception:
+        meta["git_sha"] = None
+    return meta
+
+
 MODULES = {
     "fig1": "benchmarks.fig1_scaling",        # Fig 1 a/b/c scaling sweeps
     "fig2": "benchmarks.fig2_convergence",    # Fig 2 a/b/c curves

@@ -174,8 +174,10 @@ def run(rows, quick: bool = False):
         worst_x = max((r["x_rel_err"] for r in sparse_cells),
                       default=None)
         full_point = not quick
+        from benchmarks.run import host_meta
         payload = {
             "generated_by": "benchmarks/sparse_bench.py",
+            "host_meta": host_meta(),
             "device": jax.devices()[0].device_kind,
             "backend_platform": jax.default_backend(),
             "quick": quick,

@@ -304,8 +304,10 @@ def run(rows, quick: bool = False):
     if JSON_PATH:
         target = next((r for r in records
                        if r["m"] == 1 << 18 and r["n"] == 512), None)
+        from benchmarks.run import host_meta
         payload = {
             "generated_by": "benchmarks/streaming_bench.py",
+            "host_meta": host_meta(),
             "device": jax.devices()[0].device_kind,
             "backend_platform": jax.default_backend(),
             "host_cpus": os.cpu_count(),

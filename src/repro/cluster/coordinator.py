@@ -58,6 +58,13 @@ from repro.cluster.transport import (
     Listener,
 )
 from repro.cluster.worker import make_loss, worker_entry
+from repro.obs import Observability
+from repro.obs.metrics import (
+    merged_histogram,
+    snapshot_counters,
+    snapshot_histograms,
+    summarize_histogram,
+)
 
 REDUCTION_TAGS = ("contrib",)            # what counts as reduction wire
 BROADCAST_TAGS = ("iter",)
@@ -87,6 +94,9 @@ class ClusterConfig:
     backend: str = "auto"
     limit_threads: bool = True
     jax_platforms: Optional[str] = None
+    obs_dir: Optional[str] = None        # observability run directory:
+                                         # trace.json / metrics.json /
+                                         # telemetry.jsonl (DESIGN.md §12)
     worker_overrides: Dict[int, dict] = dataclasses.field(
         default_factory=dict)
 
@@ -128,7 +138,12 @@ class ClusterCoordinator:
         self.tau, self.rho = float(tau), float(rho)
         self.eps_rel, self.eps_abs = float(eps_rel), float(eps_abs)
         self.members = Membership()
-        self.counter = ByteCounter()
+        # the coordinator's wire accounting lives in the obs registry
+        # (ByteCounter is registry-backed), so metrics.json and the
+        # legacy telemetry counters come from one source of truth
+        self.obs = Observability(dir=self.cfg.obs_dir,
+                                 process_name="coordinator")
+        self.counter = ByteCounter(registry=self.obs.registry)
         self.listener = Listener()
         self._events: "queue.Queue" = queue.Queue()
         self._epoch = 0
@@ -160,7 +175,8 @@ class ClusterCoordinator:
                "staleness": self.cfg.staleness > 0,
                "heartbeat_interval": self.cfg.heartbeat_interval_s,
                "limit_threads": self.cfg.limit_threads,
-               "jax_platforms": self.cfg.jax_platforms}
+               "jax_platforms": self.cfg.jax_platforms,
+               "obs": bool(self.cfg.obs_dir)}
         cfg.update(self.cfg.worker_overrides.get(wid, {}))
         return cfg
 
@@ -257,6 +273,23 @@ class ClusterCoordinator:
                 waiting.discard(wid)
             elif msg.get("type") == "bye":
                 worker_counters.merge(msg["counters"])
+                w = self.members.workers.get(wid)
+                if w is not None and msg.get("metrics") is not None:
+                    w.metrics = msg["metrics"]
+                if self.obs.enabled:
+                    # fold the worker's registry (relabelled so series
+                    # stay per-worker) and its trace events, so the run
+                    # directory renders the whole cluster as ONE
+                    # metrics.json + one Perfetto timeline
+                    if msg.get("metrics") is not None:
+                        self.obs.registry.merge(
+                            msg["metrics"],
+                            extra_labels={"worker": str(wid)})
+                    if msg.get("trace"):
+                        self.obs.tracer.add_events(
+                            msg["trace"],
+                            process_name=f"worker-{wid}",
+                            pid=msg.get("pid"))
                 waiting.discard(wid)
         for w in self.members.workers.values():
             if w.process is not None:
@@ -269,6 +302,7 @@ class ClusterCoordinator:
         self._started = False
         self._shutdown_result = {"coordinator": self.counter.snapshot(),
                                  "workers": worker_counters.snapshot()}
+        self.obs.finish()
         return self._shutdown_result
 
     # -- plumbing -----------------------------------------------------------
@@ -373,6 +407,9 @@ class ClusterCoordinator:
         t = msg.get("type")
         if t == "heartbeat":
             self.members.beat(wid)
+            w = self.members.workers.get(wid)
+            if w is not None and msg.get("metrics") is not None:
+                w.metrics = msg["metrics"]
             return None
         if t == "error":
             raise ClusterError(
@@ -463,8 +500,10 @@ class ClusterCoordinator:
                 "to continue a solve across runs)")
         if not self._started:
             self.start()
-        st = self.stats()
-        L = gram_lib.gram_factor(st.G, ridge=self.rho / self.tau)
+        with self.obs.span("stats_reduce"):
+            st = self.stats()
+        with self.obs.span("gram_factor"):
+            L = gram_lib.gram_factor(st.G, ridge=self.rho / self.tau)
         m, n = self.store.m, self.store.n
         pad_obj = self._pad_objective()
 
@@ -484,15 +523,19 @@ class ClusterCoordinator:
         converged = False
         k = k0
         t0 = time.monotonic()
+        prev_wire = self.counter.snapshot() if self.obs.enabled else None
         while k < max_iters and not converged:
             k += 1
-            x = np.asarray(gram_lib.gram_solve(L, jnp.asarray(d)),
-                           np.float32)
+            t_it = time.perf_counter()
+            with self.obs.span("x_solve", k=k):
+                x = np.asarray(gram_lib.gram_solve(L, jnp.asarray(d)),
+                               np.float32)
             assert len(self._x_hist) == k - 1 - self._base_iter
             self._x_hist.append(x)
             self._broadcast_iter(k, x)
-            total = (self._collect_stale(k) if self.cfg.staleness > 0
-                     else self._collect_strict(k, x))
+            with self.obs.span("collect", k=k):
+                total = (self._collect_stale(k) if self.cfg.staleness > 0
+                         else self._collect_strict(k, x))
             d = total.d.astype(np.float32)
             r = float(np.sqrt(total.scalars["r_sq"]))
             s = self.tau * float(np.linalg.norm(total.w))
@@ -501,14 +544,29 @@ class ClusterCoordinator:
                 np.sqrt(total.scalars["y_sq"]))
             eps_dual = np.sqrt(n) * self.eps_abs + (
                 self.eps_rel * self.tau * float(np.linalg.norm(total.v)))
+            obj = total.scalars["obj"] - pad_obj
+            if self.rho:
+                obj += 0.5 * self.rho * float(np.sum(x * x))
             if record:
-                obj = total.scalars["obj"] - pad_obj
-                if self.rho:
-                    obj += 0.5 * self.rho * float(np.sum(x * x))
                 objs.append(obj)
                 rs.append(r)
                 ss.append(s)
             converged = bool(r <= eps_pri and s <= eps_dual)
+            if self.obs.enabled:
+                dt = time.perf_counter() - t_it
+                self.obs.observe("coordinator.iter_s", dt)
+                wire = self.counter.snapshot()
+                tx = {t: v - prev_wire["sent_bytes"].get(t, 0)
+                      for t, v in wire["sent_bytes"].items()}
+                rx = {t: v - prev_wire["received_bytes"].get(t, 0)
+                      for t, v in wire["received_bytes"].items()}
+                prev_wire = wire
+                self.obs.record(
+                    iter=k, objective=obj, primal_res=r, dual_res=s,
+                    eps_pri=float(eps_pri), eps_dual=float(eps_dual),
+                    tau=self.tau, rho=self.rho, iter_s=round(dt, 6),
+                    tx_bytes={t: v for t, v in tx.items() if v},
+                    rx_bytes={t: v for t, v in rx.items() if v})
             if (manager is not None and self.cfg.checkpoint_every
                     and k % self.cfg.checkpoint_every == 0):
                 self._checkpoint(manager, k, x, d)
@@ -693,6 +751,32 @@ class ClusterCoordinator:
         from repro.engine.streaming import store_pad_objective
         return store_pad_objective(self.store, self.loss)
 
+    def _per_worker_telemetry(self) -> dict:
+        """Per-worker timing breakdown from the newest registry snapshot
+        each worker shipped (heartbeat or bye): iteration counts and
+        wall time, block-step latency percentiles, replay/retry work."""
+        out: Dict[str, dict] = {}
+        for w in self.members.workers.values():
+            snap = w.metrics
+            if snap is None:
+                continue
+            iter_h = merged_histogram(
+                snapshot_histograms(snap, "worker.iter_s"))
+            steps = merged_histogram(
+                snapshot_histograms(snap, "worker.block_step_s"))
+            out[str(w.wid)] = {
+                "alive": w.alive,
+                "iters": int(snapshot_counters(snap, "worker.iters")),
+                "iter_wall_s": round(iter_h.sum, 6),
+                "block_step_ms": summarize_histogram(
+                    steps.to_snapshot(), scale=1e3),
+                "replayed_steps": int(
+                    snapshot_counters(snap, "worker.replayed_steps")),
+                "retry_cached_answers": int(snapshot_counters(
+                    snap, "worker.retry_cached_answers")),
+            }
+        return out
+
     def _telemetry(self, iters: int, wall_s: float) -> dict:
         n = self.store.n
         coord = self.counter.snapshot()
@@ -720,6 +804,7 @@ class ClusterCoordinator:
             "payload_bytes_per_nvec_uncompressed": compress.wire_bytes(
                 n, False),
             "counters": coord,
+            "per_worker": self._per_worker_telemetry(),
         }
 
 
@@ -769,6 +854,10 @@ def cluster_solve(D, aux, loss: dict, tau: float, rho: float = 0.0,
                                 config=config) as coord:
             res = coord.solve(max_iters=max_iters, record=record)
             res.telemetry["shutdown_counters"] = coord.shutdown()
+            # bye messages carry each worker's FINAL registry snapshot;
+            # refresh the breakdown solve() built from (periodic, hence
+            # lagging) heartbeats
+            res.telemetry["per_worker"] = coord._per_worker_telemetry()
         return res
     finally:
         if created:

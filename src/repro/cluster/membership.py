@@ -34,6 +34,8 @@ class WorkerInfo:
     alive: bool = True
     last_iteration: int = 0              # newest contribution seen from it
     process: object = None               # multiprocessing.Process handle
+    metrics: Optional[dict] = None       # newest registry snapshot
+                                         # (heartbeat / bye payload)
 
 
 class DeadCluster(RuntimeError):

@@ -25,9 +25,19 @@ import pickle
 import socket
 import struct
 import threading
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
+
+from repro.obs.metrics import MetricsRegistry
 
 _LEN = struct.Struct(">Q")
+
+# registry series the counter writes: transport.{tx,rx}_{bytes,msgs}
+# labelled by message type — the wire-accounting schema every other
+# registry consumer (telemetry deltas, obs_report) reads back.
+_SECTIONS = (("sent_bytes", "transport.tx_bytes"),
+             ("sent_msgs", "transport.tx_msgs"),
+             ("received_bytes", "transport.rx_bytes"),
+             ("received_msgs", "transport.rx_msgs"))
 
 
 class ConnectionClosed(Exception):
@@ -35,44 +45,38 @@ class ConnectionClosed(Exception):
 
 
 class ByteCounter:
-    """Thread-safe per-message-type frame byte/count totals."""
+    """Per-message-type frame byte/count totals, backed by a
+    :class:`~repro.obs.metrics.MetricsRegistry` (DESIGN.md §12): the
+    transport's accounting is ordinary labelled counters, so a worker's
+    wire bytes ship, merge, and report through the same snapshot schema
+    as every other metric. The legacy dict shape of :meth:`snapshot` /
+    :meth:`merge` (sent_bytes/sent_msgs/received_*) is preserved — it is
+    the cluster telemetry and BENCH_cluster.json surface."""
 
-    def __init__(self):
-        self._lock = threading.Lock()
-        self.sent: Dict[str, int] = {}
-        self.sent_msgs: Dict[str, int] = {}
-        self.received: Dict[str, int] = {}
-        self.received_msgs: Dict[str, int] = {}
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        self.registry = registry or MetricsRegistry()
 
     def add(self, direction: str, tag: str, nbytes: int):
-        with self._lock:
-            b, m = ((self.sent, self.sent_msgs) if direction == "tx"
-                    else (self.received, self.received_msgs))
-            b[tag] = b.get(tag, 0) + nbytes
-            m[tag] = m.get(tag, 0) + 1
+        d = "tx" if direction == "tx" else "rx"
+        self.registry.inc(f"transport.{d}_bytes", nbytes, type=tag)
+        self.registry.inc(f"transport.{d}_msgs", 1, type=tag)
 
     def snapshot(self) -> dict:
-        with self._lock:
-            return {"sent_bytes": dict(self.sent),
-                    "sent_msgs": dict(self.sent_msgs),
-                    "received_bytes": dict(self.received),
-                    "received_msgs": dict(self.received_msgs)}
+        return {key: {t: int(v)
+                      for t, v in self.registry.labeled(name, "type").items()}
+                for key, name in _SECTIONS}
 
     def merge(self, other: dict):
         """Fold another counter's :meth:`snapshot` into this one (the
         coordinator aggregates worker-reported counters at shutdown)."""
-        with self._lock:
-            for mine, key in ((self.sent, "sent_bytes"),
-                              (self.sent_msgs, "sent_msgs"),
-                              (self.received, "received_bytes"),
-                              (self.received_msgs, "received_msgs")):
-                for tag, v in other.get(key, {}).items():
-                    mine[tag] = mine.get(tag, 0) + v
+        for key, name in _SECTIONS:
+            for tag, v in other.get(key, {}).items():
+                self.registry.inc(name, v, type=tag)
 
     def total(self, direction: str = "tx") -> int:
-        with self._lock:
-            src = self.sent if direction == "tx" else self.received
-            return sum(src.values())
+        d = "tx" if direction == "tx" else "rx"
+        return int(sum(
+            self.registry.labeled(f"transport.{d}_bytes", "type").values()))
 
 
 class Connection:

@@ -48,6 +48,8 @@ from repro.cluster.transport import (
     Listener,
     connect,
 )
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
 
 _HEARTBEAT_TYPES = ("heartbeat",)
 
@@ -97,7 +99,14 @@ class WorkerRuntime:
 
         self.wid = wid
         self.config = config
-        self.counter = ByteCounter()
+        # one registry backs everything the worker measures: wire bytes
+        # (via ByteCounter), block-step / iteration latency histograms,
+        # replay and retry counters. Heartbeats ship its snapshot; the
+        # coordinator folds it per-worker (DESIGN.md §12).
+        self.metrics = MetricsRegistry()
+        self.counter = ByteCounter(registry=self.metrics)
+        self.tracer = Tracer(enabled=bool(config.get("obs")),
+                             process_name=f"worker-{wid}")
         self.store = ShardedMatrixStore.open(config["store_path"])
         self.loss = make_loss(config["loss"])
         self.tau = float(config.get("tau", 1.0))
@@ -161,7 +170,8 @@ class WorkerRuntime:
         while not self._stop.is_set():
             try:
                 self.coord.send("heartbeat", wid=self.wid,
-                                t=time.monotonic())
+                                t=time.monotonic(),
+                                metrics=self.metrics.snapshot())
             except ConnectionClosed:
                 return
             self._stop.wait(interval)
@@ -193,17 +203,21 @@ class WorkerRuntime:
         from repro.engine.streaming import _zero_sweep
 
         st = self.blocks[bid]
-        D_b, a_b = self.store.block(bid, padded=True)
-        step = self._step if want_dual else self._step_lean
-        acc = _zero_sweep(self.store.n, jax.numpy.float32)
-        y_new, lam_new, acc = step(
-            jax.device_put(np.ascontiguousarray(D_b)),
-            jax.device_put(a_b) if a_b is not None else None,
-            jax.device_put(st["y"]), jax.device_put(st["lam"]),
-            x_dev, acc)
-        st["y"] = np.asarray(y_new)
-        st["lam"] = np.asarray(lam_new)
-        st["iter"] = k
+        t0 = time.perf_counter()
+        with self.tracer.span("block_step", block=bid, k=k):
+            D_b, a_b = self.store.block(bid, padded=True)
+            step = self._step if want_dual else self._step_lean
+            acc = _zero_sweep(self.store.n, jax.numpy.float32)
+            y_new, lam_new, acc = step(
+                jax.device_put(np.ascontiguousarray(D_b)),
+                jax.device_put(a_b) if a_b is not None else None,
+                jax.device_put(st["y"]), jax.device_put(st["lam"]),
+                x_dev, acc)
+            st["y"] = np.asarray(y_new)
+            st["lam"] = np.asarray(lam_new)
+            st["iter"] = k
+        self.metrics.observe("worker.block_step_s",
+                             time.perf_counter() - t0)
         if want_dual:
             sl = self.store.block_slice(bid)
             st["contrib"] = Contribution(
@@ -221,11 +235,15 @@ class WorkerRuntime:
         over just these blocks, once per historical x."""
         import jax
         import numpy as np
-        for x in np.asarray(x_history, np.float32):
-            x_dev = jax.device_put(x)
-            for bid in bids:
-                self._apply_block(bid, x_dev, self.blocks[bid]["iter"] + 1,
-                                  want_dual=False)
+        with self.tracer.span("replay", blocks=len(bids),
+                              steps=len(x_history)):
+            for x in np.asarray(x_history, np.float32):
+                x_dev = jax.device_put(x)
+                for bid in bids:
+                    self._apply_block(bid, x_dev,
+                                      self.blocks[bid]["iter"] + 1,
+                                      want_dual=False)
+                self.metrics.inc("worker.replayed_steps", len(bids))
 
     # -- message handlers ---------------------------------------------------
     def _on_assign(self, msg):
@@ -288,16 +306,24 @@ class WorkerRuntime:
         slow = float(self.config.get("slow_ms", 0.0))
         if slow:
             time.sleep(slow / 1e3)
+        t_iter = time.perf_counter()
         x_dev = jax.device_put(np.asarray(msg["x"], np.float32))
         own = Contribution.zero(k, self.store.n)
-        for bid in sorted(self.blocks):
-            st = self.blocks[bid]
-            if st["iter"] < k:
-                self._apply_block(bid, x_dev, k, want_dual=True)
-            c = st["contrib"]
-            assert c is not None and c.iteration == k, \
-                f"block {bid} at iter {st['iter']}, contrib for {k}?"
-            own = own.merge(c)
+        with self.tracer.span("worker_iter", k=k):
+            for bid in sorted(self.blocks):
+                st = self.blocks[bid]
+                if st["iter"] < k:
+                    self._apply_block(bid, x_dev, k, want_dual=True)
+                else:
+                    # retried broadcast: answered from the cached
+                    # contribution, no prox re-applied
+                    self.metrics.inc("worker.retry_cached_answers")
+                c = st["contrib"]
+                assert c is not None and c.iteration == k, \
+                    f"block {bid} at iter {st['iter']}, contrib for {k}?"
+                own = own.merge(c)
+        self.metrics.inc("worker.iters")
+        self.metrics.observe("worker.iter_s", time.perf_counter() - t_iter)
         own = Contribution(iteration=k, workers=(self.wid,),
                            rows=own.rows, d=own.d, w=own.w, v=own.v,
                            scalars=own.scalars)
@@ -389,9 +415,15 @@ class WorkerRuntime:
             mtype = msg.get("type")
             if mtype == "stop":
                 # every link (coordinator, peer server, parent hops)
-                # shares self.counter, so one snapshot covers them all
+                # shares self.counter, so one snapshot covers them all;
+                # metrics + trace events ride along so the coordinator
+                # can fold a final per-worker registry and render the
+                # cluster solve as one timeline
                 self.coord.send("bye", wid=self.wid,
-                                counters=self.counter.snapshot())
+                                counters=self.counter.snapshot(),
+                                metrics=self.metrics.snapshot(),
+                                trace=self.tracer.events(),
+                                pid=os.getpid())
                 break
             if mtype in _HEARTBEAT_TYPES:
                 continue

@@ -115,7 +115,8 @@ class DistributedUnwrappedADMM:
         x, _ = jax.lax.scan(body, x_warm, None, length=self.inner_iters)
         return x
 
-    def build(self, mesh: Mesh, m_global: int, n: int, iters: int):
+    def build(self, mesh: Mesh, m_global: int, n: int, iters: int,
+              obs=None):
         """Returns a jitted ``solve(D_global, aux_global) -> (x, history)``.
 
         D_global: (m_global, n) sharded P(data_axes, None);
@@ -125,6 +126,13 @@ class DistributedUnwrappedADMM:
         zero-padded to a shard multiple inside the returned function
         (pass HOST arrays in that case — pre-sharding an uneven array
         with ``shard_rows`` would fail before the pad can happen).
+
+        ``obs`` (:class:`repro.obs.Observability`) wraps the RETURNED
+        function, never the shard_map body: one span around the whole
+        solve, then the per-iteration (objective, primal-res) history is
+        streamed to the telemetry sink after the device work completes.
+        With ``obs`` disabled the raw jitted function comes back
+        untouched — zero overhead.
         """
         axes = self.data_axes
         nshards = 1
@@ -214,21 +222,39 @@ class DistributedUnwrappedADMM:
             check_vma=False,
         )
         if pad == 0:
-            return jax.jit(fn)
+            solve_fn = jax.jit(fn)
+        else:
+            # Pad-row objective: iterates of zero rows stay at zero, so
+            # their per-iteration contribution is the CONSTANT f(0, aux=0).
+            pad_obj = float(self.loss.value(jnp.zeros((pad,)),
+                                            jnp.zeros((pad,))))
 
-        # Pad-row objective: iterates of zero rows stay at zero, so their
-        # per-iteration contribution is the CONSTANT f(0, aux=0).
-        pad_obj = float(self.loss.value(jnp.zeros((pad,)),
-                                        jnp.zeros((pad,))))
+            @jax.jit
+            def padded(D_global: Array, aux_global: Array):
+                Dp = jnp.pad(D_global, ((0, pad), (0, 0)))
+                ap = jnp.pad(aux_global, (0, pad))
+                x, objs, rs = fn(Dp, ap)
+                return x, objs - pad_obj, rs
 
-        @jax.jit
-        def padded(D_global: Array, aux_global: Array):
-            Dp = jnp.pad(D_global, ((0, pad), (0, 0)))
-            ap = jnp.pad(aux_global, (0, pad))
-            x, objs, rs = fn(Dp, ap)
-            return x, objs - pad_obj, rs
+            solve_fn = padded
 
-        return padded
+        if obs is None or not obs.enabled:
+            return solve_fn
+
+        def observed(D_global: Array, aux_global: Array):
+            with obs.span("distributed_solve", iters=iters,
+                          shards=nshards):
+                x, objs, rs = solve_fn(D_global, aux_global)
+                jax.block_until_ready(x)
+            obs.inc("distributed.solves")
+            for i, (o, r) in enumerate(zip(jnp.asarray(objs),
+                                           jnp.asarray(rs))):
+                obs.record(iter=i + 1, objective=float(o),
+                           primal_res=float(r), tau=self.tau,
+                           rho=self.rho, shards=nshards)
+            return x, objs, rs
+
+        return observed
 
 
 def shard_rows(mesh: Mesh, arr: Array, axes: Sequence[str]) -> Array:

@@ -159,12 +159,29 @@ class UnwrappedADMM:
         iters: int,
         x0: Optional[Array] = None,
         record: bool = True,
+        obs=None,
     ) -> ADMMResult:
         """``D`` is node-stacked dense (N, m_i, n) or a flat
-        :class:`BlockCSR` (sparse solves return y/lam as (1, m))."""
-        if isinstance(D, BlockCSR):
-            return self._run_sparse(D, aux, iters, x0=x0, record=record)
-        return self._run_dense(D, aux, iters, x0, record)
+        :class:`BlockCSR` (sparse solves return y/lam as (1, m)).
+
+        ``obs`` (:class:`repro.obs.Observability`) is handled entirely
+        OUTSIDE the jitted driver: one span around the dispatch, then the
+        recorded :class:`ADMMHistory` is streamed to the telemetry sink
+        post-hoc — the scan body never sees a host callback."""
+        if obs is None or not obs.enabled:
+            if isinstance(D, BlockCSR):
+                return self._run_sparse(D, aux, iters, x0=x0, record=record)
+            return self._run_dense(D, aux, iters, x0, record)
+        with obs.span("admm_run", iters=iters, sparse=isinstance(D, BlockCSR)):
+            if isinstance(D, BlockCSR):
+                res = self._run_sparse(D, aux, iters, x0=x0, record=record)
+            else:
+                res = self._run_dense(D, aux, iters, x0, record)
+            jax.block_until_ready(res.x)
+        obs.inc("admm.runs")
+        if res.history is not None:
+            obs.write_history(res.history, tau=self.tau, rho=self.rho)
+        return res
 
     @partial(jax.jit, static_argnames=("self", "iters", "record"))
     def _run_dense(
@@ -225,13 +242,26 @@ class UnwrappedADMM:
     # -- early-stopping driver (lax.while_loop), deployment path --
     def solve(
         self, D, aux: Optional[Array], max_iters: int = 500,
-        x0: Optional[Array] = None,
+        x0: Optional[Array] = None, obs=None,
     ) -> ADMMResult:
         """``D`` is node-stacked dense (N, m_i, n) or a flat
-        :class:`BlockCSR`."""
-        if isinstance(D, BlockCSR):
-            return self._solve_sparse(D, aux, max_iters, x0=x0)
-        return self._solve_dense(D, aux, max_iters, x0)
+        :class:`BlockCSR`. ``obs`` wraps the jitted dispatch in one span
+        (the while-loop driver records no history to stream)."""
+        if obs is None or not obs.enabled:
+            if isinstance(D, BlockCSR):
+                return self._solve_sparse(D, aux, max_iters, x0=x0)
+            return self._solve_dense(D, aux, max_iters, x0)
+        with obs.span("admm_solve", max_iters=max_iters,
+                      sparse=isinstance(D, BlockCSR)):
+            if isinstance(D, BlockCSR):
+                res = self._solve_sparse(D, aux, max_iters, x0=x0)
+            else:
+                res = self._solve_dense(D, aux, max_iters, x0)
+            jax.block_until_ready(res.x)
+        obs.inc("admm.solves")
+        obs.record(event="solve_done", iters=int(res.iters),
+                   tau=self.tau, rho=self.rho)
+        return res
 
     @partial(jax.jit, static_argnames=("self", "max_iters"))
     def _solve_dense(
@@ -367,7 +397,7 @@ class UnwrappedADMM:
         record: bool = False, overlap: bool = True, prefetch: int = 2,
         device_dtype: Optional[str] = None,
         checkpoint_dir: Optional[str] = None, checkpoint_every: int = 0,
-        resume: bool = False,
+        resume: bool = False, obs=None,
     ) -> ADMMResult:
         """``solve`` for data that does not fit device memory: ``store``
         is a :class:`repro.data.store.ShardedMatrixStore` (host RAM or
@@ -391,7 +421,8 @@ class UnwrappedADMM:
                       record=record, overlap=overlap, prefetch=prefetch,
                       device_dtype=device_dtype,
                       checkpoint_dir=checkpoint_dir,
-                      checkpoint_every=checkpoint_every, resume=resume)
+                      checkpoint_every=checkpoint_every, resume=resume,
+                      obs=obs)
 
 
 # ---------------------------------------------------------------------------

@@ -29,6 +29,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
+import time
 from functools import lru_cache
 from typing import Callable, Iterable, Iterator, NamedTuple, Optional
 
@@ -353,7 +354,8 @@ def solve_streaming(solver, store: ShardedMatrixStore, max_iters: int = 500,
                     overlap: bool = True, prefetch: int = 2,
                     device_dtype: Optional[str] = None,
                     checkpoint_dir: Optional[str] = None,
-                    checkpoint_every: int = 0, resume: bool = False):
+                    checkpoint_every: int = 0, resume: bool = False,
+                    obs=None):
     """Out-of-core unwrapped ADMM over a row-block store.
 
     Same semantics as ``UnwrappedADMM.solve`` (Boyd stopping rule, warm
@@ -374,17 +376,24 @@ def solve_streaming(solver, store: ShardedMatrixStore, max_iters: int = 500,
     ``record`` history restarts from the resume point. The checkpoint
     is bound to the store's content fingerprint — resuming against
     different data refuses instead of converging somewhere else.
+
+    ``obs`` (an :class:`repro.obs.Observability`) instruments the HOST
+    loop only: spans around the Gram setup and each sweep, one telemetry
+    JSONL record per iteration. ``None`` is the disabled fast path.
     """
     from repro.core.unwrapped import ADMMHistory, ADMMResult
+    from repro.obs import NOOP
 
+    obs = obs if obs is not None else NOOP
     m, n = store.m, store.n
     seng = StreamingEngine(engine=solver.engine,
                            prefetch=prefetch if overlap else 0,
                            device_dtype=device_dtype)
     acc = gram_lib._acc_dtype(seng.residency_dtype(store))
 
-    G = seng.gram_from_store(store)
-    L = gram_lib.gram_factor(G, ridge=solver.rho / solver.tau)
+    with obs.span("gram_setup", nblocks=store.nblocks):
+        G = seng.gram_from_store(store)
+        L = gram_lib.gram_factor(G, ridge=solver.rho / solver.tau)
 
     y = np.zeros((m,), jnp.dtype(acc).name)
     lam = np.zeros((m,), jnp.dtype(acc).name)
@@ -409,7 +418,8 @@ def solve_streaming(solver, store: ShardedMatrixStore, max_iters: int = 500,
         k = int(extra["iter"])
         x_init = tree["x"]       # returned as-is if no iterations remain
     elif x0 is not None:
-        d = seng.init_from_x0(store, jnp.asarray(x0, acc), y)
+        with obs.span("init_from_x0"):
+            d = seng.init_from_x0(store, jnp.asarray(x0, acc), y)
         x_init = jnp.zeros((n,), acc)
     else:
         d = jnp.zeros((n,), acc)
@@ -420,8 +430,13 @@ def solve_streaming(solver, store: ShardedMatrixStore, max_iters: int = 500,
     k_conv = -1
     x = x_init
     while k < max_iters:
-        x = gram_lib.gram_solve(L, d)
-        sw = seng.sweep(store, x, y, lam, overlap=overlap)
+        t_it = time.perf_counter()
+        with obs.span("x_solve", k=k + 1):
+            x = gram_lib.gram_solve(L, d)
+        t_sw = time.perf_counter()
+        with obs.span("sweep", k=k + 1):
+            sw = seng.sweep(store, x, y, lam, overlap=overlap)
+        sweep_s = time.perf_counter() - t_sw
         d = sw.d
         r = float(jnp.sqrt(sw.r_sq))
         s = solver.tau * float(jnp.linalg.norm(sw.w))
@@ -430,13 +445,23 @@ def solve_streaming(solver, store: ShardedMatrixStore, max_iters: int = 500,
         eps_dual = np.sqrt(n) * solver.eps_abs + (
             solver.eps_rel * solver.tau * float(jnp.linalg.norm(sw.v)))
         k += 1
-        if record:
+        if record or obs.enabled:
             obj = float(sw.obj) - pad_obj
             if solver.rho:
                 obj += 0.5 * solver.rho * float(jnp.sum(x * x))
-            objs.append(obj)
-            rs.append(r)
-            ss.append(s)
+            if record:
+                objs.append(obj)
+                rs.append(r)
+                ss.append(s)
+            if obs.enabled:
+                dt = time.perf_counter() - t_it
+                obs.observe("streaming.sweep_s", sweep_s)
+                obs.observe("streaming.iter_s", dt)
+                obs.record(iter=k, objective=obj, primal_res=r,
+                           dual_res=s, eps_pri=float(eps_pri),
+                           eps_dual=float(eps_dual), tau=solver.tau,
+                           rho=solver.rho, iter_s=round(dt, 6),
+                           sweep_s=round(sweep_s, 6))
         if manager is not None and checkpoint_every \
                 and k % checkpoint_every == 0:
             manager.save(k, {"x": x, "y": jnp.asarray(y),

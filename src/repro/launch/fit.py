@@ -48,6 +48,7 @@ from repro.core.oracles import (
 )
 from repro.core.prox import make_hinge, make_logistic
 from repro.data import synthetic
+from repro.obs import Observability
 from repro.sharding import compat
 
 
@@ -63,7 +64,7 @@ def _admm_params(problem):
     return make_hinge(C), 1.0, 0.5, {"name": "hinge", "C": C}
 
 
-def _fit_streaming(args, D, aux, mu):
+def _fit_streaming(args, D, aux, mu, obs=None):
     """Out-of-core fit: stage into a block store, stream the solve.
     ``D`` may be dense node-stacked or a BlockCSR (nnz-scaled store)."""
     from repro.core.unwrapped import UnwrappedADMM
@@ -111,7 +112,7 @@ def _fit_streaming(args, D, aux, mu):
     res = solver.solve_streaming(store, max_iters=args.iters, record=True,
                                  checkpoint_dir=args.checkpoint_dir,
                                  checkpoint_every=args.checkpoint_every,
-                                 resume=args.resume)
+                                 resume=args.resume, obs=obs)
     return FitResult(res.x, int(res.iters), res.history.objective,
                      "transpose", args.problem)
 
@@ -133,6 +134,7 @@ def _fit_cluster(args, D, aux, mu):
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=args.checkpoint_every,
         resume=args.resume,
+        obs_dir=args.obs_dir,   # the coordinator owns the run directory
     )
     if args.problem == "lasso":
         from repro.core.fasta import transpose_reduction_lasso
@@ -166,7 +168,7 @@ def _fit_cluster(args, D, aux, mu):
                      "transpose", args.problem)
 
 
-def _fit_sparse(args, bcsr, aux, mu):
+def _fit_sparse(args, bcsr, aux, mu, obs=None):
     """In-memory sparse fit over the block-CSR engine backend."""
     from repro.core.unwrapped import UnwrappedADMM
     from repro.service.stats import SufficientStats
@@ -187,7 +189,7 @@ def _fit_sparse(args, bcsr, aux, mu):
                          f"(needs a separable ProxLoss on Dx)")
     loss, rho, tau, _ = _admm_params(args.problem)
     solver = UnwrappedADMM(loss=loss, tau=tau, rho=rho)
-    res = solver.run(bcsr, aux, iters=args.iters)
+    res = solver.run(bcsr, aux, iters=args.iters, obs=obs)
     return FitResult(res.x, int(res.iters), res.history.objective,
                      "transpose", args.problem)
 
@@ -241,6 +243,10 @@ def main(argv=None):
                     choices=["blockcsr", "dense"],
                     help="with --density: run the padded block-CSR path "
                          "(O(nnz) per pass) or densify for comparison")
+    ap.add_argument("--obs-dir", default=None,
+                    help="write observability artifacts here: trace.json "
+                         "(Perfetto), metrics.json, telemetry.jsonl "
+                         "(summarize with repro.launch.obs_report)")
     args = ap.parse_args(argv)
 
     key = jax.random.PRNGKey(args.seed)
@@ -284,6 +290,11 @@ def main(argv=None):
         print(f"data: {N} nodes x {mi} rows x {n} features "
               f"({N*mi*n*4/2**30:.2f} GiB) in {t_data:.1f}s", flush=True)
 
+    # one Observability bundle per run: the cluster path hands the run
+    # directory to the coordinator instead (it owns the merged trace),
+    # so this process's bundle stays disabled there
+    obs = Observability(dir=args.obs_dir if not args.cluster else None,
+                        process_name="fit")
     t0 = time.time()
     if args.cluster:
         if sparse_input:
@@ -291,9 +302,9 @@ def main(argv=None):
                              "(use --sparse-format dense)")
         res = _fit_cluster(args, D, aux, mu)
     elif sparse_input and not args.streaming:
-        res = _fit_sparse(args, D, aux, mu)
+        res = _fit_sparse(args, D, aux, mu, obs=obs)
     elif args.streaming:
-        res = _fit_streaming(args, D, aux, mu)
+        res = _fit_streaming(args, D, aux, mu, obs=obs)
     elif args.multi_device and args.method == "transpose" \
             and args.problem in ("logistic", "svm"):
         ndev = len(jax.devices())
@@ -302,7 +313,7 @@ def main(argv=None):
         solver = DistributedUnwrappedADMM(
             loss=loss, tau=tau, rho=rho, data_axes=("data",))
         m = N * mi
-        solve = solver.build(mesh, m, n, iters=args.iters)
+        solve = solver.build(mesh, m, n, iters=args.iters, obs=obs)
         if m % ndev:
             # uneven rows cannot be pre-sharded (NamedSharding needs
             # axis-0 divisibility): hand build()'s returned fn HOST
@@ -315,10 +326,19 @@ def main(argv=None):
         res = FitResult(x, args.iters, objs, "transpose",
                                 args.problem)
     else:
-        res = fit_glm(args.problem, D, aux, method=args.method,
+        with obs.span("fit_glm", problem=args.problem,
+                      method=args.method):
+            res = fit_glm(args.problem, D, aux, method=args.method,
                           mu=mu if args.problem.startswith(("lasso", "sparse"))
                           else None, iters=args.iters)
+        if obs.enabled and getattr(res.objective, "ndim", None) == 1:
+            for i, o in enumerate(np.asarray(res.objective)):
+                obs.record(iter=i + 1, objective=float(o))
     dt = time.time() - t0
+    obs.finish()
+    if args.obs_dir:
+        print(f"obs: wrote {args.obs_dir} (trace.json / metrics.json / "
+              "telemetry.jsonl)", flush=True)
     print(f"[{args.method}] {args.problem}: {res.iters} iters in {dt:.1f}s",
           flush=True)
 

@@ -1,0 +1,189 @@
+"""Summarize an observability run directory (DESIGN.md §12).
+
+``python -m repro.launch.obs_report RUNDIR [--json]``
+
+Reads the three artifacts an ``--obs-dir`` run writes —
+``metrics.json`` (registry snapshot), ``telemetry.jsonl`` (one record
+per solver iteration), ``trace.json`` (Chrome-trace spans) — and prints
+the operator's questions back as tables: counter totals, latency
+percentiles per histogram (p50/p90/p99, aggregated across label sets so
+a cluster's per-worker block-step series also report cluster-wide),
+bytes per iteration by message type, and span hotspots (where the wall
+time went). ``--json`` emits the same summary as one JSON document.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.obs import (
+    METRICS_FILE,
+    TELEMETRY_FILE,
+    TRACE_FILE,
+    load_trace,
+    merged_histogram,
+    read_jsonl,
+    span_hotspots,
+    summarize_histogram,
+)
+
+
+def _fmt_labels(labels: Dict[str, str]) -> str:
+    if not labels:
+        return ""
+    return "{" + ",".join(f"{k}={v}" for k, v in sorted(labels.items())) + "}"
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        return f"{v:.3f}"
+    return str(v)
+
+
+def _table(rows: List[List[str]], header: List[str]) -> str:
+    widths = [max(len(str(r[i])) for r in [header] + rows)
+              for i in range(len(header))]
+    def line(r):
+        return "  ".join(str(c).ljust(w) for c, w in zip(r, widths)).rstrip()
+    return "\n".join([line(header), line(["-" * w for w in widths])]
+                     + [line(r) for r in rows])
+
+
+# -- metrics.json -----------------------------------------------------------
+
+def summarize_metrics(snap: dict) -> dict:
+    counters = sorted(
+        ({"name": e["name"], "labels": e.get("labels", {}),
+          "value": e["value"]} for e in snap.get("counters", [])),
+        key=lambda e: (e["name"], sorted(e["labels"].items())))
+    hists: Dict[str, List[dict]] = {}
+    for e in snap.get("histograms", []):
+        hists.setdefault(e["name"], []).append(e)
+    out_h = []
+    for name in sorted(hists):
+        entries = hists[name]
+        # seconds-valued histograms report in ms
+        scale = 1e3 if name.endswith("_s") else 1.0
+        unit = "ms" if scale == 1e3 else ""
+        for e in sorted(entries,
+                        key=lambda e: sorted(e.get("labels", {}).items())):
+            out_h.append({"name": name + _fmt_labels(e.get("labels", {})),
+                          "unit": unit,
+                          **summarize_histogram(e, scale=scale)})
+        if len(entries) > 1:   # cluster-wide view across label sets
+            agg = merged_histogram(entries).to_snapshot()
+            out_h.append({"name": name + "{ALL}", "unit": unit,
+                          **summarize_histogram(agg, scale=scale)})
+    return {"counters": counters, "histograms": out_h,
+            "gauges": snap.get("gauges", [])}
+
+
+# -- telemetry.jsonl --------------------------------------------------------
+
+def summarize_telemetry(records: List[dict]) -> Optional[dict]:
+    iters = [r for r in records if "iter" in r]
+    if not iters:
+        return None
+    last = iters[-1]
+    by_type: Dict[str, int] = {}
+    for r in iters:
+        for key in ("tx_bytes", "rx_bytes"):
+            for t, v in (r.get(key) or {}).items():
+                by_type[f"{key}.{t}"] = by_type.get(f"{key}.{t}", 0) + v
+    n = len(iters)
+    out = {
+        "iterations": n,
+        "final": {k: last.get(k) for k in
+                  ("iter", "objective", "primal_res", "dual_res")},
+        "bytes_per_iter_by_type": {t: round(v / n, 1)
+                                   for t, v in sorted(by_type.items())},
+    }
+    iter_s = [r["iter_s"] for r in iters if r.get("iter_s") is not None]
+    if iter_s:
+        out["mean_iter_s"] = round(sum(iter_s) / len(iter_s), 6)
+    return out
+
+
+# -- report -----------------------------------------------------------------
+
+def build_report(rundir: str) -> dict:
+    report: dict = {"rundir": rundir}
+    mpath = os.path.join(rundir, METRICS_FILE)
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            report["metrics"] = summarize_metrics(json.load(f))
+    tpath = os.path.join(rundir, TELEMETRY_FILE)
+    if os.path.exists(tpath):
+        report["telemetry"] = summarize_telemetry(read_jsonl(tpath))
+    trpath = os.path.join(rundir, TRACE_FILE)
+    if os.path.exists(trpath):
+        report["hotspots"] = span_hotspots(load_trace(trpath))
+    return report
+
+
+def print_report(report: dict, top: int = 15):
+    print(f"== obs report: {report['rundir']} ==")
+    tel = report.get("telemetry")
+    if tel:
+        fin = tel["final"]
+        print(f"\niterations: {tel['iterations']}"
+              + (f"  (mean {tel['mean_iter_s']*1e3:.2f} ms/iter)"
+                 if tel.get("mean_iter_s") is not None else ""))
+        print("final: " + "  ".join(
+            f"{k}={_fmt(fin[k])}" for k in fin if fin[k] is not None))
+        if tel["bytes_per_iter_by_type"]:
+            print("\nbytes/iter by message type:")
+            print(_table([[t, f"{v:.1f}"] for t, v in
+                          tel["bytes_per_iter_by_type"].items()],
+                         ["message", "bytes/iter"]))
+    met = report.get("metrics")
+    if met:
+        if met["counters"]:
+            print("\ncounters:")
+            print(_table(
+                [[e["name"] + _fmt_labels(e["labels"]), _fmt(e["value"])]
+                 for e in met["counters"]], ["counter", "value"]))
+        if met["histograms"]:
+            print("\nlatency histograms:")
+            print(_table(
+                [[h["name"], h["unit"], _fmt(h["count"]), _fmt(h["mean"]),
+                  _fmt(h["p50"]), _fmt(h["p90"]), _fmt(h["p99"]),
+                  _fmt(h["max"])] for h in met["histograms"]],
+                ["histogram", "unit", "count", "mean", "p50", "p90",
+                 "p99", "max"]))
+    hot = report.get("hotspots")
+    if hot:
+        print(f"\nspan hotspots (top {top}):")
+        print(_table(
+            [[h["name"], _fmt(h["count"]), _fmt(h["total_ms"]),
+              _fmt(h["mean_ms"])] for h in hot[:top]],
+            ["span", "count", "total_ms", "mean_ms"]))
+    if not (tel or met or hot):
+        print("(no observability artifacts found — was the run launched "
+              "with --obs-dir?)")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="summarize an --obs-dir run directory")
+    ap.add_argument("rundir", help="directory holding trace.json / "
+                                   "metrics.json / telemetry.jsonl")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the summary as one JSON document")
+    ap.add_argument("--top", type=int, default=15,
+                    help="span-hotspot rows to print")
+    args = ap.parse_args(argv)
+    report = build_report(args.rundir)
+    if args.json:
+        print(json.dumps(report, indent=2))
+    else:
+        print_report(report, top=args.top)
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Structured per-iteration telemetry: a JSONL sink (DESIGN.md §12).
+
+One line per solver iteration — iter index, primal/dual residuals,
+objective, tau/rho, block timings, bytes by message type — written by
+the HOST loop of whichever topology is solving (streaming sweep loop,
+cluster coordinator, post-scan history dump for the fully-jitted
+drivers). JSONL because the stream is append-only (a killed run keeps
+every completed line) and line-parseable without loading the file.
+
+Values are sanitized to plain JSON: numpy/jax scalars unwrap, arrays
+become lists, NaN/inf become null (bare NaN is invalid JSON — the
+BENCH_*.json convention).
+"""
+from __future__ import annotations
+
+import json
+import math
+import threading
+from typing import Any, List, Optional
+
+
+def jsonable(v: Any):
+    if v is None or isinstance(v, (str, bool, int)):
+        return v
+    if isinstance(v, float):
+        return v if math.isfinite(v) else None
+    if isinstance(v, dict):
+        return {str(k): jsonable(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [jsonable(x) for x in v]
+    # numpy / jax scalars and arrays
+    item = getattr(v, "item", None)
+    if item is not None and getattr(v, "ndim", None) == 0:
+        return jsonable(item())
+    tolist = getattr(v, "tolist", None)
+    if tolist is not None:
+        return jsonable(tolist())
+    return str(v)
+
+
+class TelemetryWriter:
+    """Append-only JSONL sink; ``write`` is thread-safe and flushes per
+    line so a SIGKILL keeps every completed record."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._lock = threading.Lock()
+        self._f: Optional[Any] = open(path, "w")
+
+    def write(self, record: dict):
+        line = json.dumps(jsonable(record))
+        with self._lock:
+            if self._f is None:
+                return
+            self._f.write(line + "\n")
+            self._f.flush()
+
+    def close(self):
+        with self._lock:
+            if self._f is not None:
+                self._f.close()
+                self._f = None
+
+
+def read_jsonl(path: str) -> List[dict]:
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out

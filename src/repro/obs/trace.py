@@ -1,0 +1,180 @@
+"""Low-overhead tracing spans -> Chrome-trace/Perfetto JSON (DESIGN.md §12).
+
+``Tracer.span("gram_pass", attrs=...)`` is a context manager that records
+one complete ("ph": "X") event; ``@tracer.traced()`` wraps a function.
+Events carry real OS pid/tid plus ``process_name`` / ``thread_name``
+metadata, so a multi-process cluster solve — coordinator + N workers,
+each exporting its own event list — merges into ONE timeline: load the
+exported JSON in ``chrome://tracing`` or https://ui.perfetto.dev and
+every process renders as its own track.
+
+Clock contract: event timestamps (``ts``) are wall-clock microseconds
+(``time.time_ns``), the one clock processes on a host share, so merged
+cross-process events align; durations (``dur``) come from
+``time.perf_counter`` for sub-microsecond resolution within a span.
+
+Disabled fast path: ``span`` on a disabled tracer returns a reused no-op
+context manager — no event dict, no timestamp read, no allocation — so
+instrumented code costs one attribute check when observability is off.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import threading
+import time
+from typing import List, Optional
+
+
+class _NullSpan:
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    __slots__ = ("_tracer", "_name", "_attrs", "_t0_us", "_t0")
+
+    def __init__(self, tracer: "Tracer", name: str, attrs: dict):
+        self._tracer = tracer
+        self._name = name
+        self._attrs = attrs
+
+    def __enter__(self):
+        self._t0_us = time.time_ns() // 1000
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        dur_us = (time.perf_counter() - self._t0) * 1e6
+        self._tracer._emit(self._name, self._t0_us, dur_us, self._attrs)
+        return False
+
+
+class Tracer:
+    def __init__(self, enabled: bool = False,
+                 process_name: Optional[str] = None):
+        self.enabled = bool(enabled)
+        self._lock = threading.Lock()
+        self._events: List[dict] = []
+        self._pid = os.getpid()
+        self._named_tids: set = set()
+        if process_name and self.enabled:
+            self.set_process_name(process_name)
+
+    # -- recording -----------------------------------------------------------
+    def set_process_name(self, name: str, pid: Optional[int] = None):
+        with self._lock:
+            self._events.append({"ph": "M", "name": "process_name",
+                                 "pid": pid if pid is not None else self._pid,
+                                 "tid": 0, "args": {"name": name}})
+
+    def span(self, name: str, **attrs):
+        if not self.enabled:
+            return _NULL_SPAN
+        return _Span(self, name, attrs)
+
+    def traced(self, name: Optional[str] = None):
+        def deco(fn):
+            label = name or fn.__qualname__
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                if not self.enabled:
+                    return fn(*args, **kwargs)
+                with self.span(label):
+                    return fn(*args, **kwargs)
+
+            return wrapper
+
+        return deco
+
+    def instant(self, name: str, **attrs):
+        if not self.enabled:
+            return
+        tid = threading.get_ident()
+        ev = {"ph": "i", "name": name, "ts": time.time_ns() // 1000,
+              "pid": self._pid, "tid": tid, "s": "p"}
+        if attrs:
+            ev["args"] = attrs
+        with self._lock:
+            self._maybe_name_thread(tid)
+            self._events.append(ev)
+
+    def _emit(self, name: str, t0_us: int, dur_us: float, attrs: dict):
+        tid = threading.get_ident()
+        ev = {"ph": "X", "name": name, "ts": t0_us,
+              "dur": round(dur_us, 3), "pid": self._pid, "tid": tid}
+        if attrs:
+            ev["args"] = attrs
+        with self._lock:
+            self._maybe_name_thread(tid)
+            self._events.append(ev)
+
+    def _maybe_name_thread(self, tid: int):
+        # caller holds the lock
+        if tid in self._named_tids:
+            return
+        self._named_tids.add(tid)
+        self._events.append({"ph": "M", "name": "thread_name",
+                             "pid": self._pid, "tid": tid,
+                             "args": {"name": threading.current_thread().name}})
+
+    # -- merge / export ------------------------------------------------------
+    def add_events(self, events: List[dict],
+                   process_name: Optional[str] = None,
+                   pid: Optional[int] = None):
+        """Fold another process's event list in (cluster workers ship
+        theirs to the coordinator at shutdown). ``process_name``/``pid``
+        add the process metadata track when the shipped list lacks it."""
+        with self._lock:
+            if process_name is not None and pid is not None:
+                if not any(e.get("ph") == "M"
+                           and e.get("name") == "process_name"
+                           and e.get("pid") == pid for e in events):
+                    self._events.append(
+                        {"ph": "M", "name": "process_name", "pid": pid,
+                         "tid": 0, "args": {"name": process_name}})
+            self._events.extend(events)
+
+    def events(self) -> List[dict]:
+        with self._lock:
+            return list(self._events)
+
+    def export(self, path: str):
+        with open(path, "w") as f:
+            json.dump({"traceEvents": self.events(),
+                       "displayTimeUnit": "ms"}, f)
+            f.write("\n")
+
+
+def load_trace(path: str) -> List[dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    return doc["traceEvents"] if isinstance(doc, dict) else doc
+
+
+def span_hotspots(events: List[dict]) -> List[dict]:
+    """Aggregate complete ("X") events by name: count, total/mean ms —
+    the obs_report 'where did the time go' table."""
+    agg: dict = {}
+    for e in events:
+        if e.get("ph") != "X":
+            continue
+        a = agg.setdefault(e["name"], {"name": e["name"], "count": 0,
+                                       "total_ms": 0.0})
+        a["count"] += 1
+        a["total_ms"] += e.get("dur", 0.0) / 1e3
+    out = sorted(agg.values(), key=lambda a: -a["total_ms"])
+    for a in out:
+        a["total_ms"] = round(a["total_ms"], 3)
+        a["mean_ms"] = round(a["total_ms"] / max(a["count"], 1), 3)
+    return out

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry, summarize_histogram
 from repro.service import batching, registry
 from repro.service.stats import SufficientStats, chol_update, chol_downdate
 
@@ -72,23 +73,67 @@ class FitResponse:
     from_cache: bool           # True iff no Gram pass was spent on this
 
 
-@dataclasses.dataclass
+_LATENCY_HIST = "server.fit_latency_s"
+
+
 class ServerCounters:
-    """Observable cost accounting — the serving layer's acceptance surface."""
+    """Observable cost accounting — the serving layer's acceptance surface.
 
-    requests: int = 0
-    responses: int = 0
-    batches: int = 0           # coalesced group solves executed
-    gram_passes: int = 0       # full O(m n^2) passes over a dataset
-    rhs_passes: int = 0        # fused O(m n k) D^T B micro-batch passes
-    factorizations: int = 0    # fresh O(n^3) Cholesky factorizations
-    factor_updates: int = 0    # O(n^2 k) rank-k factor up/downdates
-    factor_cache_hits: int = 0
-    factor_cache_misses: int = 0
-    full_solves: int = 0       # non-gram-path fallbacks to registry.solve
+    Backed by a :class:`~repro.obs.metrics.MetricsRegistry` (DESIGN.md
+    §12): the counters are ordinary ``server.*`` registry series (thread-
+    safe — the old dataclass ``+=`` fields raced under concurrent
+    submits), plus a submit→response latency histogram labelled
+    warm/cold. Counter fields stay readable as plain attributes
+    (``counters.gram_passes``) and :meth:`snapshot` keeps the flat
+    ``{field: int}`` shape, now with latency percentile summaries."""
 
-    def snapshot(self) -> Dict[str, int]:
-        return dataclasses.asdict(self)
+    _FIELDS = (
+        "requests",            # fits submitted
+        "responses",           # fit responses returned
+        "batches",             # coalesced group solves executed
+        "gram_passes",         # full O(m n^2) passes over a dataset
+        "rhs_passes",          # fused O(m n k) D^T B micro-batch passes
+        "factorizations",      # fresh O(n^3) Cholesky factorizations
+        "factor_updates",      # O(n^2 k) rank-k factor up/downdates
+        "factor_cache_hits",
+        "factor_cache_misses",
+        "full_solves",         # non-gram-path fallbacks to registry.solve
+    )
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        # object.__setattr__-free: plain attrs set before any __getattr__
+        self.registry = registry or MetricsRegistry()
+
+    def inc(self, field: str, value: int = 1):
+        assert field in self._FIELDS, f"unknown server counter {field!r}"
+        self.registry.inc(f"server.{field}", value)
+
+    def observe_latency(self, kind: str, seconds: float):
+        """submit→response wall time; ``kind`` is warm (served from
+        cache) or cold."""
+        self.registry.observe(_LATENCY_HIST, seconds, kind=kind)
+
+    def __getattr__(self, name: str) -> int:
+        # only called when normal lookup misses: counter-field reads.
+        # registry via __dict__ so a half-constructed instance cannot
+        # recurse back into __getattr__
+        if name in type(self)._FIELDS:
+            reg = self.__dict__.get("registry")
+            if reg is not None:
+                return int(reg.counter_value(f"server.{name}"))
+        raise AttributeError(name)
+
+    def snapshot(self) -> Dict[str, object]:
+        out: Dict[str, object] = {f: getattr(self, f)
+                                  for f in self._FIELDS}
+        lat = {}
+        for kind in ("warm", "cold"):
+            h = self.registry.histogram_snapshot(_LATENCY_HIST, kind=kind)
+            if h is not None:
+                lat[kind] = summarize_histogram(h, scale=1e3)  # ms
+        if lat:
+            out["fit_latency_ms"] = lat
+        return out
 
 
 @dataclasses.dataclass
@@ -113,6 +158,7 @@ class FitServer:
         self._datasets: Dict[str, _Dataset] = {}
         self._factors: "OrderedDict[Tuple[str, float], Array]" = OrderedDict()
         self._queue: List[FitRequest] = []
+        self._submit_t: Dict[int, float] = {}   # request_id -> submit time
 
     # -- dataset lifecycle --------------------------------------------------
     def register_dataset(self, D: Array, b: Optional[Array] = None,
@@ -138,7 +184,7 @@ class FitServer:
                 raise ValueError(
                     f"rhs has {b.shape[0]} rows but data has {D.shape[0]}")
         stats = SufficientStats.from_data(D, b)
-        self.counters.gram_passes += 1
+        self.counters.inc("gram_passes")
         self._datasets[stats.fingerprint] = _Dataset(
             D=D if keep_data else None, stats=stats,
             b=b if keep_data else None)
@@ -195,7 +241,7 @@ class FitServer:
             if fp == old_fp:
                 del self._factors[(fp, ridge)]
                 self._factors[(new_fp, ridge)] = op(L, block_D)
-                self.counters.factor_updates += 1
+                self.counters.inc("factor_updates")
 
     def stats_for(self, fingerprint: str) -> SufficientStats:
         return self._datasets[fingerprint].stats
@@ -205,11 +251,11 @@ class FitServer:
         key = (fingerprint, float(ridge))
         if key in self._factors:
             self._factors.move_to_end(key)
-            self.counters.factor_cache_hits += 1
+            self.counters.inc("factor_cache_hits")
             return self._factors[key]
-        self.counters.factor_cache_misses += 1
+        self.counters.inc("factor_cache_misses")
         L = self._datasets[fingerprint].stats.factor(ridge=ridge)
-        self.counters.factorizations += 1
+        self.counters.inc("factorizations")
         self._factors[key] = L
         while len(self._factors) > self.factor_cache_size:
             self._factors.popitem(last=False)
@@ -218,7 +264,8 @@ class FitServer:
     # -- request path -------------------------------------------------------
     def submit(self, request: FitRequest) -> List[FitResponse]:
         """Queue a request; auto-flush when the window fills."""
-        self.counters.requests += 1
+        self.counters.inc("requests")
+        self._submit_t[request.request_id] = time.perf_counter()
         self._queue.append(request)
         if len(self._queue) >= self.window:
             return self.flush()
@@ -239,7 +286,16 @@ class FitServer:
         out: List[FitResponse] = []
         for reqs in groups.values():
             out.extend(self._solve_group(reqs))
-        self.counters.responses += len(out)
+        self.counters.inc("responses", len(out))
+        now = time.perf_counter()
+        for resp in out:
+            # warm = answered from cached stats (no Gram pass spent);
+            # requests that bypassed submit() (direct flush of a hand-
+            # built queue) have no stamp and observe nothing
+            t0 = self._submit_t.pop(resp.request_id, None)
+            if t0 is not None:
+                self.counters.observe_latency(
+                    "warm" if resp.from_cache else "cold", now - t0)
         out.sort(key=lambda r: r.request_id)
         return out
 
@@ -284,7 +340,7 @@ class FitServer:
             B = jnp.stack(
                 [jnp.asarray(r.b).reshape(-1) for r in fresh], axis=1)
             C_fresh = batching.rhs_chunked(ds.D, B)          # (n, k_fresh)
-            self.counters.rhs_passes += 1
+            self.counters.inc("rhs_passes")
         cols, j = [], 0
         for r in reqs:
             if r.b is None:
@@ -303,7 +359,7 @@ class FitServer:
 
     def _solve_gram_group(self, problem: str, fp: str,
                           reqs: List[FitRequest]) -> List[FitResponse]:
-        self.counters.batches += 1
+        self.counters.inc("batches")
         if problem in ("lasso", "elastic_net"):
             missing = [r.request_id for r in reqs if r.mu is None]
             if missing:
@@ -347,7 +403,7 @@ class FitServer:
             raise ValueError(
                 f"problem {req.problem!r} needs labels/targets: pass b on "
                 "the request or register the dataset with b")
-        self.counters.full_solves += 1
+        self.counters.inc("full_solves")
         m, n = ds.D.shape
         D = ds.D.reshape(1, m, n)
         aux = jnp.asarray(b).reshape(1, m)
