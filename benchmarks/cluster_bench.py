@@ -85,6 +85,48 @@ def _one_point(D, aux, workers, iters, compress, store_path):
     return res, total_s
 
 
+def _recovery_point(D, aux, ref_x, workers, iters, store_path):
+    """Seeded chaos run (worker SIGKILL + mid-solve join + wire faults):
+    the solve must self-heal back to the single-process x, and the
+    telemetry's recovery metrics (time-to-recover, iterations retried,
+    join-to-contributing latency) are the benchmark's product. Timings
+    are recorded honestly — on a timeshared CI VM they measure this VM,
+    not the paper's cluster — only parity is gated."""
+    from repro.cluster.chaos import ChaosSchedule
+    from repro.cluster.coordinator import (
+        ClusterConfig,
+        DegradePolicy,
+        cluster_solve,
+    )
+    sched = ChaosSchedule.generate(0, n_workers=workers, iters=iters,
+                                   kills=1, stops=0, joins=1,
+                                   delays=1, drops=1)
+    cfg = ClusterConfig(
+        n_workers=workers, chaos=sched,
+        degrade=DegradePolicy(iter_deadline_s=20.0, deadline_retries=3),
+        reconnect={"retries": 4, "backoff_s": 0.25, "backoff_max_s": 2.0})
+    res = cluster_solve(store_path, None, {"name": "logistic"}, tau=TAU,
+                        max_iters=iters, config=cfg, **TINY)
+    rel = float(np.linalg.norm(res.x - ref_x)
+                / max(np.linalg.norm(ref_x), 1e-30))
+    t = res.telemetry
+    rec = t["recovery"]
+    return {
+        "workers": workers, "iters": res.iters,
+        "chaos_seed": t["chaos_seed"], "chaos_spec": t["chaos_spec"],
+        "status": t["status"],
+        "rel_x_err_vs_single_process": rel,
+        "deaths": t["deaths"], "joins": t["joins"],
+        "blocks_reassigned": t["blocks_reassigned"],
+        "blocks_rebalanced": t["blocks_rebalanced"],
+        "time_to_recover_s": rec["time_to_recover_s"],
+        "iterations_retried": rec["iterations_retried"],
+        "join_to_contributing_s": rec["join_to_contributing_s"],
+        "recovery_events": rec["events"],
+        "solve_wall_s": t["wall_s"],
+    }
+
+
 def run(rows, quick: bool = False):
     from repro.cluster import compress as compress_lib
     from repro.cluster.coordinator import _ensure_store
@@ -163,6 +205,26 @@ def run(rows, quick: bool = False):
                 f"objgap{gap_c:.1e}_"
                 f"{comp_rec['reduction_bytes_per_iter']:.0f}B/iter")
 
+    # recovery point: seeded kill + join + wire-fault chaos, self-healed
+    # back to the same x (DESIGN.md §13)
+    rec_point = _recovery_point(D, aux, ref_x, max(sweep), iters,
+                                store_path)
+    # gate PARITY through the faults only: the kill always lands (EOF
+    # detection is instant) but whether the joiner registers before the
+    # solve ends is a property of this VM's process-spawn latency, so
+    # join metrics are recorded, not gated (test_chaos.py's soak gates
+    # them under a schedule sized for it)
+    recovery_ok = bool(
+        rec_point["rel_x_err_vs_single_process"] < 1e-4
+        and rec_point["status"] != "degraded"
+        and rec_point["deaths"]
+        and rec_point["time_to_recover_s"] is not None)
+    rows.append(
+        f"cluster_recovery_w{rec_point['workers']},"
+        f"{(rec_point['time_to_recover_s'] or 0) * 1e6:.0f},"
+        f"relx{rec_point['rel_x_err_vs_single_process']:.1e}_"
+        f"{rec_point['iterations_retried']}retries")
+
     parity_ok = all(p["rel_x_err_vs_single_process"] < 1e-4
                     for p in points) and gap_c < 1e-3
     wire_ok = all(p["reduction_bytes_per_iter"]
@@ -197,6 +259,7 @@ def run(rows, quick: bool = False):
                         "iters": iters, "tau": TAU},
             "points": points,
             "compressed_point": comp_rec,
+            "recovery_point": rec_point,
             "acceptance": {
                 "criterion": (
                     "every worker count reproduces the single-process "
@@ -208,15 +271,21 @@ def run(rows, quick: bool = False):
                     "wall-clock speedup is only claimed when the host "
                     "has >= workers+1 cores (this VM's 2 cores "
                     "timeshare every process, so the sweep documents "
-                    "communication and correctness, not scaling)"),
+                    "communication and correctness, not scaling); the "
+                    "recovery point must self-heal through a seeded "
+                    "kill + mid-solve join + wire faults back to the "
+                    "same x — its recovery TIMINGS are recorded but "
+                    "not gated (they measure this VM's process spawn "
+                    "and detection latencies, not the algorithm)"),
                 "parity_ok": parity_ok,
                 "wire_bytes_ok": wire_ok,
+                "recovery_parity_ok": recovery_ok,
                 "compression_cuts_wire_bytes": compression_wins,
                 "scaling_gate_applies": scaling_gate,
                 "best_speedup_vs_1_worker": best_speedup,
                 "speedup_ok": (best_speedup >= 1.3 if scaling_gate
                                else None),
-                "pass": bool(parity_ok and wire_ok
+                "pass": bool(parity_ok and wire_ok and recovery_ok
                              and compression_wins is not False
                              and (best_speedup >= 1.3
                                   if scaling_gate else True)),

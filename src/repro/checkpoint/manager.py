@@ -125,13 +125,34 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     def restore(self, tree_like: Any, step: Optional[int] = None,
-                shardings: Any = None) -> Tuple[Any, Dict]:
+                shardings: Any = None, fallback: bool = False
+                ) -> Tuple[Any, Dict]:
         """Restore into the structure of ``tree_like``. ``shardings``
         (optional pytree of NamedSharding) re-places leaves on an arbitrary
-        mesh — the elastic-restart path."""
+        mesh — the elastic-restart path. ``fallback=True`` walks back to
+        the previous committed step when the newest one fails its crc /
+        manifest check (disk rot on the most recent write must not strand
+        a crash-recovering coordinator when older intact steps exist);
+        an explicit ``step`` disables the walk-back."""
+        if step is None and fallback:
+            last_err: Optional[Exception] = None
+            for s in reversed(self.all_steps()):
+                try:
+                    return self._restore_step(tree_like, s, shardings)
+                except (IOError, OSError, ValueError, KeyError) as e:
+                    last_err = e
+            if last_err is not None:
+                raise IOError(
+                    f"every checkpoint step failed to restore; newest "
+                    f"error: {last_err}") from last_err
+            raise AssertionError("no checkpoint found")
         if step is None:
             step = self.latest_step()
         assert step is not None, "no checkpoint found"
+        return self._restore_step(tree_like, step, shardings)
+
+    def _restore_step(self, tree_like: Any, step: int,
+                      shardings: Any = None) -> Tuple[Any, Dict]:
         d = self.dir / f"step_{step:08d}"
         manifest = json.loads((d / "manifest.json").read_text())
         leaves_like, treedef = _flatten_with_paths(tree_like)

@@ -9,8 +9,10 @@ not a single-process shard_map. This package closes that gap:
   * :mod:`transport`   — length-prefixed socket framing + byte counters;
   * :mod:`reduction`   — per-iteration contribution container and the
                          tree-reduce topology;
-  * :mod:`membership`  — worker registry, heartbeats, block ownership
-                         and reassignment plans;
+  * :mod:`membership`  — worker registry, heartbeats, block ownership,
+                         reassignment and rebalance plans;
+  * :mod:`chaos`       — seeded, deterministic fault injection (wire /
+                         process / membership faults) for DESIGN.md §13;
   * :mod:`worker`      — the worker process: owns store row blocks, runs
                          the fused iteration body, ships reductions;
   * :mod:`coordinator` — the solver node: global x-update, broadcast,
@@ -23,9 +25,12 @@ pays for the cluster machinery.
 from repro.cluster import compress  # noqa: F401  (eager: core.distributed)
 
 _LAZY = {
+    "ChaosSchedule": "repro.cluster.chaos",
     "ClusterConfig": "repro.cluster.coordinator",
     "ClusterCoordinator": "repro.cluster.coordinator",
     "ClusterResult": "repro.cluster.coordinator",
+    "DegradePolicy": "repro.cluster.coordinator",
+    "FaultInjector": "repro.cluster.chaos",
     "cluster_solve": "repro.cluster.coordinator",
     "cluster_stats": "repro.cluster.coordinator",
 }

@@ -50,7 +50,8 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.cluster import compress
-from repro.cluster.membership import Membership, WorkerInfo
+from repro.cluster.chaos import ChaosSchedule, FaultInjector
+from repro.cluster.membership import DeadCluster, Membership, WorkerInfo
 from repro.cluster.reduction import Contribution, TreeTopology, decode
 from repro.cluster.transport import (
     ByteCounter,
@@ -72,6 +73,37 @@ BROADCAST_TAGS = ("iter",)
 
 class ClusterError(RuntimeError):
     pass
+
+
+@dataclasses.dataclass
+class DegradePolicy:
+    """Graceful degradation instead of an indefinite hang (DESIGN.md §13).
+
+    ``iter_deadline_s`` bounds how long one iteration may wait for its
+    reduction. On expiry the coordinator first RETRIES (strict mode:
+    reset the accumulator and re-broadcast — survivors answer from their
+    cached contributions, so a lost/dropped message costs one cheap
+    round trip; staleness mode: relax the quorum to ``min_quorum`` and
+    the bound to ``max_staleness`` for that round). After
+    ``deadline_retries`` fruitless extensions — or when deaths shrink
+    the live set below ``min_quorum`` of the spawned workers — the solve
+    STOPS and returns the best-so-far x with ``status="degraded"``
+    rather than hanging forever. Without a policy the previous behavior
+    (wait indefinitely, raise on total death) is unchanged."""
+
+    iter_deadline_s: float = 60.0
+    deadline_retries: int = 2
+    min_quorum: float = 0.25
+    max_staleness: int = 8
+
+    def __post_init__(self):
+        if not 0.0 < self.min_quorum <= 1.0:
+            raise ValueError(
+                f"min_quorum must be in (0, 1], got {self.min_quorum}")
+        if self.iter_deadline_s <= 0:
+            raise ValueError("iter_deadline_s must be positive")
+        if self.deadline_retries < 0 or self.max_staleness < 0:
+            raise ValueError("retries/staleness must be >= 0")
 
 
 @dataclasses.dataclass
@@ -99,6 +131,17 @@ class ClusterConfig:
                                          # telemetry.jsonl (DESIGN.md §12)
     worker_overrides: Dict[int, dict] = dataclasses.field(
         default_factory=dict)
+    port: int = 0                        # fixed listen port (0 = OS pick);
+                                         # a relaunched coordinator reuses
+                                         # the old port so workers find it
+    spawn: bool = True                   # False: adopt re-registering
+                                         # workers instead of spawning
+                                         # (the coordinator-relaunch path)
+    degrade: Optional[DegradePolicy] = None
+    chaos: Optional[object] = None       # ChaosSchedule or its spec string
+    reconnect: Optional[dict] = None     # worker self-heal knobs shipped
+                                         # in every worker config, e.g.
+                                         # {"retries": 8, "backoff_s": 0.3}
 
     def __post_init__(self):
         if self.staleness > 0 and self.checkpoint_every > 0:
@@ -112,6 +155,11 @@ class ClusterConfig:
                 "at a single consistent iteration")
         if not 0.0 < self.quorum <= 1.0:
             raise ValueError(f"quorum must be in (0, 1], got {self.quorum}")
+        if isinstance(self.chaos, str):
+            self.chaos = ChaosSchedule.parse(self.chaos)
+        if not self.spawn and self.n_workers < 1:
+            raise ValueError("spawn=False still needs n_workers >= 1 "
+                             "expected re-registrations")
 
 
 @dataclasses.dataclass
@@ -121,6 +169,7 @@ class ClusterResult:
     converged: bool
     history: Optional[dict]              # objective/primal_res/dual_res lists
     telemetry: dict
+    status: str = "ok"                   # converged | max_iters | degraded
 
 
 class ClusterCoordinator:
@@ -144,7 +193,7 @@ class ClusterCoordinator:
         self.obs = Observability(dir=self.cfg.obs_dir,
                                  process_name="coordinator")
         self.counter = ByteCounter(registry=self.obs.registry)
-        self.listener = Listener()
+        self.listener = Listener(port=self.cfg.port)
         self._events: "queue.Queue" = queue.Queue()
         self._epoch = 0
         self._topology: Optional[TreeTopology] = None
@@ -159,6 +208,24 @@ class ClusterCoordinator:
         self._iters_run = 0
         self._retries = 0
         self._shutdown_result: Optional[dict] = None
+        # elasticity / chaos / degradation state (DESIGN.md §13)
+        self._procs: Dict[int, object] = {}        # every spawned Process
+        self._pending_joins: List[Tuple[int, dict]] = []
+        self._join_t0: Dict[int, float] = {}       # wid -> register time
+        self._joins = 0
+        self._accept_stop = threading.Event()
+        self._accept_thread: Optional[threading.Thread] = None
+        self._recovery_log: List[dict] = []        # closed events
+        self._open_recovery: List[dict] = []       # awaiting next collect
+        self._degraded_rounds = 0
+        self._status = "ok"
+        self._crashed = False
+        sched: Optional[ChaosSchedule] = self.cfg.chaos
+        self._chaos_spec = sched.to_spec() if sched is not None else None
+        self._chaos_joins = list(sched.for_kind("join")) if sched else []
+        inj_events = sched.for_target("coord") if sched else ()
+        self._coord_injector = (FaultInjector(inj_events)
+                                if inj_events else None)
 
     # -- lifecycle ----------------------------------------------------------
     def __enter__(self):
@@ -176,33 +243,52 @@ class ClusterCoordinator:
                "heartbeat_interval": self.cfg.heartbeat_interval_s,
                "limit_threads": self.cfg.limit_threads,
                "jax_platforms": self.cfg.jax_platforms,
-               "obs": bool(self.cfg.obs_dir)}
+               "obs": bool(self.cfg.obs_dir),
+               "chaos": self._chaos_spec,
+               "reconnect": self.cfg.reconnect}
         cfg.update(self.cfg.worker_overrides.get(wid, {}))
         return cfg
 
-    def start(self):
-        """Spawn workers, collect registrations, assign blocks."""
+    def spawn_worker(self, wid: Optional[int] = None) -> int:
+        """Launch one worker process against this coordinator's port —
+        used at startup, by scheduled chaos ``join`` events, and by
+        anything else that wants to grow the cluster mid-solve. The
+        worker registers itself; the register lands in the event queue
+        and (mid-solve) becomes a pending join."""
         import multiprocessing as mp
+        ctx = mp.get_context("spawn")
+        if wid is None:
+            taken = set(self._procs) | set(self.members.workers)
+            wid = max(taken, default=-1) + 1
+        host, port = self.listener.address
+        p = ctx.Process(target=worker_entry,
+                        args=(wid, host, port, self._worker_config(wid)),
+                        daemon=True)
+        p.start()
+        self._procs[wid] = p
+        return wid
+
+    def start(self):
+        """Spawn workers (or, with ``spawn=False``, wait for the old
+        ones to re-register), collect registrations, assign blocks."""
         if self._started:
             return
-        ctx = mp.get_context("spawn")
-        host, port = self.listener.address
-        procs = {}
-        for wid in range(self.cfg.n_workers):
-            p = ctx.Process(target=worker_entry,
-                            args=(wid, host, port, self._worker_config(wid)),
-                            daemon=True)
-            p.start()
-            procs[wid] = p
+        self._accept_thread = threading.Thread(target=self._accept_loop,
+                                               daemon=True)
+        self._accept_thread.start()
+        if self.cfg.spawn:
+            for wid in range(self.cfg.n_workers):
+                self.spawn_worker(wid)
         try:
-            self._await_registrations(procs)
+            self._await_registrations()
         except BaseException:
             # a failed start must not leak spawned processes into a
             # long-lived host (daemon=True only reaps at interpreter
             # exit) — __exit__ never runs when __enter__ raises
-            for p in procs.values():
+            for p in self._procs.values():
                 if p.is_alive():
                     p.terminate()
+            self._accept_stop.set()
             self.listener.close()
             raise
         plan = self.members.initial_assignment(self.store.nblocks)
@@ -211,44 +297,86 @@ class ClusterCoordinator:
         self._broadcast_topology()
         self._started = True
 
-    def _await_registrations(self, procs):
-        deadline = time.monotonic() + self.cfg.register_timeout_s
-        while len(self.members.workers) < self.cfg.n_workers:
-            conn = self.listener.accept(timeout=1.0, counter=self.counter)
+    def _accept_loop(self):
+        """Persistent accept thread: reads each new connection's first
+        frame (the registration) and posts it into the event queue. This
+        is what makes joins possible MID-solve — registration is no
+        longer a startup-only phase."""
+        while not self._accept_stop.is_set():
+            try:
+                conn = self.listener.accept(timeout=0.5,
+                                            counter=self.counter)
+            except OSError:
+                return                   # listener closed: shutdown/crash
             if conn is None:
-                dead_early = [w for w, p in procs.items()
-                              if not p.is_alive()
-                              and w not in self.members.workers]
-                if dead_early:
-                    raise ClusterError(
-                        f"workers {dead_early} exited before registering "
-                        "(exitcodes "
-                        f"{[procs[w].exitcode for w in dead_early]}); if "
-                        "launching from a script, guard the entry point "
-                        "with `if __name__ == '__main__':` — the spawn "
-                        "start method re-imports __main__")
-                if time.monotonic() > deadline:
-                    raise ClusterError(
-                        f"only {len(self.members.workers)} of "
-                        f"{self.cfg.n_workers} workers registered in "
-                        f"{self.cfg.register_timeout_s:.0f}s")
                 continue
-            msg = conn.recv(timeout=30.0)
+            try:
+                msg = conn.recv(timeout=30.0)
+            except ConnectionClosed:
+                conn.close()
+                continue
             if msg is None or msg.get("type") != "register":
                 conn.close()
                 continue
-            wid = int(msg["wid"])
-            if msg["store_fingerprint"] != self.store.fingerprint:
+            msg["_conn"] = conn
+            self._events.put((int(msg["wid"]), msg))
+
+    def _admit(self, wid: int, msg, strict: bool = True) -> bool:
+        """Turn a register message into a live member + receiver thread.
+        ``strict`` raises on a store-fingerprint mismatch (startup);
+        mid-solve joins reject the bad joiner instead of killing a
+        healthy solve."""
+        conn = msg["_conn"]
+        if msg["store_fingerprint"] != self.store.fingerprint:
+            if strict:
                 raise ClusterError(
                     f"worker {wid} opened a store with fingerprint "
                     f"{msg['store_fingerprint'][:12]}… != coordinator's "
                     f"{self.store.fingerprint[:12]}…")
-            info = WorkerInfo(wid=wid, conn=conn,
-                              peer_addr=tuple(msg["peer_addr"]),
-                              process=procs.get(wid))
-            self.members.add(info)
-            threading.Thread(target=self._rx, args=(wid, conn),
-                             daemon=True).start()
+            conn.close()
+            return False
+        old = self.members.workers.get(wid)
+        if old is not None and old.alive:
+            # a rejoining wid the failure detector has not retired yet:
+            # retire the stale incarnation first (its blocks respread)
+            self._mark_and_recover([wid], None, None)
+        info = WorkerInfo(wid=wid, conn=conn,
+                          peer_addr=tuple(msg["peer_addr"]),
+                          process=self._procs.get(wid))
+        if self._coord_injector is not None:
+            conn.chaos = self._coord_injector
+        self.members.add(info)
+        threading.Thread(target=self._rx, args=(wid, conn),
+                         daemon=True).start()
+        return True
+
+    def _await_registrations(self):
+        expected = self.cfg.n_workers
+        deadline = time.monotonic() + self.cfg.register_timeout_s
+        while len(self.members.workers) < expected:
+            dead_early = [w for w, p in self._procs.items()
+                          if not p.is_alive()
+                          and w not in self.members.workers]
+            if dead_early:
+                raise ClusterError(
+                    f"workers {dead_early} exited before registering "
+                    "(exitcodes "
+                    f"{[self._procs[w].exitcode for w in dead_early]}); if "
+                    "launching from a script, guard the entry point "
+                    "with `if __name__ == '__main__':` — the spawn "
+                    "start method re-imports __main__")
+            if time.monotonic() > deadline:
+                raise ClusterError(
+                    f"only {len(self.members.workers)} of "
+                    f"{expected} workers registered in "
+                    f"{self.cfg.register_timeout_s:.0f}s")
+            try:
+                wid, msg = self._events.get(timeout=1.0)
+            except queue.Empty:
+                continue
+            if msg is None or msg.get("type") != "register":
+                continue                 # stale obituary pre-membership
+            self._admit(int(msg["wid"]), msg, strict=True)
 
     def shutdown(self) -> dict:
         """Stop workers, fold their byte counters in, reap processes.
@@ -291,19 +419,55 @@ class ClusterCoordinator:
                             process_name=f"worker-{wid}",
                             pid=msg.get("pid"))
                 waiting.discard(wid)
+        self._accept_stop.set()
         for w in self.members.workers.values():
-            if w.process is not None:
-                w.process.join(timeout=5.0)
-                if w.process.is_alive():
-                    w.process.terminate()
             if w.conn is not None:
                 w.conn.close()
+        for p in self._procs.values():
+            if p is None:
+                continue
+            p.join(timeout=5.0)
+            if p.is_alive():
+                p.terminate()            # SIGTERM first...
+                p.join(timeout=2.0)
+            if p.is_alive():
+                # ...but a SIGSTOPped worker holds SIGTERM pending
+                # forever; SIGKILL is the only reaper that works on a
+                # stopped process
+                p.kill()
+                p.join(timeout=2.0)
         self.listener.close()
         self._started = False
         self._shutdown_result = {"coordinator": self.counter.snapshot(),
                                  "workers": worker_counters.snapshot()}
         self.obs.finish()
         return self._shutdown_result
+
+    def crash(self):
+        """Abandon the cluster WITHOUT the shutdown handshake — the
+        test harness's stand-in for a coordinator process dying. Every
+        link drops (workers with ``reconnect`` configured start dialing
+        the port back); worker processes are left running and tracked so
+        a relaunched coordinator on the same port can adopt them (pass
+        the handles via ``adopt_processes``)."""
+        self._crashed = True
+        self._accept_stop.set()
+        self.listener.close()
+        for w in self.members.workers.values():
+            if w.conn is not None:
+                try:
+                    w.conn.close()
+                except OSError:
+                    pass
+        self._started = False
+        self._shutdown_result = {"coordinator": self.counter.snapshot(),
+                                 "workers": {}}
+
+    def adopt_processes(self, procs: Dict[int, object]):
+        """Give a relaunched coordinator the previous incarnation's
+        process handles so its shutdown can reap them."""
+        for wid, p in procs.items():
+            self._procs.setdefault(wid, p)
 
     # -- plumbing -----------------------------------------------------------
     def _rx(self, wid: int, conn):
@@ -368,11 +532,31 @@ class ClusterCoordinator:
     # -- failure handling ---------------------------------------------------
     def _mark_and_recover(self, dead_wids, current_iter: Optional[int],
                           x_k: Optional[np.ndarray]):
-        orphans = set()
-        for wid in dead_wids:
-            orphans |= self.members.mark_dead(wid)
-        if not orphans and not dead_wids:
+        # duplicate death events are routine (EOF from the receiver
+        # thread AND a failed send both post one): only newly-dead wids
+        # trigger recovery, or every duplicate would cost an epoch bump
+        # and an iteration retry
+        newly = [wid for wid in dead_wids
+                 if (w := self.members.workers.get(wid)) is not None
+                 and w.alive]
+        if not newly:
             return
+        orphans = set()
+        for wid in newly:
+            w = self.members.workers[wid]
+            if w.conn is not None:
+                # sever the link: a live-but-retired worker (blown
+                # deadline, zombie incarnation) sees its sends fail and
+                # — with reconnect configured — comes back as a join
+                try:
+                    w.conn.close()
+                except OSError:
+                    pass
+            orphans |= self.members.mark_dead(wid)
+        self._open_recovery.append({
+            "kind": "death", "wids": list(newly),
+            "iter": current_iter, "blocks_moved": len(orphans),
+            "t0": time.monotonic()})
         plan = self.members.reassignment_plan(sorted(orphans))
         # replay target: the state BEFORE the in-flight iteration — the
         # retry (strict) or the next broadcast (staleness) advances the
@@ -382,7 +566,7 @@ class ClusterCoordinator:
         for wid, blocks in plan.items():
             self._send_assign(wid, blocks, upto_iter=upto)
         if self.cfg.staleness > 0:
-            for wid in dead_wids:
+            for wid in newly:
                 self._latest.pop(wid, None)
             return                       # star: epoch stays, late msgs fold
         self._epoch += 1
@@ -390,6 +574,80 @@ class ClusterCoordinator:
         if current_iter is not None:
             self._retries += 1
             self._broadcast_iter(current_iter, x_k)
+
+    # -- elastic membership -------------------------------------------------
+    def _spawn_due_joins(self, k: int):
+        """Fire scheduled chaos ``join`` events whose iteration is due:
+        spawn the worker process now; its registration arrives whenever
+        process + jax startup completes and is applied at a later
+        iteration boundary by :meth:`_apply_joins`."""
+        due = [e for e in self._chaos_joins if e.iteration <= k]
+        for e in due:
+            self._chaos_joins.remove(e)
+            wid = int(e.target.lstrip("w")) if e.target.startswith("w") \
+                else None
+            self.spawn_worker(wid)
+
+    def _apply_joins(self):
+        """Fold pending registrations into the membership at an
+        iteration boundary: admit, level block load off the most-loaded
+        survivors (``Membership.rebalance_plan``), ship the base state +
+        x-history so joiners replay to the last COMPLETED iteration, and
+        rebuild the topology under a new epoch — the same machinery the
+        death path uses, pointed the other way."""
+        if not self._pending_joins:
+            return
+        joins, self._pending_joins = self._pending_joins, []
+        admitted = []
+        for wid, msg in joins:
+            if self._admit(wid, msg, strict=False):
+                admitted.append(wid)
+        if not admitted:
+            return
+        upto = self._base_iter + len(self._x_hist)   # last completed iter
+        gains, losses = self.members.rebalance_plan()
+        moved = 0
+        for wid in set(gains) | set(losses):
+            g = set(gains.get(wid, ()))
+            l = set(losses.get(wid, ()))
+            net_loss = sorted(l - g)
+            if net_loss:
+                self._send(wid, "unassign", blocks=net_loss)
+            net_gain = sorted(g - l)
+            if net_gain:
+                self._send_assign(wid, net_gain, upto_iter=upto)
+                moved += len(net_gain)
+        if self.cfg.staleness > 0:
+            # donors' cached reductions still cover their OLD blocks;
+            # merging them alongside the joiner's fresh ones would
+            # double-count the moved rows — everyone touched must
+            # contribute fresh before being counted again
+            for wid in set(gains) | set(losses):
+                self._latest.pop(wid, None)
+        self._joins += len(admitted)
+        self._epoch += 1
+        self._broadcast_topology()
+        now = time.monotonic()
+        for wid in admitted:
+            t0 = self._join_t0.pop(wid, now)
+            self._open_recovery.append({
+                "kind": "join", "wid": wid, "iter": upto,
+                "blocks_moved": moved, "t0": t0,
+                "register_to_assign_s": round(now - t0, 3)})
+
+    def _close_recovery(self, k: int):
+        """A collect for iteration k completed with full coverage — any
+        open death/join recovery is now proven healed; stamp durations
+        into the log (the benchmark's time-to-recover / join-to-
+        contributing metrics)."""
+        if not self._open_recovery:
+            return
+        now = time.monotonic()
+        for e in self._open_recovery:
+            e["recovered_at_iter"] = k
+            e["recover_s"] = round(now - e.pop("t0"), 3)
+            self._recovery_log.append(e)
+        self._open_recovery = []
 
     def _poll_failures(self) -> List[int]:
         """Heartbeat-age check. MUST run on every wait-loop pass, not
@@ -414,7 +672,14 @@ class ClusterCoordinator:
         if t == "error":
             raise ClusterError(
                 f"worker {wid} failed:\n{msg['traceback']}")
-        if t in ("assigned", "bye"):
+        if t == "register":
+            # a mid-solve join (fresh worker or a self-healed one
+            # re-registering): queue it — membership only changes at
+            # iteration boundaries, where the epoch bump is safe
+            self._pending_joins.append((wid, msg))
+            self._join_t0.setdefault(wid, time.monotonic())
+            return None
+        if t in ("assigned", "unassigned", "bye"):
             return None
         return (wid, msg)
 
@@ -525,8 +790,15 @@ class ClusterCoordinator:
         t0 = time.monotonic()
         prev_wire = self.counter.snapshot() if self.obs.enabled else None
         while k < max_iters and not converged:
+            # membership grows only at iteration boundaries: spawn any
+            # chaos-scheduled joiners, then fold completed registrations
+            # in (rebalance + epoch bump) before broadcasting k+1
+            self._spawn_due_joins(k + 1)
+            self._apply_joins()
             k += 1
             t_it = time.perf_counter()
+            if self._coord_injector is not None:
+                self._coord_injector.set_iteration(k)
             with self.obs.span("x_solve", k=k):
                 x = np.asarray(gram_lib.gram_solve(L, jnp.asarray(d)),
                                np.float32)
@@ -536,6 +808,12 @@ class ClusterCoordinator:
             with self.obs.span("collect", k=k):
                 total = (self._collect_stale(k) if self.cfg.staleness > 0
                          else self._collect_strict(k, x))
+            if total is None:
+                # DegradePolicy exhausted: stop with the best-so-far x
+                # (the newest broadcast) instead of hanging forever
+                self._status = "degraded"
+                break
+            self._close_recovery(k)
             d = total.d.astype(np.float32)
             r = float(np.sqrt(total.scalars["r_sq"]))
             s = self.tau * float(np.linalg.norm(total.w))
@@ -571,45 +849,87 @@ class ClusterCoordinator:
                     and k % self.cfg.checkpoint_every == 0):
                 self._checkpoint(manager, k, x, d)
         self._iters_run += k - k0
+        if self._status != "degraded":
+            self._status = "converged" if converged else "max_iters"
         history = ({"objective": objs, "primal_res": rs, "dual_res": ss}
                    if record else None)
         return ClusterResult(x=x, iters=k, converged=converged,
                              history=history,
                              telemetry=self._telemetry(k - k0,
-                                                       time.monotonic() - t0))
+                                                       time.monotonic() - t0),
+                             status=self._status)
+
+    def _below_min_quorum(self) -> bool:
+        pol = self.cfg.degrade
+        if pol is None:
+            return False
+        floor = max(1, int(np.ceil(pol.min_quorum * self.cfg.n_workers)))
+        return len(self.members.alive()) < floor
 
     # -- collection: strict (tree) ------------------------------------------
-    def _collect_strict(self, k: int, x_k: np.ndarray) -> Contribution:
+    def _collect_strict(self, k: int, x_k: np.ndarray
+                        ) -> Optional[Contribution]:
         """Wait for full coverage of iteration k at the current epoch;
         recover + retry on any death. In tree mode that is ONE message
-        (the root's merged partial) per attempt."""
+        (the root's merged partial) per attempt. With a
+        :class:`DegradePolicy`, a blown per-iteration deadline first
+        RETRIES (reset + re-broadcast: recovers dropped/corrupted
+        messages for one cheap cached-answer round trip) and then gives
+        up — returning None, which the solve loop reports as
+        ``degraded`` — instead of waiting forever."""
+        pol = self.cfg.degrade
+        deadline = (time.monotonic() + pol.iter_deadline_s
+                    if pol is not None else None)
+        rebroadcasts = 0
         acc = Contribution.zero(k, self.store.n)
         seen: set = set()
         while True:
-            dead = self._poll_failures()
-            if dead:
+            if deadline is not None and time.monotonic() > deadline:
+                if rebroadcasts >= pol.deadline_retries:
+                    return None
+                rebroadcasts += 1
+                self._retries += 1
+                self._recovery_log.append({
+                    "kind": "deadline_retry", "iter": k,
+                    "attempt": rebroadcasts})
                 acc = Contribution.zero(k, self.store.n)
                 seen = set()
-                self._mark_and_recover(dead, k, x_k)
+                deadline = time.monotonic() + pol.iter_deadline_s
+                self._broadcast_iter(k, x_k)
             try:
-                wid, msg = self._events.get(
-                    timeout=self.cfg.heartbeat_interval_s)
-            except queue.Empty:
-                continue
-            ev = self._handle_common(wid, msg)
-            if ev is None:
-                continue
-            wid, msg = ev
-            if msg is None:
-                acc = Contribution.zero(k, self.store.n)
-                seen = set()
-                self._mark_and_recover([wid], k, x_k)
-                continue
+                dead = self._poll_failures()
+                if dead:
+                    acc = Contribution.zero(k, self.store.n)
+                    seen = set()
+                    self._mark_and_recover(dead, k, x_k)
+                if self._below_min_quorum():
+                    return None
+                try:
+                    wid, msg = self._events.get(
+                        timeout=self.cfg.heartbeat_interval_s)
+                except queue.Empty:
+                    continue
+                ev = self._handle_common(wid, msg)
+                if ev is None:
+                    continue
+                wid, msg = ev
+                if msg is None:
+                    acc = Contribution.zero(k, self.store.n)
+                    seen = set()
+                    self._mark_and_recover([wid], k, x_k)
+                    continue
+            except DeadCluster:
+                if pol is not None:
+                    return None          # degraded beats an exception
+                raise
             if msg.get("type") != "contrib":
                 continue
             if msg["epoch"] != self._epoch:
                 continue                 # partial of a dead topology
-            c = decode(msg["payload"])
+            try:
+                c = decode(msg["payload"])
+            except ValueError:
+                continue                 # malformed: the retry recovers it
             if c.iteration != k or set(c.workers) & seen:
                 continue
             self.members.beat(wid)
@@ -621,33 +941,72 @@ class ClusterCoordinator:
                 return acc
 
     # -- collection: bounded staleness (star) -------------------------------
-    def _collect_stale(self, k: int) -> Contribution:
+    def _collect_stale(self, k: int) -> Optional[Contribution]:
         """Proceed once >= quorum of live workers contributed at k and
         nobody lags more than ``staleness``; absent workers are
         represented by their newest cached reduction (replaced — not
-        lost — when the late message lands)."""
+        lost — when the late message lands). With a
+        :class:`DegradePolicy`, a blown deadline RELAXES the round to
+        (min_quorum, max_staleness) — counting only workers that have
+        contributed at all — and a second blown deadline returns None
+        (degraded)."""
         S, q = self.cfg.staleness, self.cfg.quorum
+        pol = self.cfg.degrade
+        deadline = (time.monotonic() + pol.iter_deadline_s
+                    if pol is not None else None)
+        relaxed = False
         while True:
             alive = self.members.alive_ids()
-            fresh = sum(1 for w in alive
-                        if self._latest.get(w) is not None
-                        and self._latest[w].iteration == k)
-            oldest = min((self._latest[w].iteration
-                          for w in alive if self._latest.get(w)),
+            haves = [w for w in alive if self._latest.get(w) is not None]
+            fresh = sum(1 for w in haves
+                        if self._latest[w].iteration == k)
+            oldest = min((self._latest[w].iteration for w in haves),
                          default=0)
-            have_any = all(self._latest.get(w) is not None for w in alive)
-            if (have_any and fresh >= max(1, int(np.ceil(q * len(alive))))
-                    and oldest >= k - S):
+            if relaxed:
+                # degraded round: merge whoever has EVER contributed,
+                # provided a min_quorum of them is fresh and none of
+                # them is older than the widened bound
+                satisfied = (haves
+                             and fresh >= max(1, int(np.ceil(
+                                 pol.min_quorum * len(alive))))
+                             and oldest >= k - pol.max_staleness)
+                merge_over = haves
+            else:
+                satisfied = (len(haves) == len(alive)
+                             and fresh >= max(1, int(np.ceil(
+                                 q * len(alive))))
+                             and oldest >= k - S)
+                merge_over = alive
+            if satisfied:
+                if relaxed:
+                    self._degraded_rounds += 1
                 acc = Contribution.zero(k, self.store.n)
-                for w in alive:
+                for w in merge_over:
                     # stale entries merge AS IF current — the (bounded)
                     # inexactness the mode accepts by construction
                     acc = acc.merge(dataclasses.replace(
                         self._latest[w], iteration=k))
                 return acc
-            dead = self._poll_failures()
-            if dead:
-                self._mark_and_recover(dead, k, None)
+            if deadline is not None and time.monotonic() > deadline:
+                if relaxed:
+                    return None
+                relaxed = True
+                self._recovery_log.append({
+                    "kind": "quorum_relax", "iter": k,
+                    "min_quorum": pol.min_quorum,
+                    "max_staleness": pol.max_staleness})
+                deadline = time.monotonic() + pol.iter_deadline_s
+                continue
+            try:
+                dead = self._poll_failures()
+                if dead:
+                    self._mark_and_recover(dead, k, None)
+                if self._below_min_quorum():
+                    return None
+            except DeadCluster:
+                if pol is not None:
+                    return None
+                raise
             try:
                 wid, msg = self._events.get(
                     timeout=self.cfg.heartbeat_interval_s)
@@ -658,11 +1017,19 @@ class ClusterCoordinator:
                 continue
             wid, msg = ev
             if msg is None:
-                self._mark_and_recover([wid], k, None)
+                try:
+                    self._mark_and_recover([wid], k, None)
+                except DeadCluster:
+                    if pol is not None:
+                        return None
+                    raise
                 continue
             if msg.get("type") != "contrib":
                 continue
-            c = decode(msg["payload"])
+            try:
+                c = decode(msg["payload"])
+            except ValueError:
+                continue
             w = c.workers[0]
             prev = self._latest.get(w)
             if prev is None or c.iteration > prev.iteration:
@@ -726,7 +1093,10 @@ class ClusterCoordinator:
                 "y": np.zeros((self.store.m,), np.float32),
                 "lam": np.zeros((self.store.m,), np.float32),
                 "d": np.zeros((self.store.n,), np.float32)}
-        tree, extra = manager.restore(like)
+        # fallback=True: a relaunched coordinator recovering from a crash
+        # must not be stopped by one corrupt newest step when an older
+        # intact checkpoint exists
+        tree, extra = manager.restore(like, fallback=True)
         if extra.get("kind") != "cluster_solve":
             raise ClusterError(f"not a cluster checkpoint: {extra}")
         if extra.get("store_fingerprint") != self.store.fingerprint:
@@ -784,12 +1154,32 @@ class ClusterCoordinator:
                            for t in REDUCTION_TAGS)
         bcast_tx = sum(coord["sent_bytes"].get(t, 0)
                        for t in BROADCAST_TAGS)
+        deaths_rec = [e for e in self._recovery_log
+                      if e["kind"] == "death"]
+        joins_rec = [e for e in self._recovery_log if e["kind"] == "join"]
         return {
             "workers_spawned": self.cfg.n_workers,
             "workers_alive": len(self.members.alive()),
             "deaths": list(self.members.deaths),
             "blocks_reassigned": self.members.reassignments,
             "iteration_retries": self._retries,
+            "status": self._status,
+            "joins": self._joins,
+            "blocks_rebalanced": self.members.rebalances,
+            "degraded_rounds": self._degraded_rounds,
+            "chaos_spec": self._chaos_spec,
+            "chaos_seed": (self.cfg.chaos.seed
+                           if self.cfg.chaos is not None else None),
+            "recovery": {
+                "events": list(self._recovery_log),
+                "time_to_recover_s": (
+                    round(max(e["recover_s"] for e in deaths_rec), 3)
+                    if deaths_rec else None),
+                "iterations_retried": self._retries,
+                "join_to_contributing_s": (
+                    round(max(e["recover_s"] for e in joins_rec), 3)
+                    if joins_rec else None),
+            },
             "iters": iters,
             "wall_s": round(wall_s, 3),
             "epoch": self._epoch,

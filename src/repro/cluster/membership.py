@@ -47,6 +47,7 @@ class Membership:
         self.workers: Dict[int, WorkerInfo] = {}
         self.deaths: List[int] = []          # wids, in death order
         self.reassignments: int = 0          # blocks moved post-death
+        self.rebalances: int = 0             # blocks moved post-join
 
     # -- registry ----------------------------------------------------------
     def add(self, info: WorkerInfo):
@@ -118,6 +119,36 @@ class Membership:
             plan.setdefault(w.wid, []).append(b)
             self.reassignments += 1
         return plan
+
+    def rebalance_plan(self) -> "tuple[Dict[int, List[int]], Dict[int, List[int]]]":
+        """Level block load across the live set — the dual of
+        :meth:`reassignment_plan`, run when a worker JOINS mid-solve:
+        blocks migrate one at a time from the most-loaded survivor to
+        the least-loaded worker (the empty joiner) until every pair of
+        loads is within one block. Returns ``(gains, losses)`` keyed by
+        wid. Deterministic: ties break toward the smaller wid and the
+        highest block index moves first. Exactness is the
+        partition-insensitivity argument (PAPERS.md, Wu et al. 2024) —
+        the solve's answer does not depend on which worker holds which
+        rows, so ownership can move between iterations freely; the new
+        owner reconstructs iterates by x-history replay."""
+        live = self.alive()
+        if not live:
+            raise DeadCluster("no live workers to rebalance over")
+        gains: Dict[int, List[int]] = {}
+        losses: Dict[int, List[int]] = {}
+        while True:
+            donor = max(live, key=lambda w: (len(w.blocks), -w.wid))
+            recip = min(live, key=lambda w: (len(w.blocks), w.wid))
+            if len(donor.blocks) - len(recip.blocks) <= 1:
+                break
+            b = max(donor.blocks)
+            donor.blocks.discard(b)
+            recip.blocks.add(b)
+            gains.setdefault(recip.wid, []).append(b)
+            losses.setdefault(donor.wid, []).append(b)
+            self.rebalances += 1
+        return gains, losses
 
     def coverage(self) -> Set[int]:
         out: Set[int] = set()

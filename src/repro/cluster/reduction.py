@@ -101,17 +101,35 @@ def encode(c: Contribution, compressed: bool,
 
 
 def decode(payload: dict) -> Contribution:
-    n = payload["n"]
-    if payload["compressed"]:
-        q, s = payload["q"], payload["s"]
-        d, w, v = (np.asarray(compress.dequantize_int8(q[i], s[i], n))
-                   for i in range(3))
-    else:
-        d, w, v = payload["dwv"]
-    return Contribution(iteration=payload["iteration"],
-                        workers=tuple(payload["workers"]),
-                        rows=payload["rows"], d=d, w=w, v=v,
-                        scalars=dict(payload["scalars"]))
+    """Inverse of :func:`encode`, with strict shape validation: a frame
+    that unpickles but carries a malformed contribution (chaos-corrupted
+    or truncated) must surface as ``ValueError`` here — which receivers
+    treat like a dead link — never as a silently wrong reduction."""
+    try:
+        n = int(payload["n"])
+        iteration = int(payload["iteration"])
+        rows = int(payload["rows"])
+        workers = tuple(int(w) for w in payload["workers"])
+        scalars = {k: float(payload["scalars"][k]) for k in SCALARS}
+        if payload["compressed"]:
+            q, s = payload["q"], payload["s"]
+            if q.shape[0] != 3 or s.shape[0] != 3:
+                raise ValueError(f"bad q/s stack {q.shape}/{s.shape}")
+            d, w, v = (np.asarray(compress.dequantize_int8(q[i], s[i], n))
+                       for i in range(3))
+        else:
+            dwv = np.asarray(payload["dwv"], np.float32)
+            if dwv.shape != (3, n):
+                raise ValueError(f"bad dwv shape {dwv.shape} for n={n}")
+            d, w, v = dwv
+        if d.shape != (n,) or rows < 0 or iteration < 0:
+            raise ValueError("inconsistent contribution fields")
+    except ValueError:
+        raise
+    except Exception as e:
+        raise ValueError(f"malformed contribution payload: {e}") from e
+    return Contribution(iteration=iteration, workers=workers,
+                        rows=rows, d=d, w=w, v=v, scalars=scalars)
 
 
 @dataclasses.dataclass(frozen=True)

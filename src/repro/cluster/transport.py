@@ -22,14 +22,29 @@ endpoint — do not expose the listener beyond hosts you control.
 from __future__ import annotations
 
 import pickle
+import random
 import socket
 import struct
 import threading
+import time
 from typing import Optional, Tuple
 
 from repro.obs.metrics import MetricsRegistry
 
 _LEN = struct.Struct(">Q")
+
+# A corrupted (or hostile) 8-byte header must not drive _recv_exact into
+# an arbitrary multi-GB allocation: any decoded frame length above this
+# cap is treated as a desynchronized/corrupt stream and the connection
+# dies. Real frames are n-vector contributions and x broadcasts — MBs at
+# the very largest — so 1 GiB is generous by orders of magnitude.
+MAX_FRAME_BYTES = 1 << 30
+
+# Once the first header byte has arrived the peer is mid-send and the
+# rest of the frame is read under this completion deadline rather than
+# fully blocking: a peer SIGSTOPped mid-send (socket open, stream
+# frozen) must not pin the receiver thread forever.
+FRAME_DEADLINE_S = 120.0
 
 # registry series the counter writes: transport.{tx,rx}_{bytes,msgs}
 # labelled by message type — the wire-accounting schema every other
@@ -85,12 +100,23 @@ class Connection:
     stay single-threaded per connection (one receiver thread each)."""
 
     def __init__(self, sock: socket.socket,
-                 counter: Optional[ByteCounter] = None):
-        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                 counter: Optional[ByteCounter] = None,
+                 chaos=None,
+                 max_frame_bytes: int = MAX_FRAME_BYTES,
+                 frame_deadline_s: float = FRAME_DEADLINE_S):
+        try:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass                     # non-TCP socket (tests, AF_UNIX)
         self._sock = sock
         self._send_lock = threading.Lock()
         self.counter = counter or ByteCounter()
         self.closed = False
+        # optional FaultInjector (repro.cluster.chaos) consulted on send;
+        # None (the default) costs one attribute check per frame
+        self.chaos = chaos
+        self.max_frame_bytes = max_frame_bytes
+        self.frame_deadline_s = frame_deadline_s
 
     @property
     def peer(self) -> Tuple[str, int]:
@@ -99,14 +125,31 @@ class Connection:
     def send(self, msg_type: str, **payload):
         frame = pickle.dumps({"type": msg_type, **payload},
                              protocol=pickle.HIGHEST_PROTOCOL)
+        copies = 1
+        if self.chaos is not None:
+            for kind, param in self.chaos.on_send(msg_type):
+                if kind == "drop":
+                    self.counter.add("tx", msg_type,
+                                     _LEN.size + len(frame))
+                    return           # vanished on the wire
+                if kind == "delay":
+                    time.sleep(param / 1e3)
+                elif kind == "dup":
+                    copies = 2
+                elif kind == "corrupt":
+                    frame = self.chaos.corrupt(frame)
+                elif kind == "reset":
+                    self.close()
+                    raise ConnectionClosed("chaos: connection reset")
         header = _LEN.pack(len(frame))
         try:
             with self._send_lock:
-                self._sock.sendall(header + frame)
+                for _ in range(copies):
+                    self._sock.sendall(header + frame)
         except OSError as e:
             self.closed = True
             raise ConnectionClosed(str(e)) from e
-        self.counter.add("tx", msg_type, len(header) + len(frame))
+        self.counter.add("tx", msg_type, copies * (len(header) + len(frame)))
 
     def _recv_exact(self, n: int) -> bytes:
         buf = bytearray()
@@ -129,17 +172,53 @@ class Connection:
         ConnectionClosed on peer death. Only a timeout with ZERO bytes
         read returns None: once the first header byte has arrived the
         peer is alive and mid-send, so the rest of the frame is read
-        blocking — a mid-header timeout must never drop buffered bytes
-        and desynchronize the length-prefixed stream."""
-        self._sock.settimeout(timeout)
+        under ``frame_deadline_s`` — a mid-header timeout must never
+        drop buffered bytes and desynchronize the length-prefixed
+        stream, but a peer frozen mid-send (SIGSTOP) must not pin this
+        thread forever either. A blown deadline, an absurd decoded
+        length, or an undecodable frame all kill the connection: once
+        any of those happens the stream cannot be trusted again."""
         try:
+            # settimeout itself can race a close() from another thread
+            # (recovery severing a retired worker's link): that is a
+            # dead connection, not a crash in the receiver thread
+            self._sock.settimeout(timeout)
             first = self._recv_exact(1)
         except socket.timeout:
             return None
-        self._sock.settimeout(None)          # finish the frame blocking
-        header = first + self._recv_exact(_LEN.size - 1)
-        frame = self._recv_exact(_LEN.unpack(header)[0])
-        msg = pickle.loads(frame)
+        except OSError as e:
+            self.closed = True
+            raise ConnectionClosed(str(e)) from e
+        try:
+            # finish the frame under a completion deadline
+            self._sock.settimeout(self.frame_deadline_s)
+            header = first + self._recv_exact(_LEN.size - 1)
+            length = _LEN.unpack(header)[0]
+            if length > self.max_frame_bytes:
+                self.close()
+                raise ConnectionClosed(
+                    f"frame length {length} exceeds cap "
+                    f"{self.max_frame_bytes} (corrupt stream)")
+            frame = self._recv_exact(length)
+        except socket.timeout:
+            self.close()
+            raise ConnectionClosed(
+                f"frame stalled mid-receive for {self.frame_deadline_s}s "
+                "(peer hung mid-send)") from None
+        except ConnectionClosed:
+            raise
+        except OSError as e:                  # settimeout raced a close()
+            self.closed = True
+            raise ConnectionClosed(str(e)) from e
+        try:
+            msg = pickle.loads(frame)
+            if not isinstance(msg, dict):
+                raise ValueError("frame is not a message dict")
+        except ConnectionClosed:
+            raise
+        except Exception as e:
+            self.close()
+            raise ConnectionClosed(f"undecodable frame: {e}") from e
         self.counter.add("rx", msg.get("type", "?"),
                          _LEN.size + len(frame))
         return msg
@@ -179,7 +258,31 @@ class Listener:
 
 
 def connect(address: Tuple[str, int], timeout: float = 10.0,
-            counter: Optional[ByteCounter] = None) -> Connection:
-    sock = socket.create_connection(address, timeout=timeout)
-    sock.settimeout(None)
-    return Connection(sock, counter=counter)
+            counter: Optional[ByteCounter] = None, *,
+            retries: int = 0, backoff_s: float = 0.5,
+            backoff_max_s: float = 10.0, jitter: float = 0.25,
+            chaos=None) -> Connection:
+    """Dial ``address``, retrying with exponential backoff + jitter.
+
+    ``retries`` extra attempts follow a failed dial, sleeping
+    ``min(backoff_s * 2**attempt, backoff_max_s) * (1 + U[0,jitter])``
+    between them — the jitter keeps a herd of workers re-registering
+    against a relaunched coordinator from dialing in lockstep. The
+    default ``retries=0`` preserves the old single-attempt behavior.
+    Failure raises :class:`ConnectionClosed` (the caller-facing "peer
+    unreachable" signal) rather than a raw ``OSError``."""
+    last: Optional[Exception] = None
+    for attempt in range(retries + 1):
+        try:
+            sock = socket.create_connection(address, timeout=timeout)
+            sock.settimeout(None)
+            return Connection(sock, counter=counter, chaos=chaos)
+        except OSError as e:
+            last = e
+            if attempt == retries:
+                break
+            delay = min(backoff_s * (2.0 ** attempt), backoff_max_s)
+            time.sleep(delay * (1.0 + jitter * random.random()))
+    raise ConnectionClosed(
+        f"connect to {address} failed after {retries + 1} attempt(s): "
+        f"{last}") from last

@@ -28,19 +28,32 @@ counters make retried broadcasts idempotent: a block already at
 iteration k answers from its cached contribution instead of applying
 the prox twice.
 
-Fault injection for tests: ``die_at_iter`` SIGKILLs the process upon
-receiving that iteration's broadcast; ``slow_ms`` delays each iteration
-(the straggler knob the bounded-staleness mode is measured against).
+Fault injection: the legacy per-worker knobs ``die_at_iter`` (SIGKILL on
+that iteration's broadcast) and ``slow_ms`` (per-iteration delay) remain,
+and a ``chaos`` spec string (see :mod:`repro.cluster.chaos`) schedules
+seeded kill/stop/slow process faults plus wire faults on the data plane.
+
+Self-healing: when the coordinator link drops and ``reconnect`` is
+configured, the worker does NOT exit — it discards all block state
+(everything is reconstructible from the store + the coordinator's base
+state and x-history), dials the coordinator with exponential backoff +
+jitter, re-registers, re-verifies its assigned blocks, and rejoins the
+solve. This is both halves of DESIGN.md §13's recovery loop: a worker
+the coordinator force-retired (blown deadline, dropped contribution)
+comes back as a mid-solve JOIN, and a relaunched coordinator finds its
+old workers dialing the same port.
 """
 from __future__ import annotations
 
 import os
 import queue
+import signal
 import threading
 import time
 import traceback
 from typing import Dict, Optional
 
+from repro.cluster.chaos import NOOP, make_injector
 from repro.cluster.transport import (
     ByteCounter,
     Connection,
@@ -133,21 +146,74 @@ class WorkerRuntime:
 
         self.inbox: "queue.Queue" = queue.Queue()
         self.peers = Listener()           # children connect here
-        self.coord = connect(tuple(coord_addr), counter=self.counter)
+        self.coord_addr = tuple(coord_addr)
+        # seeded fault injection (no-op singleton when unconfigured)
+        self.chaos = make_injector(config.get("chaos"), f"w{wid}")
+        self._conn_chaos = self.chaos if self.chaos.enabled else None
+        # reconnect knobs: {} disables (lose the coordinator -> exit);
+        # retries/backoff_s/backoff_max_s feed transport.connect
+        self.reconnect = dict(config.get("reconnect") or {})
+        self._gen = 0                     # coordinator-link generation
+        self._registrations = 0
         self._parent_conns: Dict[tuple, Connection] = {}
         self.topology = {"epoch": -1, "parent": None, "nchildren": 0}
         self._task = None                 # in-flight tree reduce
         self._peer_buf = []               # children ahead of our own iter
         self._stop = threading.Event()
+        self.coord: Connection = None
+        self._attach(retries=int(self.reconnect.get("retries", 3)))
+
+    # -- coordinator link --------------------------------------------------
+    def _attach(self, retries: int):
+        """Dial the coordinator (with backoff), register, and start this
+        link's receiver + heartbeat threads. Each attach bumps the link
+        generation so a stale thread's death notice cannot tear down a
+        newer link."""
+        self._gen += 1
+        gen = self._gen
+        self.coord = connect(
+            self.coord_addr, counter=self.counter, chaos=self._conn_chaos,
+            retries=retries,
+            backoff_s=float(self.reconnect.get("backoff_s", 0.5)),
+            backoff_max_s=float(self.reconnect.get("backoff_max_s", 5.0)))
+        self.coord.send("register", wid=self.wid,
+                        peer_addr=self.peers.address,
+                        store_fingerprint=self.store.fingerprint,
+                        pid=os.getpid(),
+                        rejoin=self._registrations > 0)
+        self._registrations += 1
+        threading.Thread(target=self._coord_rx,
+                         args=(self.coord, gen), daemon=True).start()
+        threading.Thread(target=self._heartbeat,
+                         args=(self.coord,), daemon=True).start()
+
+    def _reset_state(self):
+        """Drop everything tied to the lost coordinator: block iterates,
+        in-flight reduce, buffered peer partials, parent links. All of it
+        is reconstructible from (store, base state, x-history) at the
+        next assignment — keeping any of it risks folding a dead epoch's
+        state into the new coordinator's solve."""
+        self.blocks.clear()
+        self._task = None
+        self._peer_buf = []
+        self._ef_err = None
+        for conn in self._parent_conns.values():
+            try:
+                conn.close()
+            except OSError:
+                pass
+        self._parent_conns = {}
+        self.topology = {"epoch": -1, "parent": None, "nchildren": 0}
+        self.metrics.inc("worker.reconnects")
 
     # -- threads -----------------------------------------------------------
-    def _coord_rx(self):
+    def _coord_rx(self, conn: Connection, gen: int):
         try:
             while not self._stop.is_set():
-                msg = self.coord.recv()
+                msg = conn.recv()
                 self.inbox.put(("cmd", msg))
         except ConnectionClosed:
-            self.inbox.put(("cmd_closed", None))
+            self.inbox.put(("cmd_closed", gen))
 
     def _peer_rx(self, conn: Connection):
         try:
@@ -165,21 +231,23 @@ class WorkerRuntime:
                 threading.Thread(target=self._peer_rx, args=(conn,),
                                  daemon=True).start()
 
-    def _heartbeat(self):
+    def _heartbeat(self, conn: Connection):
         interval = float(self.config.get("heartbeat_interval", 0.5))
         while not self._stop.is_set():
             try:
-                self.coord.send("heartbeat", wid=self.wid,
-                                t=time.monotonic(),
-                                metrics=self.metrics.snapshot())
+                conn.send("heartbeat", wid=self.wid,
+                          t=time.monotonic(),
+                          metrics=self.metrics.snapshot())
             except ConnectionClosed:
-                return
+                return                    # link died; a reattach starts
+                                          # its own heartbeat thread
             self._stop.wait(interval)
 
     # -- block state -------------------------------------------------------
-    def _init_block(self, bid: int, base_iter: int, base=None):
+    def _init_block(self, bid: int, base_iter: int, base=None,
+                    verified: bool = False):
         import numpy as np
-        if not self.store.verify_block(bid):
+        if not verified and not self.store.verify_block(bid):
             raise RuntimeError(
                 f"worker {self.wid}: store block {bid} content does not "
                 f"match its write-time fingerprint — refusing assignment")
@@ -250,11 +318,21 @@ class WorkerRuntime:
         base_iter = int(msg.get("base_iter", 0))
         base_state = msg.get("base_state") or {}
         force = bool(msg.get("force", False))   # resume: overwrite state
+        incoming = [bid for bid in msg["blocks"]
+                    if force or bid not in self.blocks]
+        # one batched content check so a bad assignment reports EVERY
+        # mismatched block (join path: the joiner mmap-opened the store
+        # cold and must prove it holds the same rows)
+        bad = self.store.verify_blocks(incoming)
+        if bad:
+            raise RuntimeError(
+                f"worker {self.wid}: store blocks {bad} do not match "
+                "their write-time fingerprints — refusing assignment")
         fresh = []
-        for bid in msg["blocks"]:
-            if force or bid not in self.blocks:
-                self._init_block(bid, base_iter, base_state.get(bid))
-                fresh.append(bid)
+        for bid in incoming:
+            self._init_block(bid, base_iter, base_state.get(bid),
+                             verified=True)
+            fresh.append(bid)
         hist = msg.get("x_history")
         if hist is not None and len(hist) and fresh:
             self._replay(fresh, hist)
@@ -306,6 +384,16 @@ class WorkerRuntime:
         slow = float(self.config.get("slow_ms", 0.0))
         if slow:
             time.sleep(slow / 1e3)
+        for kind, param in self.chaos.process_actions(k):
+            if kind == "kill":
+                os.kill(os.getpid(), signal.SIGKILL)
+            elif kind == "stop":
+                # a hang, not a death: the process keeps its sockets but
+                # stops heartbeating — only the coordinator's staleness
+                # detector can retire it (and only SIGKILL can reap it)
+                os.kill(os.getpid(), signal.SIGSTOP)
+            elif kind == "slow":
+                time.sleep(param / 1e3)
         t_iter = time.perf_counter()
         x_dev = jax.device_put(np.asarray(msg["x"], np.float32))
         own = Contribution.zero(k, self.store.n)
@@ -328,7 +416,7 @@ class WorkerRuntime:
                            rows=own.rows, d=own.d, w=own.w, v=own.v,
                            scalars=own.scalars)
         self._task = {"k": k, "epoch": int(msg["epoch"]),
-                      "partial": own,
+                      "partial": own, "from": {self.wid},
                       "need": self.topology["nchildren"]}
         # children may have delivered before our own broadcast arrived
         buf, self._peer_buf = self._peer_buf, []
@@ -354,7 +442,17 @@ class WorkerRuntime:
             return
         if ep < t["epoch"] or it < t["k"]:
             return                        # partial of a dead topology
-        t["partial"] = t["partial"].merge(decode(msg["payload"]))
+        try:
+            c = decode(msg["payload"])
+        except ValueError:
+            return                        # malformed partial: dropped;
+                                          # the deadline retry recovers it
+        if set(c.workers) & t["from"]:
+            # a duplicated (chaos) or retried child partial that already
+            # folded into this task — merging it again would double-count
+            return
+        t["from"] |= set(c.workers)
+        t["partial"] = t["partial"].merge(c)
         t["need"] -= 1
         self._maybe_transmit()
 
@@ -374,7 +472,9 @@ class WorkerRuntime:
         try:
             conn = self._parent_conns.get(parent)
             if conn is None or conn.closed:
-                conn = connect(parent, counter=self.counter)
+                conn = connect(parent, counter=self.counter,
+                               chaos=self._conn_chaos,
+                               retries=2, backoff_s=0.1)
                 self._parent_conns[parent] = conn
             conn.send("contrib", wid=self.wid, epoch=t["epoch"],
                       payload=payload)
@@ -383,6 +483,15 @@ class WorkerRuntime:
             # rebuild the topology and re-issue this iteration; our
             # cached per-block contributions make the retry cheap.
             self._parent_conns.pop(parent, None)
+
+    def _on_unassign(self, msg):
+        """Mid-solve rebalance: blocks move to a joiner. Drop their
+        state (the new owner replays it) — keeping it would answer a
+        retried broadcast for a block we no longer own."""
+        dropped = [bid for bid in msg["blocks"]
+                   if self.blocks.pop(bid, None) is not None]
+        self.metrics.inc("worker.blocks_unassigned", len(dropped))
+        self.coord.send("unassigned", wid=self.wid, blocks=dropped)
 
     def _on_checkpoint(self, msg):
         state = {}
@@ -395,20 +504,38 @@ class WorkerRuntime:
 
     # -- main loop ----------------------------------------------------------
     def run(self):
-        threading.Thread(target=self._coord_rx, daemon=True).start()
         threading.Thread(target=self._peer_accept, daemon=True).start()
-        self.coord.send("register", wid=self.wid,
-                        peer_addr=self.peers.address,
-                        store_fingerprint=self.store.fingerprint,
-                        pid=os.getpid())
-        threading.Thread(target=self._heartbeat, daemon=True).start()
+        while True:
+            reason = self._serve()
+            if reason == "stop" or not self.reconnect:
+                break
+            # coordinator link lost and self-healing configured: shed
+            # state and re-register (covers both a worker the failure
+            # detector retired and a relaunched coordinator)
+            self._reset_state()
+            try:
+                self._attach(retries=int(self.reconnect.get("retries", 8)))
+            except ConnectionClosed:
+                break                     # coordinator truly gone
+        self._stop.set()
+        try:
+            self.coord.close()
+        except OSError:
+            pass
+
+    def _serve(self) -> str:
+        """Pump the inbox until the solve stops ("stop") or the current
+        coordinator link dies ("lost")."""
         handlers = {"assign": self._on_assign, "stats": self._on_stats,
                     "topology": self._on_topology, "iter": self._on_iter,
+                    "unassign": self._on_unassign,
                     "checkpoint": self._on_checkpoint}
         while True:
             kind, msg = self.inbox.get()
             if kind == "cmd_closed":
-                break                     # coordinator gone: exit quietly
+                if msg == self._gen:
+                    return "lost"
+                continue                  # a previous link's obituary
             if kind == "peer":
                 self._on_peer(msg)
                 continue
@@ -419,21 +546,30 @@ class WorkerRuntime:
                 # metrics + trace events ride along so the coordinator
                 # can fold a final per-worker registry and render the
                 # cluster solve as one timeline
-                self.coord.send("bye", wid=self.wid,
-                                counters=self.counter.snapshot(),
-                                metrics=self.metrics.snapshot(),
-                                trace=self.tracer.events(),
-                                pid=os.getpid())
-                break
+                try:
+                    self.coord.send("bye", wid=self.wid,
+                                    counters=self.counter.snapshot(),
+                                    metrics=self.metrics.snapshot(),
+                                    trace=self.tracer.events(),
+                                    pid=os.getpid())
+                except ConnectionClosed:
+                    pass
+                return "stop"
             if mtype in _HEARTBEAT_TYPES:
                 continue
             if mtype == "iter" and self.staleness:
                 # bounded-staleness drain: a slow worker computes against
                 # the NEWEST broadcast x rather than queueing up history
                 msg = self._drain_to_newest(msg)
-            handlers[mtype](msg)
-        self._stop.set()
-        self.coord.close()
+            handler = handlers.get(mtype)
+            if handler is None:
+                continue                  # unknown command: ignore
+            try:
+                handler(msg)
+            except ConnectionClosed:
+                # the coordinator link died mid-handler (chaos reset, or
+                # a send into a closed socket): same as cmd_closed
+                return "lost"
 
     def _drain_to_newest(self, msg):
         while True:

@@ -323,6 +323,13 @@ class ShardedMatrixStore:
             fp = fingerprint_array(self._blocks_D[k], a_b)
         return fp == self.fingerprints[k]
 
+    def verify_blocks(self, blocks) -> list:
+        """Batch :meth:`verify_block`; returns the block indices whose
+        content does NOT match (empty = all verified). The elastic-join
+        path uses this so a joiner can report every bad block of an
+        assignment at once instead of dying on the first."""
+        return [int(k) for k in blocks if not self.verify_block(int(k))]
+
     def iter_blocks(self, padded: bool = False
                     ) -> Iterator[Tuple[np.ndarray, Optional[np.ndarray]]]:
         """The store's contract with the streaming engine: ``(D_block,

@@ -120,12 +120,33 @@ def _fit_streaming(args, D, aux, mu, obs=None):
 def _fit_cluster(args, D, aux, mu):
     """Multi-process fit: stage a shared block store, spawn workers,
     solve through the cluster coordinator (DESIGN.md §11)."""
+    from repro.cluster.chaos import ChaosSchedule
     from repro.cluster.coordinator import (
         ClusterConfig,
+        DegradePolicy,
         cluster_solve,
         cluster_stats,
     )
 
+    chaos = None
+    if args.chaos_spec:
+        chaos = ChaosSchedule.parse(args.chaos_spec)
+    elif args.chaos_seed is not None:
+        # scale the default fault mix down so small clusters keep a
+        # survivor (generate refuses kills+stops >= n_workers)
+        chaos = ChaosSchedule.generate(args.chaos_seed,
+                                       n_workers=args.cluster,
+                                       iters=args.iters,
+                                       kills=1 if args.cluster > 1 else 0,
+                                       stops=1 if args.cluster > 2 else 0)
+    degrade = None
+    if args.min_quorum is not None or args.iter_deadline is not None:
+        degrade = DegradePolicy(
+            min_quorum=(args.min_quorum if args.min_quorum is not None
+                        else 0.25),
+            iter_deadline_s=(args.iter_deadline
+                             if args.iter_deadline is not None else 60.0),
+        )
     cfg = ClusterConfig(
         n_workers=args.cluster,
         compress=args.cluster_compress,
@@ -135,7 +156,14 @@ def _fit_cluster(args, D, aux, mu):
         checkpoint_every=args.checkpoint_every,
         resume=args.resume,
         obs_dir=args.obs_dir,   # the coordinator owns the run directory
+        chaos=chaos,
+        degrade=degrade,
+        # faults are survivable only if killed workers come back
+        reconnect={"retries": 8} if chaos is not None else None,
     )
+    if chaos is not None:
+        print(f"chaos: seed={chaos.seed} spec={chaos.to_spec()!r}",
+              flush=True)
     if args.problem == "lasso":
         from repro.core.fasta import transpose_reduction_lasso
         stats, telemetry = cluster_stats(D, aux, store_dir=args.store_dir,
@@ -162,6 +190,17 @@ def _fit_cluster(args, D, aux, mu):
           f"at the coordinator "
           f"({t['payload_bytes_per_nvec']} B payload per n-vector)",
           flush=True)
+    rec = t.get("recovery") or {}
+    if t.get("status") != "converged" or t.get("joins") or rec.get("events"):
+        print(f"cluster status: {t.get('status')} — "
+              f"{t.get('joins', 0)} joins, "
+              f"{t.get('blocks_rebalanced', 0)} blocks rebalanced, "
+              f"{len(rec.get('events', []))} recovery events "
+              f"(time-to-recover "
+              f"{rec.get('time_to_recover_s') or 0.0:.2f}s, "
+              f"{rec.get('iterations_retried', 0)} iterations retried), "
+              f"{t.get('degraded_rounds', 0)} degraded rounds",
+              flush=True)
     hist = (jnp.asarray(res.history["objective"])
             if res.history else None)
     return FitResult(jnp.asarray(res.x), int(res.iters), hist,
@@ -228,6 +267,24 @@ def main(argv=None):
                     help="bounded-staleness quorum aggregation: proceed "
                          "on a quorum, tolerate reductions up to S "
                          "iterations old (0 = strict synchronous)")
+    ap.add_argument("--chaos-seed", type=int, default=None, metavar="S",
+                    help="with --cluster: inject a seeded, deterministic "
+                         "fault schedule (worker kills/hangs, wire "
+                         "delays/drops, a mid-solve join) generated from "
+                         "this seed (DESIGN.md §13)")
+    ap.add_argument("--chaos-spec", default=None, metavar="SPEC",
+                    help="with --cluster: explicit fault schedule, e.g. "
+                         "'kill@13:w2,delay@5:w0:80,join@9:w4' — "
+                         "overrides --chaos-seed")
+    ap.add_argument("--min-quorum", type=float, default=None, metavar="F",
+                    help="graceful degradation: fraction of workers that "
+                         "must stay reachable before the solve returns "
+                         "best-so-far with status=degraded")
+    ap.add_argument("--iter-deadline", type=float, default=None,
+                    metavar="SEC",
+                    help="graceful degradation: per-iteration collection "
+                         "deadline; expired rounds are retried, then the "
+                         "quorum is relaxed / the solve degrades")
     ap.add_argument("--checkpoint-dir", default=None,
                     help="persist solver state here every "
                          "--checkpoint-every iterations (streaming and "
