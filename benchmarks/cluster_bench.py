@@ -252,6 +252,8 @@ def run(rows, quick: bool = False):
         from benchmarks.run import host_meta
         payload = {
             "generated_by": "benchmarks/cluster_bench.py",
+            "executor": "cluster",
+            "backend": "chunked",
             "host_meta": host_meta(),
             "host_cpus": cpus,
             "quick": quick,

@@ -124,6 +124,10 @@ def run(rows, quick: bool = False):
         from benchmarks.run import host_meta
         payload = {
             "generated_by": "benchmarks/engine_bench.py",
+            # topology + headline engine backend (per-variant backends
+            # live on each point record)
+            "executor": "local",
+            "backend": "chunked",
             "host_meta": host_meta(),
             "device": jax.devices()[0].device_kind,
             "backend_platform": jax.default_backend(),

@@ -177,6 +177,10 @@ def run(rows, quick: bool = False):
         from benchmarks.run import host_meta
         payload = {
             "generated_by": "benchmarks/sparse_bench.py",
+            # topology + headline engine backend (the dense baseline
+            # cells ran "chunked"; see each point record)
+            "executor": "local",
+            "backend": "sparse",
             "host_meta": host_meta(),
             "device": jax.devices()[0].device_kind,
             "backend_platform": jax.default_backend(),

@@ -307,6 +307,8 @@ def run(rows, quick: bool = False):
         from benchmarks.run import host_meta
         payload = {
             "generated_by": "benchmarks/streaming_bench.py",
+            "executor": "streaming",
+            "backend": "chunked",
             "host_meta": host_meta(),
             "device": jax.devices()[0].device_kind,
             "backend_platform": jax.default_backend(),

@@ -184,6 +184,9 @@ class ClusterCoordinator:
         self.store = ShardedMatrixStore.open(store_path)
         self.loss_spec = dict(loss)
         self.loss = make_loss(self.loss_spec)
+        # reductions travel as FLAT f32 vectors; multi-column iterates
+        # (ycols=K) ravel to n*K on the wire (repro.exec.cluster)
+        self._red_n = self.store.n * getattr(self.loss, "ycols", 1)
         self.tau, self.rho = float(tau), float(rho)
         self.eps_rel, self.eps_abs = float(eps_rel), float(eps_abs)
         self.members = Membership()
@@ -750,10 +753,16 @@ class ClusterCoordinator:
                 self._send(owner, "stats", blocks=[bid])
 
     # -- the solve ----------------------------------------------------------
-    def solve(self, max_iters: int = 500, record: bool = True
-              ) -> ClusterResult:
-        from repro.core import gram as gram_lib
-        import jax.numpy as jnp
+    def solve(self, max_iters: int = 500, record: bool = True,
+              x0: Optional[np.ndarray] = None,
+              reg=None) -> ClusterResult:
+        """Run the solve through the shared executor driver
+        (DESIGN.md §14): the coordinator contributes the three cluster
+        primitives via :class:`repro.exec.ClusterExecutor`; the stopping
+        rule, warm start, checkpoint cadence and history all live in
+        ``repro.exec.base.solve_with_executor`` — the same code path the
+        local, streaming and shard_map topologies run."""
+        from repro.exec import ClusterExecutor, solve_with_executor
 
         if self._iters_run:
             # worker iterates persist across calls but d/x/history here
@@ -765,98 +774,27 @@ class ClusterCoordinator:
                 "to continue a solve across runs)")
         if not self._started:
             self.start()
-        with self.obs.span("stats_reduce"):
-            st = self.stats()
-        with self.obs.span("gram_factor"):
-            L = gram_lib.gram_factor(st.G, ridge=self.rho / self.tau)
-        m, n = self.store.m, self.store.n
-        pad_obj = self._pad_objective()
-
-        d = np.zeros((n,), np.float32)
-        x = np.zeros((n,), np.float32)   # returned as-is if 0 iterations
-        k0 = 0
-        manager = None
-        if self.cfg.checkpoint_dir:
-            from repro.checkpoint.manager import CheckpointManager
-            manager = CheckpointManager(self.cfg.checkpoint_dir)
-            if self.cfg.resume and manager.latest_step() is not None:
-                k0, d, x = self._restore(manager)
-        if self.cfg.staleness > 0:
-            self._latest: Dict[int, Contribution] = {}
-
-        objs, rs, ss = [], [], []
-        converged = False
-        k = k0
+        ex = ClusterExecutor(self)
         t0 = time.monotonic()
-        prev_wire = self.counter.snapshot() if self.obs.enabled else None
-        while k < max_iters and not converged:
-            # membership grows only at iteration boundaries: spawn any
-            # chaos-scheduled joiners, then fold completed registrations
-            # in (rebalance + epoch bump) before broadcasting k+1
-            self._spawn_due_joins(k + 1)
-            self._apply_joins()
-            k += 1
-            t_it = time.perf_counter()
-            if self._coord_injector is not None:
-                self._coord_injector.set_iteration(k)
-            with self.obs.span("x_solve", k=k):
-                x = np.asarray(gram_lib.gram_solve(L, jnp.asarray(d)),
-                               np.float32)
-            assert len(self._x_hist) == k - 1 - self._base_iter
-            self._x_hist.append(x)
-            self._broadcast_iter(k, x)
-            with self.obs.span("collect", k=k):
-                total = (self._collect_stale(k) if self.cfg.staleness > 0
-                         else self._collect_strict(k, x))
-            if total is None:
-                # DegradePolicy exhausted: stop with the best-so-far x
-                # (the newest broadcast) instead of hanging forever
-                self._status = "degraded"
-                break
-            self._close_recovery(k)
-            d = total.d.astype(np.float32)
-            r = float(np.sqrt(total.scalars["r_sq"]))
-            s = self.tau * float(np.linalg.norm(total.w))
-            eps_pri = np.sqrt(m) * self.eps_abs + self.eps_rel * max(
-                np.sqrt(total.scalars["dx_sq"]),
-                np.sqrt(total.scalars["y_sq"]))
-            eps_dual = np.sqrt(n) * self.eps_abs + (
-                self.eps_rel * self.tau * float(np.linalg.norm(total.v)))
-            obj = total.scalars["obj"] - pad_obj
-            if self.rho:
-                obj += 0.5 * self.rho * float(np.sum(x * x))
-            if record:
-                objs.append(obj)
-                rs.append(r)
-                ss.append(s)
-            converged = bool(r <= eps_pri and s <= eps_dual)
-            if self.obs.enabled:
-                dt = time.perf_counter() - t_it
-                self.obs.observe("coordinator.iter_s", dt)
-                wire = self.counter.snapshot()
-                tx = {t: v - prev_wire["sent_bytes"].get(t, 0)
-                      for t, v in wire["sent_bytes"].items()}
-                rx = {t: v - prev_wire["received_bytes"].get(t, 0)
-                      for t, v in wire["received_bytes"].items()}
-                prev_wire = wire
-                self.obs.record(
-                    iter=k, objective=obj, primal_res=r, dual_res=s,
-                    eps_pri=float(eps_pri), eps_dual=float(eps_dual),
-                    tau=self.tau, rho=self.rho, iter_s=round(dt, 6),
-                    tx_bytes={t: v for t, v in tx.items() if v},
-                    rx_bytes={t: v for t, v in rx.items() if v})
-            if (manager is not None and self.cfg.checkpoint_every
-                    and k % self.cfg.checkpoint_every == 0):
-                self._checkpoint(manager, k, x, d)
-        self._iters_run += k - k0
-        if self._status != "degraded":
-            self._status = "converged" if converged else "max_iters"
-        history = ({"objective": objs, "primal_res": rs, "dual_res": ss}
-                   if record else None)
-        return ClusterResult(x=x, iters=k, converged=converged,
-                             history=history,
-                             telemetry=self._telemetry(k - k0,
-                                                       time.monotonic() - t0),
+        res = solve_with_executor(
+            ex, loss=self.loss, tau=self.tau, rho=self.rho,
+            eps_rel=self.eps_rel, eps_abs=self.eps_abs,
+            max_iters=max_iters, x0=x0, record=record, reg=reg,
+            checkpoint_dir=self.cfg.checkpoint_dir,
+            checkpoint_every=self.cfg.checkpoint_every,
+            resume=self.cfg.resume, obs=self.obs)
+        k = int(res.iters)
+        history = None
+        if record and res.history is not None:
+            history = {
+                "objective": [float(v) for v in res.history.objective],
+                "primal_res": [float(v) for v in res.history.primal_res],
+                "dual_res": [float(v) for v in res.history.dual_res]}
+        return ClusterResult(x=np.asarray(res.x, np.float32), iters=k,
+                             converged=ex.converged, history=history,
+                             telemetry=self._telemetry(
+                                 k - ex.resume_iter,
+                                 time.monotonic() - t0),
                              status=self._status)
 
     def _below_min_quorum(self) -> bool:
@@ -881,7 +819,7 @@ class ClusterCoordinator:
         deadline = (time.monotonic() + pol.iter_deadline_s
                     if pol is not None else None)
         rebroadcasts = 0
-        acc = Contribution.zero(k, self.store.n)
+        acc = Contribution.zero(k, self._red_n)
         seen: set = set()
         while True:
             if deadline is not None and time.monotonic() > deadline:
@@ -892,14 +830,14 @@ class ClusterCoordinator:
                 self._recovery_log.append({
                     "kind": "deadline_retry", "iter": k,
                     "attempt": rebroadcasts})
-                acc = Contribution.zero(k, self.store.n)
+                acc = Contribution.zero(k, self._red_n)
                 seen = set()
                 deadline = time.monotonic() + pol.iter_deadline_s
                 self._broadcast_iter(k, x_k)
             try:
                 dead = self._poll_failures()
                 if dead:
-                    acc = Contribution.zero(k, self.store.n)
+                    acc = Contribution.zero(k, self._red_n)
                     seen = set()
                     self._mark_and_recover(dead, k, x_k)
                 if self._below_min_quorum():
@@ -914,7 +852,7 @@ class ClusterCoordinator:
                     continue
                 wid, msg = ev
                 if msg is None:
-                    acc = Contribution.zero(k, self.store.n)
+                    acc = Contribution.zero(k, self._red_n)
                     seen = set()
                     self._mark_and_recover([wid], k, x_k)
                     continue
@@ -980,7 +918,7 @@ class ClusterCoordinator:
             if satisfied:
                 if relaxed:
                     self._degraded_rounds += 1
-                acc = Contribution.zero(k, self.store.n)
+                acc = Contribution.zero(k, self._red_n)
                 for w in merge_over:
                     # stale entries merge AS IF current — the (bounded)
                     # inexactness the mode accepts by construction
@@ -1045,8 +983,11 @@ class ClusterCoordinator:
         for wid in self.members.alive_ids():
             if not self._send(wid, "checkpoint"):
                 return None
-        y = np.zeros((self.store.m,), np.float32)
-        lam = np.zeros((self.store.m,), np.float32)
+        ycols = getattr(self.loss, "ycols", 1)
+        shape = ((self.store.m,) if ycols == 1
+                 else (self.store.m, ycols))
+        y = np.zeros(shape, np.float32)
+        lam = np.zeros(shape, np.float32)
         covered: set = set()
         deadline = time.monotonic() + self.cfg.heartbeat_timeout_s
         while covered != set(range(self.store.nblocks)):
@@ -1072,47 +1013,6 @@ class ClusterCoordinator:
                 y[sl], lam[sl] = y_b, lam_b
                 covered.add(int(bid))
         return y, lam
-
-    def _checkpoint(self, manager, k: int, x: np.ndarray, d: np.ndarray):
-        got = self._gather_iterates(k)
-        if got is None:
-            return                       # try again next interval
-        y, lam = got
-        manager.save(k, {"x": x, "y": y, "lam": lam, "d": d},
-                     extra={"kind": "cluster_solve", "iter": k,
-                            "loss": self.loss_spec, "tau": self.tau,
-                            "rho": self.rho,
-                            "store_fingerprint": self.store.fingerprint})
-        # the checkpoint is also the new recovery base: replays start
-        # here, and the x-history before it can be dropped
-        self._base_iter, self._base_y, self._base_lam = k, y, lam
-        self._x_hist = []
-
-    def _restore(self, manager) -> Tuple[int, np.ndarray, np.ndarray]:
-        like = {"x": np.zeros((self.store.n,), np.float32),
-                "y": np.zeros((self.store.m,), np.float32),
-                "lam": np.zeros((self.store.m,), np.float32),
-                "d": np.zeros((self.store.n,), np.float32)}
-        # fallback=True: a relaunched coordinator recovering from a crash
-        # must not be stopped by one corrupt newest step when an older
-        # intact checkpoint exists
-        tree, extra = manager.restore(like, fallback=True)
-        if extra.get("kind") != "cluster_solve":
-            raise ClusterError(f"not a cluster checkpoint: {extra}")
-        if extra.get("store_fingerprint") != self.store.fingerprint:
-            raise ClusterError("checkpoint belongs to a different store")
-        k = int(extra["iter"])
-        self._base_iter = k
-        self._base_y = np.asarray(tree["y"], np.float32)
-        self._base_lam = np.asarray(tree["lam"], np.float32)
-        self._x_hist = []
-        for w in self.members.alive():
-            self._send_assign(w.wid, sorted(w.blocks), upto_iter=k,
-                              force=True)
-        # x rides along so a resume at k >= max_iters returns the
-        # checkpointed solution instead of the zero init
-        return (k, np.asarray(tree["d"], np.float32),
-                np.asarray(tree["x"], np.float32))
 
     # -- telemetry ----------------------------------------------------------
     def _pad_objective(self) -> float:
@@ -1232,7 +1132,7 @@ def cluster_solve(D, aux, loss: dict, tau: float, rho: float = 0.0,
                   config: Optional[ClusterConfig] = None,
                   block_rows: Optional[int] = None,
                   eps_rel: float = 1e-3, eps_abs: float = 1e-6,
-                  record: bool = True) -> ClusterResult:
+                  record: bool = True, x0=None, reg=None) -> ClusterResult:
     """One-call multi-process solve: stage the store, run the cluster,
     tear it down. ``D`` may be host arrays or a saved store path."""
     config = config or ClusterConfig()
@@ -1242,7 +1142,8 @@ def cluster_solve(D, aux, loss: dict, tau: float, rho: float = 0.0,
         with ClusterCoordinator(path, loss, tau=tau, rho=rho,
                                 eps_rel=eps_rel, eps_abs=eps_abs,
                                 config=config) as coord:
-            res = coord.solve(max_iters=max_iters, record=record)
+            res = coord.solve(max_iters=max_iters, record=record,
+                              x0=x0, reg=reg)
             res.telemetry["shutdown_counters"] = coord.shutdown()
             # bye messages carry each worker's FINAL registry snapshot;
             # refresh the breakdown solve() built from (periodic, hence

@@ -70,18 +70,11 @@ _HEARTBEAT_TYPES = ("heartbeat",)
 def make_loss(spec: dict):
     """ProxLoss from a picklable spec — the coordinator cannot ship the
     ProxLoss itself (closures don't pickle), so both ends build it from
-    ``{"name": ..., **params}`` through this one factory."""
-    from repro.core import prox
-    name = spec["name"]
-    if name == "logistic":
-        return prox.make_logistic()
-    if name == "hinge":
-        return prox.make_hinge(float(spec.get("C", 1.0)))
-    if name == "least_squares":
-        return prox.make_least_squares()
-    if name == "l1":
-        return prox.make_l1(float(spec.get("mu", 1.0)))
-    raise ValueError(f"unknown cluster loss {name!r}")
+    ``{"name": ..., **params}`` through the one registry-backed factory
+    in :mod:`repro.core.prox` (every registered loss is cluster-capable
+    with zero per-topology code)."""
+    from repro.core.prox import loss_from_spec
+    return loss_from_spec(spec)
 
 
 def _setup_env(config: dict):
@@ -252,8 +245,10 @@ class WorkerRuntime:
                 f"worker {self.wid}: store block {bid} content does not "
                 f"match its write-time fingerprint — refusing assignment")
         br = self.store.block_rows
-        y = np.zeros((br,), np.float32)
-        lam = np.zeros((br,), np.float32)
+        ycols = getattr(self.loss, "ycols", 1)
+        shape = (br,) if ycols == 1 else (br, ycols)
+        y = np.zeros(shape, np.float32)
+        lam = np.zeros(shape, np.float32)
         if base is not None:
             y_l, lam_l = base
             y[: len(y_l)] = y_l
@@ -275,7 +270,8 @@ class WorkerRuntime:
         with self.tracer.span("block_step", block=bid, k=k):
             D_b, a_b = self.store.block(bid, padded=True)
             step = self._step if want_dual else self._step_lean
-            acc = _zero_sweep(self.store.n, jax.numpy.float32)
+            acc = _zero_sweep(self.store.n, jax.numpy.float32,
+                              getattr(self.loss, "ycols", 1))
             y_new, lam_new, acc = step(
                 jax.device_put(np.ascontiguousarray(D_b)),
                 jax.device_put(a_b) if a_b is not None else None,
@@ -288,11 +284,13 @@ class WorkerRuntime:
                              time.perf_counter() - t0)
         if want_dual:
             sl = self.store.block_slice(bid)
+            # wire format: reductions travel FLAT — (n, K) ravels to
+            # (n*K,) so tree merge + int8 compression stay shape-blind
             st["contrib"] = Contribution(
                 iteration=k, workers=(self.wid,),
                 rows=sl.stop - sl.start,
-                d=np.asarray(acc.d), w=np.asarray(acc.w),
-                v=np.asarray(acc.v),
+                d=np.asarray(acc.d).ravel(), w=np.asarray(acc.w).ravel(),
+                v=np.asarray(acc.v).ravel(),
                 scalars={"r_sq": float(acc.r_sq),
                          "dx_sq": float(acc.dx_sq),
                          "y_sq": float(acc.y_sq),
@@ -396,7 +394,8 @@ class WorkerRuntime:
                 time.sleep(param / 1e3)
         t_iter = time.perf_counter()
         x_dev = jax.device_put(np.asarray(msg["x"], np.float32))
-        own = Contribution.zero(k, self.store.n)
+        own = Contribution.zero(
+            k, self.store.n * getattr(self.loss, "ycols", 1))
         with self.tracer.span("worker_iter", k=k):
             for bid in sorted(self.blocks):
                 st = self.blocks[bid]

@@ -30,16 +30,13 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import gram as gram_lib
-from repro.core.prox import ProxLoss, soft_threshold
+from repro.core.prox import ProxLoss
 # One shared int8 error-feedback implementation for every wire: the
 # shard_map psum here and the multi-process cluster transport
-# (repro.cluster) quantize with the same blocks/scales. The underscored
-# names are re-exports kept for backward compatibility.
-from repro.cluster.compress import (
-    dequantize_int8 as _dequantize_int8,  # noqa: F401  (re-export)
-    ef_compress,
-    quantize_int8 as _quantize_int8,      # noqa: F401  (re-export)
-)
+# (repro.cluster) quantize with the same blocks/scales —
+# repro.cluster.compress is the single canonical module; import the
+# quantizers from there, not from here.
+from repro.cluster.compress import ef_compress
 
 Array = jax.Array
 
@@ -106,14 +103,15 @@ class DistributedUnwrappedADMM:
 
     # -- inner composite x-update: argmin mu|x| + tau/2 (x'Gx - 2 d'x) -------
     def _composite_x(self, G: Array, lmax: Array, d: Array, x_warm: Array):
-        step = 1.0 / (self.tau * lmax)
-
-        def body(x, _):
-            grad = self.tau * (G @ x - d)
-            return soft_threshold(x - step * grad, step * self.l1_mu), None
-
-        x, _ = jax.lax.scan(body, x_warm, None, length=self.inner_iters)
-        return x
+        # one prox-gradient implementation for every topology
+        # (repro.exec.base) — traceable, so it runs inside this shard_map
+        # body unchanged
+        from repro.core.prox import soft_threshold
+        from repro.exec.base import composite_x_update
+        return composite_x_update(
+            G, lmax, d, x_warm, self.tau,
+            lambda z, step: soft_threshold(z, step * self.l1_mu),
+            self.inner_iters)
 
     def build(self, mesh: Mesh, m_global: int, n: int, iters: int,
               obs=None):

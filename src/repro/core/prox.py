@@ -39,6 +39,14 @@ class ProxLoss:
         ``name`` at a static delta; losses that fold a weight into their
         prox (hinge absorbs C: prox_{C h}(z, d) = prox_h(z, C d)) record it
         here so the engine passes delta * scale to the kernel.
+      kernel_param: extra static shape parameter the kernel prox needs
+        beyond delta (quantile level q); 0.0 for parameter-free kinds.
+      ycols: columns of the splitting variable y (and of x). 1 for scalar-
+        response losses; K for multinomial logistic, whose iterates are
+        (m, K) matrices flowing through the same multi-RHS Gram machinery.
+      spec: picklable ``{"name": ..., **params}`` rebuilding this loss via
+        :func:`loss_from_spec` — how the cluster runtime ships losses
+        across process boundaries (closures don't pickle).
     """
 
     name: str
@@ -48,6 +56,12 @@ class ProxLoss:
     lipschitz: Optional[float] = None
     coordinatewise: bool = True
     kernel_delta_scale: float = 1.0
+    kernel_param: float = 0.0
+    ycols: int = 1
+    # compare=False keeps the frozen dataclass hashable (dict field):
+    # spec is serialization metadata, not solver identity — engines key
+    # jit/lru caches on the loss and must not hash the dict.
+    spec: Optional[dict] = dataclasses.field(default=None, compare=False)
 
 
 # ---------------------------------------------------------------------------
@@ -211,6 +225,137 @@ def make_huber(delta: float = 1.0) -> ProxLoss:
     return ProxLoss("huber", value, prox, grad, lipschitz=1.0)
 
 
+def make_quantile(q: float = 0.5) -> ProxLoss:
+    """Pinball (quantile) loss sum_k rho_q(z_k - b_k) with b passed as aux.
+
+    rho_q(r) = q*r for r >= 0, (q-1)*r for r < 0 — quantile regression at
+    level q (q=0.5 is LAD / median regression). The prox is a two-sided
+    asymmetric soft-threshold on the residual r0 = z - b: shift by d*q
+    from above, by d*(1-q) from below, dead-zone to exactly b between.
+    """
+    if not 0.0 < q < 1.0:
+        raise ValueError(f"quantile level must be in (0, 1), got {q}")
+
+    def value(z, aux):
+        r = z - aux
+        return jnp.sum(jnp.where(r >= 0, q * r, (q - 1.0) * r))
+
+    def prox(z, d, aux):
+        d = jnp.asarray(d, z.dtype)
+        r0 = z - aux
+        r = jnp.where(r0 > d * q, r0 - d * q,
+                      jnp.where(r0 < -d * (1.0 - q), r0 + d * (1.0 - q),
+                                0.0))
+        return aux + r
+
+    return ProxLoss("quantile", value, prox, grad=None, lipschitz=None,
+                    kernel_delta_scale=1.0, kernel_param=float(q),
+                    spec={"name": "quantile", "q": float(q)})
+
+
+def multinomial_prox_newton(z: Array, delta, labels: Array,
+                            newton_iters: int = 12) -> Array:
+    """Row-wise prox of the multinomial (softmax cross-entropy) NLL.
+
+    For each row: argmin_y logsumexp(y) - y_c + ||y - z||^2 / (2 delta).
+    The Hessian of the objective is H = diag(p) - p p^T + I/delta with
+    p = softmax(y), so each Newton solve is Sherman-Morrison against the
+    diagonal A = diag(p + 1/delta):
+
+        H^{-1} g = A^{-1} g + A^{-1} p (p^T A^{-1} g) / (1 - p^T A^{-1} p)
+
+    and the denominator is positive (p^T A^{-1} p < sum p_k = 1). Since
+    the CE gradient is bounded by 1 per coordinate, the minimizer lies in
+    ``|y - z| <= delta`` — steps are clipped to that trust region, which
+    keeps the undamped iteration from overshooting at large delta.
+    """
+    delta = jnp.asarray(delta, z.dtype)
+    onehot = jax.nn.one_hot(labels.astype(jnp.int32), z.shape[-1],
+                            dtype=z.dtype)
+
+    def newton(y, _):
+        p = jax.nn.softmax(y, axis=-1)
+        g = p - onehot + (y - z) / delta
+        a = p + 1.0 / delta
+        u = g / a
+        t = jnp.sum(p * u, axis=-1, keepdims=True) / (
+            1.0 - jnp.sum(p * p / a, axis=-1, keepdims=True))
+        step = u + (p / a) * t
+        return y - jnp.clip(step, -delta, delta), None
+
+    y, _ = jax.lax.scan(newton, z, None, length=newton_iters)
+    return y
+
+
+def make_multinomial(classes: int) -> ProxLoss:
+    """Multinomial logistic (softmax cross-entropy) over K classes.
+
+    The splitting variable y and the solution x are (rows, K) matrices:
+    z_row = D_row @ x gives per-class scores, aux holds integer class
+    labels in [0, K). Everything downstream reuses the multi-RHS Gram
+    machinery — d/w/v become (n, K) stacked right-hand sides.
+    """
+    if classes < 2:
+        raise ValueError(f"multinomial needs >= 2 classes, got {classes}")
+
+    def value(z, aux):
+        lab = aux.astype(jnp.int32)
+        lse = jax.nn.logsumexp(z, axis=-1)
+        picked = jnp.take_along_axis(z, lab[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - picked)
+
+    def prox(z, delta, aux):
+        return multinomial_prox_newton(z, delta, aux)
+
+    def grad(z, aux):
+        onehot = jax.nn.one_hot(aux.astype(jnp.int32), z.shape[-1],
+                                dtype=z.dtype)
+        return jax.nn.softmax(z, axis=-1) - onehot
+
+    return ProxLoss("multinomial", value, prox, grad, lipschitz=0.5,
+                    coordinatewise=False, ycols=int(classes),
+                    spec={"name": "multinomial", "classes": int(classes)})
+
+
+def group_soft_threshold(z: Array, thresh, groups: Array,
+                         num_groups: int) -> Array:
+    """prox of ``thresh * sum_g ||z_g||_2`` — the group-lasso shrink.
+
+    ``groups`` maps each coordinate to its group id in [0, num_groups);
+    each group's subvector is scaled by max(0, 1 - thresh/||z_g||) —
+    whole groups hit exactly zero together (Yuan & Lin 2006).
+    """
+    nrm = jnp.sqrt(jax.ops.segment_sum(z * z, groups,
+                                       num_segments=num_groups))
+    scale = jnp.where(nrm > thresh,
+                      1.0 - thresh / jnp.maximum(nrm, 1e-30), 0.0)
+    return z * scale[groups]
+
+
+def loss_from_spec(spec: dict) -> ProxLoss:
+    """ProxLoss from a picklable ``{"name": ..., **params}`` spec — the one
+    factory both the cluster coordinator and its workers use, so a loss
+    built on either side of a process boundary is identical."""
+    name = spec["name"]
+    if name == "logistic":
+        loss = make_logistic()
+    elif name == "hinge":
+        loss = make_hinge(float(spec.get("C", 1.0)))
+    elif name == "least_squares":
+        loss = make_least_squares()
+    elif name == "l1":
+        loss = make_l1(float(spec.get("mu", 1.0)))
+    elif name == "huber":
+        loss = make_huber(float(spec.get("delta", 1.0)))
+    elif name == "quantile":
+        loss = make_quantile(float(spec.get("q", 0.5)))
+    elif name == "multinomial":
+        loss = make_multinomial(int(spec["classes"]))
+    else:
+        raise ValueError(f"unknown loss spec {name!r}")
+    return dataclasses.replace(loss, spec=dict(spec))
+
+
 def project_nonneg(z: Array) -> Array:
     """Projection onto the nonnegative orthant (NNLS constraint)."""
     return jnp.maximum(z, 0.0)
@@ -292,4 +437,6 @@ LOSSES = {
     "least_squares": make_least_squares,
     "linf_ball": make_linf_ball,
     "shifted_least_squares": make_shifted_least_squares,
+    "quantile": make_quantile,
+    "multinomial": make_multinomial,
 }

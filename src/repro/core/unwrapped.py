@@ -239,62 +239,42 @@ class UnwrappedADMM:
         return ADMMResult(x, y.reshape(N, mi), lam.reshape(N, mi),
                           iters_used, history)
 
-    # -- early-stopping driver (lax.while_loop), deployment path --
+    # -- early-stopping driver, deployment path -----------------------------
     def solve(
         self, D, aux: Optional[Array], max_iters: int = 500,
-        x0: Optional[Array] = None, obs=None,
+        x0: Optional[Array] = None, record: bool = False,
+        reg=None, checkpoint_dir: Optional[str] = None,
+        checkpoint_every: int = 0, resume: bool = False, obs=None,
     ) -> ADMMResult:
         """``D`` is node-stacked dense (N, m_i, n) or a flat
-        :class:`BlockCSR`. ``obs`` wraps the jitted dispatch in one span
-        (the while-loop driver records no history to stream)."""
+        :class:`BlockCSR`. Runs through the shared executor driver
+        (DESIGN.md §14) on a :class:`repro.exec.LocalExecutor` — the
+        same stopping rule / warm start / checkpoint code path every
+        other topology uses. ``reg`` (a :class:`repro.exec.Regularizer`)
+        switches the x-update to the composite prox-gradient."""
+        from repro.exec import LocalExecutor, solve_with_executor
+        ex = LocalExecutor(self.engine, D, aux=aux,
+                           gram_block_rows=self.gram_block_rows)
+
+        def _drive(obs_arg):
+            return solve_with_executor(
+                ex, loss=self.loss, tau=self.tau, rho=self.rho,
+                eps_rel=self.eps_rel, eps_abs=self.eps_abs,
+                max_iters=max_iters, x0=x0, record=record, reg=reg,
+                checkpoint_dir=checkpoint_dir,
+                checkpoint_every=checkpoint_every, resume=resume,
+                obs=obs_arg)
+
         if obs is None or not obs.enabled:
-            if isinstance(D, BlockCSR):
-                return self._solve_sparse(D, aux, max_iters, x0=x0)
-            return self._solve_dense(D, aux, max_iters, x0)
+            return _drive(None)
         with obs.span("admm_solve", max_iters=max_iters,
                       sparse=isinstance(D, BlockCSR)):
-            if isinstance(D, BlockCSR):
-                res = self._solve_sparse(D, aux, max_iters, x0=x0)
-            else:
-                res = self._solve_dense(D, aux, max_iters, x0)
+            res = _drive(obs)
             jax.block_until_ready(res.x)
         obs.inc("admm.solves")
         obs.record(event="solve_done", iters=int(res.iters),
                    tau=self.tau, rho=self.rho)
         return res
-
-    @partial(jax.jit, static_argnames=("self", "max_iters"))
-    def _solve_dense(
-        self, D: Array, aux: Optional[Array], max_iters: int = 500,
-        x0: Optional[Array] = None,
-    ) -> ADMMResult:
-        N, mi, n = D.shape
-        m = N * mi
-        acc = gram_lib._acc_dtype(D.dtype)
-        eng = self.engine
-        Dflat = D.reshape(m, n)
-        L = self.setup(D)
-        Dres = eng.prepare(Dflat)
-        aux_f = aux.reshape(m) if aux is not None else None
-        y0, lam0, d0 = self._init_state(Dflat, x0, m, n, acc)
-
-        def cond(state):
-            _, _, _, _, k, done = state
-            return (~done) & (k < max_iters)
-
-        def body(state):
-            y, lam, d, _, k, _ = state
-            x = gram_lib.gram_solve(L, d)
-            st = eng.iterate(Dres, aux_f, y, lam, x, want_dual=True)
-            _, r, s, eps_pri, eps_dual = self._residuals_tolerances(
-                st, lam, m, n)
-            done = (r <= eps_pri) & (s <= eps_dual)
-            return (st.y, st.lam, st.d, x, k + 1, done)
-
-        state = (y0, lam0, d0, jnp.zeros((n,), acc),
-                 jnp.asarray(0, jnp.int32), jnp.asarray(False))
-        y, lam, d, x, k, done = jax.lax.while_loop(cond, body, state)
-        return ADMMResult(x, y.reshape(N, mi), lam.reshape(N, mi), k, None)
 
     # -- sparse drivers: same semantics over a BlockCSR ---------------------
     # The Gram setup is a HOST pass for sparse data (the O(nnz) gram has
@@ -359,37 +339,6 @@ class UnwrappedADMM:
         )
         iters_used = jnp.where(k_conv >= 0, k_conv + 1, iters)
         return ADMMResult(x, y[None], lam[None], iters_used, history)
-
-    def _solve_sparse(self, D: BlockCSR, aux, max_iters, x0=None):
-        L = self._sparse_setup(D)
-        return self._solve_sparse_jit(D, aux, L, max_iters, x0)
-
-    @partial(jax.jit, static_argnames=("self", "max_iters"))
-    def _solve_sparse_jit(self, D: BlockCSR, aux, L, max_iters, x0):
-        m, n = D.m, D.n
-        acc = gram_lib._acc_dtype(D.dtype)
-        eng = self.engine
-        Dres = eng.prepare(D)
-        aux_f = aux.reshape(m) if aux is not None else None
-        y0, lam0, d0 = self._sparse_init(D, x0, m, n, acc)
-
-        def cond(state):
-            _, _, _, _, k, done = state
-            return (~done) & (k < max_iters)
-
-        def body(state):
-            y, lam, d, _, k, _ = state
-            x = gram_lib.gram_solve(L, d)
-            st = eng.iterate(Dres, aux_f, y, lam, x, want_dual=True)
-            _, r, s, eps_pri, eps_dual = self._residuals_tolerances(
-                st, lam, m, n)
-            done = (r <= eps_pri) & (s <= eps_dual)
-            return (st.y, st.lam, st.d, x, k + 1, done)
-
-        state = (y0, lam0, d0, jnp.zeros((n,), acc),
-                 jnp.asarray(0, jnp.int32), jnp.asarray(False))
-        y, lam, d, x, k, done = jax.lax.while_loop(cond, body, state)
-        return ADMMResult(x, y[None], lam[None], k, None)
 
     # -- out-of-core driver: D streams from a host/disk block store --------
     def solve_streaming(

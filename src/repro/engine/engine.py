@@ -32,7 +32,8 @@ inlining einsums. The engine owns three interchangeable backends
 
 ``auto`` resolves per device (TPU -> pallas, else chunked), then falls
 back by capability: Pallas needs a kernel-supported coordinatewise prox
-(logistic / hinge / l1 / least_squares, f32 or bf16 rows); chunked needs a
+(logistic / hinge / l1 / least_squares / quantile, f32 or bf16 rows);
+chunked needs a
 coordinatewise prox; everything else lands on reference. bf16 data
 residency (``residency="bf16"``) halves iteration HBM bytes again on top
 of the fused pass — all accumulation stays f32 in-register regardless.
@@ -63,7 +64,8 @@ Array = jax.Array
 BACKENDS = ("reference", "chunked", "sparse", "pallas", "pallas_interpret")
 
 # Prox kinds the fused Pallas iteration kernel evaluates in-register.
-PALLAS_KINDS = frozenset({"logistic", "hinge", "l1", "least_squares"})
+PALLAS_KINDS = frozenset(
+    {"logistic", "hinge", "l1", "least_squares", "quantile"})
 
 # "auto" resolves per backend at prepare()-time: bf16 where the HBM-bytes
 # win is real (real-TPU pallas), None on CPU/chunked backends where the
@@ -281,6 +283,11 @@ class IterationEngine:
         y_new = self.loss.prox(Dx + lam, self.delta, aux)
         lam_new = lam + Dx - y_new
         if want_dual:
+            if y_new.ndim > 1:
+                # matrix iterates (m, K): three stacked multi-RHS products
+                DfT = Df.T
+                return EngineStep(y_new, lam_new, DfT @ (y_new - lam_new),
+                                  DfT @ (y_new - y), DfT @ lam_new)
             dwv = Df.T @ jnp.stack(
                 [y_new - lam_new, y_new - y, lam_new], axis=1)
             return EngineStep(y_new, lam_new, dwv[:, 0], dwv[:, 1],
@@ -335,7 +342,8 @@ class IterationEngine:
         y_new, lam_new, d, w, v = admm_iter_full(
             D, aux_arr, y, lam, x, kind=self.loss.name,
             delta=self.loss.kernel_delta_scale * self.delta,
-            block_m=bm, interpret=interpret)
+            block_m=bm, interpret=interpret,
+            param=self.loss.kernel_param)
         return EngineStep(y_new, lam_new, d, w if want_dual else None,
                           v if want_dual else None)
 

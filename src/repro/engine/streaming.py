@@ -29,7 +29,6 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-import time
 from functools import lru_cache
 from typing import Callable, Iterable, Iterator, NamedTuple, Optional
 
@@ -102,9 +101,11 @@ def staged(items: Iterable, stage: Callable, depth: int) -> Iterator:
 # jitted per-block bodies (cached per engine instance)
 # ---------------------------------------------------------------------------
 
-def _zero_sweep(n: int, dtype) -> "SweepResult":
-    """Fresh (unaliased) zero accumulators — donation-safe carry init."""
-    return SweepResult(*(jnp.zeros((n,), dtype) for _ in range(3)),
+def _zero_sweep(n: int, dtype, ycols: int = 1) -> "SweepResult":
+    """Fresh (unaliased) zero accumulators — donation-safe carry init.
+    ``ycols > 1`` (multinomial) widens the n-vectors to (n, ycols)."""
+    shape = (n,) if ycols == 1 else (n, ycols)
+    return SweepResult(*(jnp.zeros(shape, dtype) for _ in range(3)),
                        *(jnp.zeros((), dtype) for _ in range(4)))
 
 
@@ -162,6 +163,8 @@ def _block_fns(engine: IterationEngine, has_aux: bool,
             return y_b, spgram_ops.rmatvec(D_b, y_b)
         acc = gram_lib._acc_dtype(D_b.dtype)
         y_b = D_b.astype(acc) @ x0.astype(acc)
+        if y_b.ndim > 1:                   # matrix iterates (multinomial)
+            return y_b, D_b.astype(acc).T @ y_b
         return y_b, y_b @ D_b.astype(acc)
 
     def gram(G, D_b):
@@ -187,8 +190,10 @@ def store_pad_objective(store: ShardedMatrixStore, loss) -> float:
     pad = store.nblocks * store.block_rows - store.m
     if pad == 0:
         return 0.0
-    z = jnp.zeros((pad,), jnp.float32)
-    return float(loss.value(z, z if store.has_aux else None))
+    ycols = getattr(loss, "ycols", 1)
+    z = jnp.zeros((pad,) if ycols == 1 else (pad, ycols), jnp.float32)
+    a = jnp.zeros((pad,), jnp.float32)
+    return float(loss.value(z, a if store.has_aux else None))
 
 
 # ---------------------------------------------------------------------------
@@ -234,9 +239,9 @@ class StreamingEngine:
             D_b, a_b = store.block(k, padded=True)
             sl = store.block_slice(k)
             valid = sl.stop - sl.start
-            y_b = np.zeros((br,), y.dtype)
+            y_b = np.zeros((br,) + y.shape[1:], y.dtype)
             y_b[:valid] = y[sl]
-            lam_b = np.zeros((br,), lam.dtype)
+            lam_b = np.zeros((br,) + lam.shape[1:], lam.dtype)
             lam_b[:valid] = lam[sl]
             return (k, jax.device_put(self._cast(D_b)),
                     jax.device_put(self._cast(a_b))
@@ -310,7 +315,8 @@ class StreamingEngine:
         facc = gram_lib._acc_dtype(self.residency_dtype(store))
         # one buffer per field: the carry is DONATED into the step, and
         # XLA rejects donating one buffer through two arguments
-        acc = _zero_sweep(store.n, facc)
+        acc = _zero_sweep(store.n, facc,
+                          getattr(self.engine.loss, "ycols", 1))
         pending = None            # (slice, y_dev, lam_dev): lag-1 writeback
 
         def writeback(item):
@@ -380,103 +386,17 @@ def solve_streaming(solver, store: ShardedMatrixStore, max_iters: int = 500,
     ``obs`` (an :class:`repro.obs.Observability`) instruments the HOST
     loop only: spans around the Gram setup and each sweep, one telemetry
     JSONL record per iteration. ``None`` is the disabled fast path.
+
+    This is a thin wrapper: the loop itself lives in the shared executor
+    driver (``repro.exec``) behind a :class:`~repro.exec.StreamingExecutor`.
     """
-    from repro.core.unwrapped import ADMMHistory, ADMMResult
-    from repro.obs import NOOP
+    from repro.exec import StreamingExecutor, solve_with_executor
 
-    obs = obs if obs is not None else NOOP
-    m, n = store.m, store.n
-    seng = StreamingEngine(engine=solver.engine,
-                           prefetch=prefetch if overlap else 0,
-                           device_dtype=device_dtype)
-    acc = gram_lib._acc_dtype(seng.residency_dtype(store))
-
-    with obs.span("gram_setup", nblocks=store.nblocks):
-        G = seng.gram_from_store(store)
-        L = gram_lib.gram_factor(G, ridge=solver.rho / solver.tau)
-
-    y = np.zeros((m,), jnp.dtype(acc).name)
-    lam = np.zeros((m,), jnp.dtype(acc).name)
-    k = 0
-    manager = None
-    if checkpoint_dir is not None:
-        from repro.checkpoint.manager import CheckpointManager
-        manager = CheckpointManager(checkpoint_dir)
-    if manager is not None and resume and manager.latest_step() is not None:
-        like = {"x": jnp.zeros((n,), acc), "y": jnp.zeros((m,), acc),
-                "lam": jnp.zeros((m,), acc), "d": jnp.zeros((n,), acc)}
-        tree, extra = manager.restore(like)
-        if extra.get("kind") != "streaming_solve":
-            raise ValueError(f"not a streaming checkpoint: {extra}")
-        if extra.get("store_fingerprint") != store.fingerprint:
-            raise ValueError(
-                "checkpoint was written against a different store "
-                "(content fingerprint mismatch)")
-        y[:] = np.asarray(tree["y"])
-        lam[:] = np.asarray(tree["lam"])
-        d = tree["d"]
-        k = int(extra["iter"])
-        x_init = tree["x"]       # returned as-is if no iterations remain
-    elif x0 is not None:
-        with obs.span("init_from_x0"):
-            d = seng.init_from_x0(store, jnp.asarray(x0, acc), y)
-        x_init = jnp.zeros((n,), acc)
-    else:
-        d = jnp.zeros((n,), acc)
-        x_init = jnp.zeros((n,), acc)
-
-    pad_obj = seng.pad_objective(store)
-    objs, rs, ss = [], [], []
-    k_conv = -1
-    x = x_init
-    while k < max_iters:
-        t_it = time.perf_counter()
-        with obs.span("x_solve", k=k + 1):
-            x = gram_lib.gram_solve(L, d)
-        t_sw = time.perf_counter()
-        with obs.span("sweep", k=k + 1):
-            sw = seng.sweep(store, x, y, lam, overlap=overlap)
-        sweep_s = time.perf_counter() - t_sw
-        d = sw.d
-        r = float(jnp.sqrt(sw.r_sq))
-        s = solver.tau * float(jnp.linalg.norm(sw.w))
-        eps_pri = np.sqrt(m) * solver.eps_abs + solver.eps_rel * max(
-            float(jnp.sqrt(sw.dx_sq)), float(jnp.sqrt(sw.y_sq)))
-        eps_dual = np.sqrt(n) * solver.eps_abs + (
-            solver.eps_rel * solver.tau * float(jnp.linalg.norm(sw.v)))
-        k += 1
-        if record or obs.enabled:
-            obj = float(sw.obj) - pad_obj
-            if solver.rho:
-                obj += 0.5 * solver.rho * float(jnp.sum(x * x))
-            if record:
-                objs.append(obj)
-                rs.append(r)
-                ss.append(s)
-            if obs.enabled:
-                dt = time.perf_counter() - t_it
-                obs.observe("streaming.sweep_s", sweep_s)
-                obs.observe("streaming.iter_s", dt)
-                obs.record(iter=k, objective=obj, primal_res=r,
-                           dual_res=s, eps_pri=float(eps_pri),
-                           eps_dual=float(eps_dual), tau=solver.tau,
-                           rho=solver.rho, iter_s=round(dt, 6),
-                           sweep_s=round(sweep_s, 6))
-        if manager is not None and checkpoint_every \
-                and k % checkpoint_every == 0:
-            manager.save(k, {"x": x, "y": jnp.asarray(y),
-                             "lam": jnp.asarray(lam), "d": d},
-                         extra={"kind": "streaming_solve", "iter": k,
-                                "store_fingerprint": store.fingerprint})
-        if r <= eps_pri and s <= eps_dual:
-            k_conv = k - 1
-            break
-
-    history = None
-    if record:
-        nan = jnp.full((len(objs),), jnp.nan, acc)
-        history = ADMMHistory(jnp.asarray(objs, acc), jnp.asarray(rs, acc),
-                              jnp.asarray(ss, acc), nan,
-                              jnp.asarray(k_conv, jnp.int32))
-    return ADMMResult(x, jnp.asarray(y)[None], jnp.asarray(lam)[None],
-                      jnp.asarray(k, jnp.int32), history)
+    ex = StreamingExecutor(solver.engine, store, overlap=overlap,
+                           prefetch=prefetch, device_dtype=device_dtype)
+    return solve_with_executor(
+        ex, loss=solver.loss, tau=solver.tau, rho=solver.rho,
+        eps_rel=solver.eps_rel, eps_abs=solver.eps_abs,
+        max_iters=max_iters, x0=x0, record=record,
+        checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+        resume=resume, obs=obs)

@@ -1,0 +1,48 @@
+"""repro.exec — the SolveExecutor contract + the one shared ADMM driver.
+
+DESIGN.md §14: four interchangeable topology backends (local row blocks,
+out-of-core streaming, shard_map device mesh, multi-process cluster)
+behind one protocol of three primitives, with the stopping rule, warm
+starts, checkpoint/resume, telemetry and history in exactly one place.
+"""
+from repro.exec.base import (
+    Regularizer,
+    SolveExecutor,
+    composite_x_update,
+    make_group_lasso_reg,
+    make_l1_reg,
+    power_lmax,
+    solve_with_executor,
+)
+from repro.exec.cluster import ClusterExecutor
+from repro.exec.local import LocalExecutor
+from repro.exec.problems import (
+    EXECUTORS,
+    ExecProblem,
+    fit_on_executor,
+    make_executor,
+    make_problem,
+    synth_data,
+)
+from repro.exec.shard_map import ShardMapExecutor
+from repro.exec.streaming import StreamingExecutor
+
+__all__ = [
+    "Regularizer",
+    "SolveExecutor",
+    "composite_x_update",
+    "make_group_lasso_reg",
+    "make_l1_reg",
+    "power_lmax",
+    "solve_with_executor",
+    "ClusterExecutor",
+    "LocalExecutor",
+    "ShardMapExecutor",
+    "StreamingExecutor",
+    "EXECUTORS",
+    "ExecProblem",
+    "fit_on_executor",
+    "make_executor",
+    "make_problem",
+    "synth_data",
+]

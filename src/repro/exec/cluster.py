@@ -1,0 +1,180 @@
+"""ClusterExecutor — worker processes behind the fault-tolerant runtime.
+
+Reduces ``ClusterCoordinator.solve``'s hand-rolled loop to the three
+executor primitives: the setup stats-reduce, the warm-start base-state
+shipment, and one broadcast-collect round per sweep (joins, chaos,
+recovery and degradation all live INSIDE the sweep — the driver only
+sees a SweepResult or None). Everything coordinator-flavored that the
+other topologies also need (stopping rule, checkpoint cadence, history)
+moved to the shared driver.
+
+Wire format note: Contributions carry strictly flat f32 n-vectors. For
+multi-column iterates (multinomial, ycols=K) the workers ravel their
+(n, K) reductions to (n*K,) and this executor folds them back — the
+tree reduce, int8 compression and row accounting never learn about K.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.streaming import SweepResult
+from repro.exec.base import SolveExecutor
+
+
+class ClusterExecutor(SolveExecutor):
+    name = "cluster"
+    checkpoint_kind = "cluster_solve"
+    kind_label = "cluster"
+    restore_fallback = True              # a relaunched coordinator must
+    # survive one corrupt newest step when an older intact one exists
+
+    def __init__(self, coord):
+        from repro.cluster.coordinator import ClusterError
+        self.error_cls = ClusterError
+        self.coord = coord
+        self.m, self.n = coord.store.m, coord.store.n
+        self.ycols = getattr(coord.loss, "ycols", 1)
+        self.backend = coord.cfg.backend
+        self.converged = False
+        self._prev_wire = (coord.counter.snapshot()
+                           if coord.obs.enabled else None)
+        self._wire_delta = {}
+        if coord.cfg.staleness > 0:
+            coord._latest = {}
+
+    def _mat(self, flat: np.ndarray) -> np.ndarray:
+        v = np.asarray(flat, np.float32)
+        return v if self.ycols == 1 else v.reshape(self.n, self.ycols)
+
+    def setup(self, obs) -> jnp.ndarray:
+        with self.coord.obs.span("stats_reduce"):
+            return self.coord.stats().G
+
+    def init(self, x0) -> jnp.ndarray:
+        if x0 is None:
+            return self.zero_x()
+        # warm start = a zero-length resume: ship (y=Dx0, lam=0) as the
+        # recovery base at iteration 0, force-overwriting worker state.
+        # One streaming pass over the coordinator's own store replica
+        # computes the base — n-vectors aside, nothing crosses the wire
+        # that a checkpoint restore wouldn't.
+        from repro.engine import IterationEngine
+        from repro.engine.streaming import StreamingEngine
+        coord = self.coord
+        eng = StreamingEngine(engine=IterationEngine(
+            loss=coord.loss, tau=coord.tau, backend="reference"))
+        shape = ((self.m,) if self.ycols == 1 else (self.m, self.ycols))
+        y = np.zeros(shape, np.float32)
+        d = eng.init_from_x0(coord.store, jnp.asarray(x0, jnp.float32), y)
+        coord._base_iter = 0
+        coord._base_y = y
+        coord._base_lam = np.zeros(shape, np.float32)
+        coord._x_hist = []
+        for w in coord.members.alive():
+            coord._send_assign(w.wid, sorted(w.blocks), upto_iter=0,
+                               force=True)
+        return d
+
+    def sweep(self, x, k: int) -> Optional[SweepResult]:
+        coord = self.coord
+        # membership grows only at iteration boundaries: spawn any
+        # chaos-scheduled joiners, then fold completed registrations in
+        # (rebalance + epoch bump) before broadcasting k
+        coord._spawn_due_joins(k)
+        coord._apply_joins()
+        if coord._coord_injector is not None:
+            coord._coord_injector.set_iteration(k)
+        x_np = np.asarray(x, np.float32)
+        assert len(coord._x_hist) == k - 1 - coord._base_iter
+        coord._x_hist.append(x_np)
+        coord._broadcast_iter(k, x_np)
+        with coord.obs.span("collect", k=k):
+            total = (coord._collect_stale(k) if coord.cfg.staleness > 0
+                     else coord._collect_strict(k, x_np))
+        if total is None:
+            # DegradePolicy exhausted: stop with the best-so-far x (the
+            # newest broadcast) instead of hanging forever
+            coord._status = "degraded"
+            self.status = "degraded"
+            return None
+        coord._close_recovery(k)
+        if coord.obs.enabled:
+            wire = coord.counter.snapshot()
+            prev = self._prev_wire
+            tx = {t: v - prev["sent_bytes"].get(t, 0)
+                  for t, v in wire["sent_bytes"].items()}
+            rx = {t: v - prev["received_bytes"].get(t, 0)
+                  for t, v in wire["received_bytes"].items()}
+            self._prev_wire = wire
+            self._wire_delta = {
+                "tx_bytes": {t: v for t, v in tx.items() if v},
+                "rx_bytes": {t: v for t, v in rx.items() if v}}
+        sc = total.scalars
+        return SweepResult(
+            jnp.asarray(self._mat(total.d)),
+            jnp.asarray(self._mat(total.w)),
+            jnp.asarray(self._mat(total.v)),
+            jnp.asarray(sc["r_sq"]), jnp.asarray(sc["dx_sq"]),
+            jnp.asarray(sc["y_sq"]), jnp.asarray(sc["obj"]))
+
+    def pad_objective(self) -> float:
+        return self.coord._pad_objective()
+
+    def extra_record(self) -> dict:
+        return dict(self._wire_delta)
+
+    def finish(self, iters: int, converged: bool):
+        self.converged = converged
+        coord = self.coord
+        coord._iters_run += iters - self.resume_iter
+        if coord._status != "degraded":
+            coord._status = "converged" if converged else "max_iters"
+
+    # -- checkpointing ------------------------------------------------------
+    def checkpoint_extra(self) -> dict:
+        coord = self.coord
+        return {"loss": coord.loss_spec, "tau": coord.tau,
+                "rho": coord.rho,
+                "store_fingerprint": coord.store.fingerprint}
+
+    def verify_checkpoint(self, extra: dict):
+        if extra.get("store_fingerprint") != self.coord.store.fingerprint:
+            raise self.error_cls("checkpoint belongs to a different store")
+
+    def state_arrays(self, k: int) -> Optional[dict]:
+        got = self.coord._gather_iterates(k)
+        if got is None:
+            return None                  # membership raced; next interval
+        y, lam = got
+        return {"y": y, "lam": lam}
+
+    def on_checkpointed(self, k: int, state: dict):
+        # the checkpoint is also the new recovery base: replays start
+        # here, and the x-history before it can be dropped
+        coord = self.coord
+        coord._base_iter = k
+        coord._base_y = np.asarray(state["y"], np.float32)
+        coord._base_lam = np.asarray(state["lam"], np.float32)
+        coord._x_hist = []
+
+    def restore_state(self, k: int, tree: dict) -> np.ndarray:
+        coord = self.coord
+        coord._base_iter = k
+        coord._base_y = np.asarray(tree["y"], np.float32)
+        coord._base_lam = np.asarray(tree["lam"], np.float32)
+        coord._x_hist = []
+        for w in coord.members.alive():
+            coord._send_assign(w.wid, sorted(w.blocks), upto_iter=k,
+                               force=True)
+        return np.asarray(tree["d"], np.float32)
+
+    def final_iterates(self):
+        # the coordinator never holds full (y, lam); gathering them for
+        # the result would cost a round — expose the empty node-stacked
+        # convention instead (ClusterResult never carried them either)
+        shape = ((0, self.m) if self.ycols == 1
+                 else (0, self.m, self.ycols))
+        return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)

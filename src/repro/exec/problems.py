@@ -1,0 +1,193 @@
+"""Problems-on-executors: register a problem ONCE, run it anywhere.
+
+A problem here is (picklable loss spec, tau, rho, optional x-space
+regularizer factory) — nothing topology-specific. ``fit_on_executor``
+builds the right :class:`~repro.exec.base.SolveExecutor` for the
+requested topology and hands everything to the one shared driver, so a
+newly registered loss is immediately runnable on local, streaming,
+shard_map AND the multi-process cluster with zero per-topology code
+(the backend-parity suite asserts exactly that).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from repro.exec.base import (
+    Regularizer,
+    SolveExecutor,
+    make_group_lasso_reg,
+    solve_with_executor,
+)
+
+EXECUTORS = ("local", "streaming", "shard_map", "cluster")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecProblem:
+    """One solvable problem, topology-free. ``loss_spec`` must be
+    picklable (it ships to cluster worker processes and into checkpoint
+    extras); ``reg_factory(n)`` builds the x-space penalty — applied by
+    the DRIVER's composite x-update, so workers never see it."""
+
+    name: str
+    loss_spec: dict
+    tau: float = 1.0
+    rho: float = 0.0
+    reg_factory: Optional[Callable[[int], Regularizer]] = None
+
+    def loss(self):
+        from repro.core.prox import loss_from_spec
+        return loss_from_spec(self.loss_spec)
+
+    def reg(self, n: int) -> Optional[Regularizer]:
+        return self.reg_factory(n) if self.reg_factory else None
+
+
+def _group_lasso_factory(mu: float, group_size: int):
+    def make(n: int) -> Regularizer:
+        groups = np.arange(n) // group_size
+        return make_group_lasso_reg(mu, groups, int(groups[-1]) + 1)
+
+    return make
+
+
+def make_problem(name: str, **params) -> ExecProblem:
+    """The problem table — one line per problem, every executor."""
+    if name == "logistic":
+        return ExecProblem("logistic", {"name": "logistic"},
+                           tau=params.get("tau", 0.1))
+    if name == "svm":
+        return ExecProblem(
+            "svm", {"name": "hinge", "C": float(params.get("C", 1.0))},
+            tau=params.get("tau", 0.5), rho=float(params.get("rho", 1.0)))
+    if name == "least_squares":
+        return ExecProblem("least_squares", {"name": "least_squares"},
+                           tau=params.get("tau", 1.0))
+    if name == "quantile":
+        return ExecProblem(
+            "quantile",
+            {"name": "quantile", "q": float(params.get("q", 0.5))},
+            tau=params.get("tau", 1.0))
+    if name == "group_lasso":
+        return ExecProblem(
+            "group_lasso", {"name": "least_squares"},
+            tau=params.get("tau", 1.0),
+            reg_factory=_group_lasso_factory(
+                float(params.get("mu", 0.1)),
+                int(params.get("group_size", 4))))
+    if name == "multinomial":
+        return ExecProblem(
+            "multinomial",
+            {"name": "multinomial",
+             "classes": int(params.get("classes", 3))},
+            tau=params.get("tau", 0.5))
+    raise ValueError(f"unknown executor problem {name!r}; "
+                     f"known: logistic, svm, least_squares, quantile, "
+                     f"group_lasso, multinomial")
+
+
+def make_executor(kind: str, prob: ExecProblem, D, aux=None,
+                  backend: str = "auto", **opts) -> SolveExecutor:
+    """Build the executor for one topology over in-memory (m, n) data.
+    ``cluster`` is NOT built here — it owns worker processes and goes
+    through :class:`repro.cluster.coordinator.ClusterCoordinator`."""
+    from repro.engine import IterationEngine
+    engine = IterationEngine(loss=prob.loss(), tau=prob.tau,
+                             backend=backend)
+    D = np.asarray(D)
+    D2 = D.reshape(-1, D.shape[-1])
+    if kind == "local":
+        from repro.exec.local import LocalExecutor
+        return LocalExecutor(engine, D2[None],
+                             aux=None if aux is None else np.asarray(aux))
+    if kind == "streaming":
+        from repro.data.store import ShardedMatrixStore
+        from repro.exec.streaming import StreamingExecutor
+        store = opts.get("store")
+        if store is None:
+            aux_a = None if aux is None else np.asarray(aux)
+            br = opts.get("block_rows")
+            store = (ShardedMatrixStore.from_arrays(D2, aux_a) if br is None
+                     else ShardedMatrixStore.from_arrays(D2, aux_a,
+                                                         block_rows=br))
+        return StreamingExecutor(engine, store)
+    if kind == "shard_map":
+        from repro.exec.shard_map import ShardMapExecutor
+        return ShardMapExecutor(
+            engine, D2, aux=None if aux is None else np.asarray(aux),
+            mesh=opts.get("mesh"),
+            compress=bool(opts.get("compress", False)))
+    raise ValueError(f"unknown executor kind {kind!r}; "
+                     f"expected one of {EXECUTORS}")
+
+
+def fit_on_executor(prob: ExecProblem, executor: str, D, aux=None, *,
+                    x0=None, max_iters: int = 300, record: bool = False,
+                    eps_rel: float = 1e-3, eps_abs: float = 1e-6,
+                    checkpoint_dir: Optional[str] = None,
+                    checkpoint_every: int = 0, resume: bool = False,
+                    n_workers: int = 2, store_dir: Optional[str] = None,
+                    cluster_config=None, obs=None, **opts):
+    """Solve ``prob`` over ``D``/``aux`` on the named executor. Returns
+    an :class:`~repro.core.unwrapped.ADMMResult` (local / streaming /
+    shard_map) or a :class:`~repro.cluster.coordinator.ClusterResult`
+    (cluster) — both carry ``.x`` and ``.iters``."""
+    n = int(np.asarray(D).shape[-1])
+    reg = prob.reg(n)
+    if executor == "cluster":
+        import dataclasses as _dc
+
+        from repro.cluster.coordinator import ClusterConfig, cluster_solve
+        cfg = cluster_config or ClusterConfig(n_workers=n_workers)
+        if checkpoint_dir is not None:
+            cfg = _dc.replace(cfg, checkpoint_dir=checkpoint_dir,
+                              checkpoint_every=checkpoint_every,
+                              resume=resume)
+        D2 = np.asarray(D).reshape(-1, n)
+        return cluster_solve(
+            D2, None if aux is None else np.asarray(aux),
+            loss=prob.loss_spec, tau=prob.tau, rho=prob.rho,
+            max_iters=max_iters, store_dir=store_dir, config=cfg,
+            eps_rel=eps_rel, eps_abs=eps_abs, record=record,
+            x0=x0, reg=reg)
+    ex = make_executor(executor, prob, D, aux, **opts)
+    return solve_with_executor(
+        ex, loss=prob.loss(), tau=prob.tau, rho=prob.rho,
+        eps_rel=eps_rel, eps_abs=eps_abs, max_iters=max_iters, x0=x0,
+        record=record, reg=reg, checkpoint_dir=checkpoint_dir,
+        checkpoint_every=checkpoint_every, resume=resume, obs=obs)
+
+
+def synth_data(prob: ExecProblem, m: int = 96, n: int = 12,
+               seed: int = 0):
+    """Deterministic synthetic (D, aux) matched to the problem's aux
+    contract — labels in {-1, +1} (logistic / svm), targets b
+    (least-squares family), integer class ids (multinomial)."""
+    rng = np.random.default_rng(seed)
+    D = (rng.standard_normal((m, n)) / np.sqrt(n)).astype(np.float32)
+    x_true = rng.standard_normal((n,)).astype(np.float32)
+    z = D @ x_true
+    name = prob.loss_spec["name"]
+    if name in ("logistic", "hinge"):
+        aux = np.sign(z + 0.1 * rng.standard_normal(m)).astype(np.float32)
+        aux[aux == 0] = 1.0
+        # flip 15% of labels: separable data has NO finite logistic
+        # minimizer (x diverges, ADMM never converges) — noise keeps the
+        # optimum finite so every executor reaches the same fixed point
+        flip = rng.random(m) < 0.15
+        aux[flip] = -aux[flip]
+        return D, aux
+    if name == "multinomial":
+        K = int(prob.loss_spec["classes"])
+        W = rng.standard_normal((n, K)).astype(np.float32)
+        aux = np.argmax(D @ W + 0.1 * rng.standard_normal((m, K)),
+                        axis=1).astype(np.float32)
+        flip = rng.random(m) < 0.15
+        aux[flip] = np.floor(rng.random(flip.sum()) * K).astype(np.float32)
+        return D, aux
+    # least-squares family (quantile / group_lasso / least_squares)
+    aux = (z + 0.1 * rng.standard_normal(m)).astype(np.float32)
+    return D, aux

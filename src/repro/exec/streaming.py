@@ -1,0 +1,86 @@
+"""StreamingExecutor — out-of-core data behind a ShardedMatrixStore.
+
+The loop that used to be ``engine.streaming.solve_streaming`` reduced to
+its three primitives: Gram over the store blocks, warm-start init, and
+the double-buffered fused sweep — everything else (stopping rule,
+checkpoint cadence, telemetry) is the shared driver's. The checkpoint is
+bound to the store's content fingerprint, restored BITWISE-compatibly
+(the restored state is exactly the live state, so the remaining
+iterations replay the identical op sequence).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gram as gram_lib
+from repro.data.store import ShardedMatrixStore
+from repro.engine.streaming import StreamingEngine, SweepResult
+from repro.exec.base import SolveExecutor
+
+Array = jax.Array
+
+
+class StreamingExecutor(SolveExecutor):
+    name = "streaming"
+    checkpoint_kind = "streaming_solve"
+    kind_label = "streaming"
+
+    def __init__(self, engine, store: ShardedMatrixStore,
+                 overlap: bool = True, prefetch: int = 2,
+                 device_dtype: Optional[str] = None):
+        self.engine = engine
+        self.store = store
+        self.m, self.n = store.m, store.n
+        self.ycols = getattr(engine.loss, "ycols", 1)
+        self.backend = engine.resolve(
+            jnp.dtype(device_dtype or store.dtype.name))
+        self.overlap = overlap
+        self.seng = StreamingEngine(engine=engine,
+                                    prefetch=prefetch if overlap else 0,
+                                    device_dtype=device_dtype)
+        self.acc = gram_lib._acc_dtype(self.seng.residency_dtype(store))
+        shape = ((self.m,) if self.ycols == 1
+                 else (self.m, self.ycols))
+        self._y = np.zeros(shape, jnp.dtype(self.acc).name)
+        self._lam = np.zeros(shape, jnp.dtype(self.acc).name)
+
+    def setup(self, obs) -> Array:
+        return self.seng.gram_from_store(self.store)
+
+    def init(self, x0: Optional[Array]) -> Array:
+        if x0 is None:
+            return self.zero_x()
+        return self.seng.init_from_x0(
+            self.store, jnp.asarray(x0, self.acc), self._y)
+
+    def sweep(self, x: Array, k: int) -> SweepResult:
+        return self.seng.sweep(self.store, x, self._y, self._lam,
+                               overlap=self.overlap)
+
+    def pad_objective(self) -> float:
+        return self.seng.pad_objective(self.store)
+
+    # -- checkpointing ------------------------------------------------------
+    def checkpoint_extra(self) -> dict:
+        return {"store_fingerprint": self.store.fingerprint}
+
+    def verify_checkpoint(self, extra: dict):
+        if extra.get("store_fingerprint") != self.store.fingerprint:
+            raise ValueError(
+                "checkpoint was written against a different store "
+                "(content fingerprint mismatch)")
+
+    def restore_state(self, k: int, tree: dict) -> Array:
+        self._y[:] = np.asarray(tree["y"])
+        self._lam[:] = np.asarray(tree["lam"])
+        return tree["d"]
+
+    def state_arrays(self, k: int) -> dict:
+        return {"y": jnp.asarray(self._y), "lam": jnp.asarray(self._lam)}
+
+    def final_iterates(self):
+        return jnp.asarray(self._y)[None], jnp.asarray(self._lam)[None]

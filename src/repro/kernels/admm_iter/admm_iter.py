@@ -34,7 +34,8 @@ from repro.kernels.prox.prox import _prox_body
 
 
 def _kernel(x_ref, d_in_ref, y_ref, lam_ref, aux_ref, y_out_ref, lam_out_ref,
-            d_out_ref, w_out_ref, v_out_ref, *, kind: str, delta: float):
+            d_out_ref, w_out_ref, v_out_ref, *, kind: str, delta: float,
+            param: float):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -52,7 +53,7 @@ def _kernel(x_ref, d_in_ref, y_ref, lam_ref, aux_ref, y_out_ref, lam_out_ref,
         Db, x, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)         # (bm, 1)
     z = Dx + lam
-    y = _prox_body(kind, z, delta, aux, newton_iters=3)
+    y = _prox_body(kind, z, delta, aux, newton_iters=3, param=param)
     lam_new = lam + Dx - y
     y_out_ref[...] = y
     lam_out_ref[...] = lam_new
@@ -79,7 +80,8 @@ def _kernel(x_ref, d_in_ref, y_ref, lam_ref, aux_ref, y_out_ref, lam_out_ref,
 
 
 def admm_iter_pallas(D, aux, y, lam, x, *, kind: str, delta: float,
-                     block_m: int = 1024, interpret: bool = False):
+                     block_m: int = 1024, interpret: bool = False,
+                     param: float = 0.0):
     """D: (m, n); aux/y/lam: (m,); x: (n,). m % block_m == 0 (ops pads).
     Returns (y', lam', d, w, v) with d = D^T(y'-lam'), w = D^T(y'-y) and
     v = D^T lam' accumulated in f32 in the same row stream."""
@@ -87,7 +89,8 @@ def admm_iter_pallas(D, aux, y, lam, x, *, kind: str, delta: float,
     assert m % block_m == 0
     grid = (m // block_m,)
     col = lambda v: v.reshape(m, 1)
-    kernel = functools.partial(_kernel, kind=kind, delta=float(delta))
+    kernel = functools.partial(_kernel, kind=kind, delta=float(delta),
+                               param=float(param))
     y_new, lam_new, d, w, v = pl.pallas_call(
         kernel,
         grid=grid,

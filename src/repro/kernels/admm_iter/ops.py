@@ -13,9 +13,11 @@ from repro.kernels.admm_iter.admm_iter import admm_iter_pallas
 
 
 @functools.partial(
-    jax.jit, static_argnames=("kind", "delta", "block_m", "interpret"))
+    jax.jit, static_argnames=("kind", "delta", "block_m", "interpret",
+                              "param"))
 def admm_iter_full(D, aux, y, lam, x, *, kind: str, delta: float,
-                   block_m: int = 1024, interpret: bool = False):
+                   block_m: int = 1024, interpret: bool = False,
+                   param: float = 0.0):
     """Fused iteration body returning (y', lam', d, w, v).
 
     d = D^T(y' - lam') feeds the next x-update (paper Alg. 2 line 6);
@@ -34,7 +36,7 @@ def admm_iter_full(D, aux, y, lam, x, *, kind: str, delta: float,
         lam = jnp.pad(lam, (0, pad))
     y_new, lam_new, d, w, v = admm_iter_pallas(
         D, aux, y, lam, x, kind=kind, delta=delta, block_m=block_m,
-        interpret=interpret)
+        interpret=interpret, param=param)
     return y_new[:m], lam_new[:m], d, w, v
 
 

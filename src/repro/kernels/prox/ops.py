@@ -12,7 +12,8 @@ from repro.kernels.prox.prox import prox_update_pallas
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kind", "delta", "newton_iters", "block_rows", "interpret"),
+    static_argnames=("kind", "delta", "newton_iters", "block_rows",
+                     "interpret", "param"),
 )
 def prox_update(
     Dx: jax.Array,
@@ -24,6 +25,7 @@ def prox_update(
     newton_iters: int = 3,
     block_rows: int = 256,
     interpret: bool = False,
+    param: float = 0.0,
 ):
     """y = prox_f(Dx + lam, delta); lam' = lam + Dx - y, fused. 1-D inputs."""
     (m,) = Dx.shape
@@ -41,6 +43,6 @@ def prox_update(
     y, lam_new = prox_update_pallas(
         _prep(Dx), _prep(lam), _prep(aux),
         kind=kind, delta=delta, newton_iters=newton_iters,
-        block_rows=block_rows, interpret=interpret,
+        block_rows=block_rows, interpret=interpret, param=param,
     )
     return y.reshape(-1)[:m], lam_new.reshape(-1)[:m]

@@ -22,7 +22,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _prox_body(kind: str, z, delta: float, aux, newton_iters: int,
-               bisect_iters: int = 40):
+               bisect_iters: int = 40, param: float = 0.0):
     if kind == "logistic":
         # Branch-free bisection on the monotone phi' over [z-d, z+d], then a
         # Newton polish — all unrolled in-register on the VPU (undamped
@@ -48,16 +48,27 @@ def _prox_body(kind: str, z, delta: float, aux, newton_iters: int,
         return jnp.sign(z) * jnp.maximum(jnp.abs(z) - delta, 0.0)
     if kind == "least_squares":
         return (z + delta * aux) / (1.0 + delta)
+    if kind == "quantile":
+        # pinball loss at level q = param (aux carries the target b):
+        # two-sided asymmetric soft-threshold on the residual r0 = z - b —
+        # shift by delta*q from above, delta*(1-q) from below, dead-zone
+        # to exactly b between (mirrors core/prox.make_quantile).
+        q = param
+        r0 = z - aux
+        r = jnp.where(r0 > delta * q, r0 - delta * q,
+                      jnp.where(r0 < -delta * (1.0 - q),
+                                r0 + delta * (1.0 - q), 0.0))
+        return aux + r
     raise ValueError(kind)
 
 
 def _kernel(dx_ref, lam_ref, aux_ref, y_ref, lam_out_ref, *, kind, delta,
-            newton_iters):
+            newton_iters, param):
     dx = dx_ref[...].astype(jnp.float32)
     lam = lam_ref[...].astype(jnp.float32)
     aux = aux_ref[...].astype(jnp.float32) if aux_ref is not None else None
     z = dx + lam
-    y = _prox_body(kind, z, delta, aux, newton_iters)
+    y = _prox_body(kind, z, delta, aux, newton_iters, param=param)
     y_ref[...] = y.astype(y_ref.dtype)
     lam_out_ref[...] = (lam + dx - y).astype(lam_out_ref.dtype)
 
@@ -73,13 +84,15 @@ def prox_update_pallas(
     block_rows: int = 256,
     lanes: int = 1024,
     interpret: bool = False,
+    param: float = 0.0,
 ):
     """Inputs are (rows, lanes)-shaped streams (ops.py reshapes/pads)."""
     rows, l = Dx.shape
     assert l == lanes and rows % block_rows == 0
     grid = (rows // block_rows,)
     kernel = functools.partial(
-        _kernel, kind=kind, delta=float(delta), newton_iters=newton_iters
+        _kernel, kind=kind, delta=float(delta), newton_iters=newton_iters,
+        param=float(param),
     )
     spec = pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))
     return pl.pallas_call(

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 
 
-def _prox(kind, z, delta, aux, newton_iters=3, bisect_iters=40):
+def _prox(kind, z, delta, aux, newton_iters=3, bisect_iters=40, param=0.0):
     if kind == "logistic":
         # bisection on the monotone phi' over [z-d, z+d], Newton polish
         # (mirrors repro.core.prox.logistic_prox_newton).
@@ -27,14 +27,22 @@ def _prox(kind, z, delta, aux, newton_iters=3, bisect_iters=40):
         return jnp.sign(z) * jnp.maximum(jnp.abs(z) - delta, 0.0)
     if kind == "least_squares":
         return (z + delta * aux) / (1.0 + delta)
+    if kind == "quantile":
+        # pinball at level q = param: asymmetric soft-threshold on z - aux
+        q = param
+        r0 = z - aux
+        r = jnp.where(r0 > delta * q, r0 - delta * q,
+                      jnp.where(r0 < -delta * (1.0 - q),
+                                r0 + delta * (1.0 - q), 0.0))
+        return aux + r
     raise ValueError(kind)
 
 
-def prox_update_ref(kind, Dx, lam, aux, delta, newton_iters=8):
+def prox_update_ref(kind, Dx, lam, aux, delta, newton_iters=8, param=0.0):
     """y = prox_f(Dx + lam, delta); lam' = lam + Dx - y. f32 math."""
     Dxf = Dx.astype(jnp.float32)
     lamf = lam.astype(jnp.float32)
     auxf = aux.astype(jnp.float32) if aux is not None else None
     z = Dxf + lamf
-    y = _prox(kind, z, jnp.float32(delta), auxf, newton_iters)
+    y = _prox(kind, z, jnp.float32(delta), auxf, newton_iters, param=param)
     return y, lamf + Dxf - y

@@ -3,44 +3,46 @@
 ``python -m repro.launch.fit --problem logistic --method transpose
      --nodes 8 --rows-per-node 50000 --features 200 [--heterogeneous]``
 
-This is the paper's kind of end-to-end run (fit a linear model over a large
-distributed corpus); the multi-device path row-shards D over all local
-devices via shard_map and the transpose-reduction all-reduce.
+ONE topology knob selects where the solve runs (DESIGN.md §14):
 
-``--streaming`` switches to the out-of-core path (DESIGN.md §9): the data
-is staged into a ``ShardedMatrixStore`` (host RAM, or memory-mapped under
-``--store-dir``) sized by ``--device-budget-mb``, and the solve streams
-row blocks through the fused engine body with double-buffered transfers —
-the paper's 5 Tb regime, where D never fits the accelerator.
+``--executor local``      — in-memory single-process solve (default);
+``--executor streaming``  — the out-of-core path (DESIGN.md §9): data is
+    staged into a ``ShardedMatrixStore`` (host RAM, or memory-mapped
+    under ``--store-dir``) sized by ``--device-budget-mb``, and the solve
+    streams row blocks through the fused engine body — the paper's 5 Tb
+    regime, where D never fits the accelerator;
+``--executor shard_map``  — row-shard D over all local devices via
+    shard_map and the transpose-reduction all-reduce (paper Alg. 2);
+``--executor cluster``    — the solve over ``--workers N`` worker
+    PROCESSES (DESIGN.md §11): each worker owns a set of row blocks and
+    ships only n-length reductions per iteration, with heartbeats, block
+    reassignment on worker death, and optional int8-compressed tree
+    reduction (``--cluster-compress``) or bounded-staleness quorum
+    aggregation (``--cluster-staleness S``). Lasso here is the paper-§4
+    regression path: ONE distributed stats reduction, then a local FASTA
+    solve — no per-iteration communication at all.
+
+All four are the SAME shared driver over different SolveExecutor
+backends (``repro.exec``). The old ``--streaming`` / ``--multi-device`` /
+``--cluster N`` selector flags still work as deprecated aliases.
 
 ``--density p`` generates the data SPARSE (Bernoulli(p) pattern) and —
 with the default ``--sparse-format blockcsr`` — runs the whole pipeline
 through the padded block-CSR path (DESIGN.md §10): O(nnz) iterations,
 O(nnz) Gram setup, nnz-scaled stores. ``--sparse-format dense``
 densifies the same data and runs the dense path (the comparison knob).
-
-``--cluster N`` runs the solve over N worker PROCESSES (DESIGN.md §11):
-the data is staged into a shared block store, each worker owns a set of
-row blocks and ships only n-length reductions per iteration, and the
-coordinator (this process) does the global x-update — the paper's
-actual deployment shape, with heartbeats, block reassignment on worker
-death, and optional int8-compressed tree reduction
-(``--cluster-compress``) or bounded-staleness quorum aggregation
-(``--cluster-staleness S``). Lasso under ``--cluster`` is the paper-§4
-regression path: ONE distributed stats reduction, then a local FASTA
-solve — no per-iteration communication at all.
 """
 from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fit import FitResult, fit as fit_glm
-from repro.core.distributed import DistributedUnwrappedADMM, shard_rows
 from repro.core.oracles import (
     lasso_kkt_gap,
     logistic_objective,
@@ -49,7 +51,6 @@ from repro.core.oracles import (
 from repro.core.prox import make_hinge, make_logistic
 from repro.data import synthetic
 from repro.obs import Observability
-from repro.sharding import compat
 
 
 def _admm_params(problem):
@@ -105,7 +106,8 @@ def _fit_streaming(args, D, aux, mu, obs=None):
         return FitResult(fr.x, int(fr.iters), fr.objective, "transpose",
                          "lasso")
     if args.problem not in ("logistic", "svm"):
-        raise SystemExit(f"--streaming does not support {args.problem!r} "
+        raise SystemExit(f"--executor streaming does not support "
+                         f"{args.problem!r} "
                          f"(needs a separable ProxLoss on Dx)")
     loss, rho, tau, _ = _admm_params(args.problem)
     solver = UnwrappedADMM(loss=loss, tau=tau, rho=rho)
@@ -176,7 +178,8 @@ def _fit_cluster(args, D, aux, mu):
         return FitResult(fr.x, int(fr.iters), fr.objective, "transpose",
                          "lasso")
     if args.problem not in ("logistic", "svm"):
-        raise SystemExit(f"--cluster does not support {args.problem!r} "
+        raise SystemExit(f"--executor cluster does not support "
+                         f"{args.problem!r} "
                          f"(needs a separable ProxLoss on Dx)")
     _, rho, tau, spec = _admm_params(args.problem)
     res = cluster_solve(D, aux, spec, tau=tau, rho=rho,
@@ -246,19 +249,27 @@ def main(argv=None):
     ap.add_argument("--iters", type=int, default=300)
     ap.add_argument("--mu", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--executor", default=None,
+                    choices=["local", "streaming", "shard_map", "cluster"],
+                    help="solve topology: in-memory local (default), "
+                         "out-of-core streaming, multi-device shard_map, "
+                         "or multi-process cluster (--workers N) — all "
+                         "the same driver over repro.exec backends")
+    ap.add_argument("--workers", type=int, default=2, metavar="N",
+                    help="worker processes for --executor cluster")
     ap.add_argument("--multi-device", action="store_true",
-                    help="shard rows over all local jax devices")
+                    help="deprecated alias for --executor shard_map")
     ap.add_argument("--streaming", action="store_true",
-                    help="out-of-core solve from a row-block store "
-                         "(device memory bounded by one block)")
+                    help="deprecated alias for --executor streaming")
     ap.add_argument("--device-budget-mb", type=int, default=256,
-                    help="per-block device-memory budget for --streaming")
+                    help="per-block device-memory budget for "
+                         "--executor streaming")
     ap.add_argument("--store-dir", default=None,
                     help="persist the block store here (memory-mapped "
                          "reopen) instead of holding it in host RAM")
     ap.add_argument("--cluster", type=int, default=0, metavar="N",
-                    help="run the solve over N worker processes "
-                         "(coordinator/worker runtime, DESIGN.md §11)")
+                    help="deprecated alias for --executor cluster "
+                         "--workers N")
     ap.add_argument("--cluster-compress", action="store_true",
                     help="int8 error-feedback compression on every "
                          "reduce hop (with --cluster)")
@@ -306,6 +317,27 @@ def main(argv=None):
                          "(summarize with repro.launch.obs_report)")
     args = ap.parse_args(argv)
 
+    # one topology knob; the old selector flags resolve into it with a
+    # deprecation warning (their tuning companions are still honored)
+    if args.executor is None:
+        if args.cluster:
+            warnings.warn("--cluster N is deprecated; use --executor "
+                          "cluster --workers N", DeprecationWarning,
+                          stacklevel=2)
+            args.executor = "cluster"
+        elif args.streaming:
+            warnings.warn("--streaming is deprecated; use --executor "
+                          "streaming", DeprecationWarning, stacklevel=2)
+            args.executor = "streaming"
+        elif args.multi_device:
+            warnings.warn("--multi-device is deprecated; use --executor "
+                          "shard_map", DeprecationWarning, stacklevel=2)
+            args.executor = "shard_map"
+        else:
+            args.executor = "local"
+    if args.executor == "cluster" and not args.cluster:
+        args.cluster = args.workers
+
     key = jax.random.PRNGKey(args.seed)
     N, mi, n = args.nodes, args.rows_per_node, args.features
     het = 1.0 if args.heterogeneous else 0.0
@@ -350,38 +382,36 @@ def main(argv=None):
     # one Observability bundle per run: the cluster path hands the run
     # directory to the coordinator instead (it owns the merged trace),
     # so this process's bundle stays disabled there
-    obs = Observability(dir=args.obs_dir if not args.cluster else None,
-                        process_name="fit")
+    obs = Observability(
+        dir=args.obs_dir if args.executor != "cluster" else None,
+        process_name="fit")
     t0 = time.time()
-    if args.cluster:
+    if args.executor == "cluster":
         if sparse_input:
-            raise SystemExit("--cluster currently takes dense data "
-                             "(use --sparse-format dense)")
+            raise SystemExit("--executor cluster currently takes dense "
+                             "data (use --sparse-format dense)")
         res = _fit_cluster(args, D, aux, mu)
-    elif sparse_input and not args.streaming:
+    elif sparse_input and args.executor != "streaming":
         res = _fit_sparse(args, D, aux, mu, obs=obs)
-    elif args.streaming:
+    elif args.executor == "streaming":
         res = _fit_streaming(args, D, aux, mu, obs=obs)
-    elif args.multi_device and args.method == "transpose" \
+    elif args.executor == "shard_map" and args.method == "transpose" \
             and args.problem in ("logistic", "svm"):
-        ndev = len(jax.devices())
-        mesh = compat.make_mesh((ndev,), ("data",))
+        # the shard_map SolveExecutor under the shared driver: the same
+        # stopping rule / telemetry as every other topology, devices
+        # discovered from the default mesh
+        from repro.engine import IterationEngine
+        from repro.exec import ShardMapExecutor, solve_with_executor
         loss, rho, tau, _ = _admm_params(args.problem)
-        solver = DistributedUnwrappedADMM(
-            loss=loss, tau=tau, rho=rho, data_axes=("data",))
         m = N * mi
-        solve = solver.build(mesh, m, n, iters=args.iters, obs=obs)
-        if m % ndev:
-            # uneven rows cannot be pre-sharded (NamedSharding needs
-            # axis-0 divisibility): hand build()'s returned fn HOST
-            # arrays and let its zero-pad wrapper place them
-            x, objs, _ = solve(D.reshape(m, n), aux.reshape(m))
-        else:
-            Dg = shard_rows(mesh, D.reshape(m, n), ("data",))
-            ag = shard_rows(mesh, aux.reshape(m), ("data",))
-            x, objs, _ = solve(Dg, ag)
-        res = FitResult(x, args.iters, objs, "transpose",
-                                args.problem)
+        ex = ShardMapExecutor(IterationEngine(loss=loss, tau=tau),
+                              np.asarray(D.reshape(m, n)),
+                              aux=np.asarray(aux.reshape(m)))
+        r = solve_with_executor(ex, loss=loss, tau=tau, rho=rho,
+                                max_iters=args.iters, record=True,
+                                obs=obs)
+        res = FitResult(r.x, int(r.iters), r.history.objective,
+                        "transpose", args.problem)
     else:
         with obs.span("fit_glm", problem=args.problem,
                       method=args.method):

@@ -18,6 +18,7 @@ Two solver surfaces per problem:
 Registered problems (>= 7 through the one entry point):
   lasso, logistic, svm, sparse_logistic   (seed solvers, relocated here)
   ridge, elastic_net, huber, nnls         (new in the serving layer)
+  quantile, group_lasso, multinomial      (executor-backed, DESIGN.md §14)
 """
 from __future__ import annotations
 
@@ -290,3 +291,45 @@ def _huber_transpose(D, aux, delta: float = 1.0, tau=None, iters=500,
         D, aux, iters, x0=x0, record=record)
     hist = r.history.objective if r.history else None
     return _result(r.x, int(r.iters), hist, "transpose", "huber")
+
+
+@register_problem("quantile", "transpose")
+def _quantile_transpose(D, aux, q: float = 0.5, tau=None, iters=500,
+                        record=True, x0=None, **_):
+    """Quantile regression min sum rho_q(Dx - b): pinball prox, same
+    transpose-reduction loop (and the fused Pallas prox kind)."""
+    r = UnwrappedADMM(loss=prox_lib.make_quantile(q),
+                      tau=1.0 if tau is None else tau).run(
+        D, aux, iters, x0=x0, record=record)
+    hist = r.history.objective if r.history else None
+    return _result(r.x, int(r.iters), hist, "transpose", "quantile")
+
+
+@register_problem("group_lasso", "transpose")
+def _group_lasso_transpose(D, aux, mu=None, groups=None, tau=None,
+                           iters=500, record=True, x0=None, **_):
+    """Group lasso min 0.5||Dx-b||^2 + mu sum_g ||x_g||: least-squares
+    data term plus an x-space group penalty solved by the driver's
+    composite prox-gradient x-update (repro.exec.base.Regularizer)."""
+    assert mu is not None
+    from repro.exec import make_group_lasso_reg
+    n = D.shape[-1]
+    g = jnp.arange(n) // 4 if groups is None else jnp.asarray(groups)
+    reg = make_group_lasso_reg(float(mu), g, int(g[-1]) + 1)
+    r = UnwrappedADMM(loss=prox_lib.make_least_squares(),
+                      tau=1.0 if tau is None else tau).solve(
+        D, aux, max_iters=iters, x0=x0, record=record, reg=reg)
+    hist = r.history.objective if r.history else None
+    return _result(r.x, int(r.iters), hist, "transpose", "group_lasso")
+
+
+@register_problem("multinomial", "transpose")
+def _multinomial_transpose(D, aux, classes: int = 3, tau=None, iters=500,
+                           record=True, x0=None, **_):
+    """Multinomial logistic over K classes: (m, K) splitting iterates
+    through the same multi-RHS Gram machinery; x comes back (n, K)."""
+    r = UnwrappedADMM(loss=prox_lib.make_multinomial(int(classes)),
+                      tau=0.5 if tau is None else tau).solve(
+        D, aux, max_iters=iters, x0=x0, record=record)
+    hist = r.history.objective if r.history else None
+    return _result(r.x, int(r.iters), hist, "transpose", "multinomial")

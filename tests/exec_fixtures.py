@@ -1,0 +1,83 @@
+"""Shared problem/data fixtures for executor parity.
+
+One place defines the parity problems (loss config + ridge + synthetic
+data) and the comparison metric; the matrix suite
+(test_executor_parity.py) AND the per-topology test files
+(test_streaming / test_cluster) import from here instead of keeping
+private copies that drift.
+
+Why every parity problem carries a small ridge: the backend-parity
+contract is "same x to 1e-5 on all four topologies", and that only has
+a float32 meaning when the optimum is unique and the iteration
+contracts — a separable logistic (x diverges) or an unregularized
+piecewise-linear loss lets psum-reordering noise random-walk the
+trajectories apart. Regularizer problems (group lasso) keep rho=0: the
+composite prox-gradient x-update has no ridge term, matching the
+legacy composite paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.exec import EXECUTORS, make_problem, synth_data
+
+# problem -> (make_problem kwargs, ridge rho override or None)
+PARITY_CONFIGS = {
+    "logistic": (dict(tau=1.0), 0.1),
+    "svm": ({}, None),                      # already carries rho=1.0
+    "quantile": (dict(q=0.35), 0.2),
+    "group_lasso": ({}, None),              # reg path: no ridge
+    "multinomial": (dict(classes=3, tau=1.0), 0.3),
+}
+PARITY_PROBLEMS = tuple(PARITY_CONFIGS)
+# the problems this PR added — must pass parity on ALL four executors,
+# including the warm-start and checkpoint-resume legs
+NEW_PROBLEMS = ("quantile", "group_lasso", "multinomial")
+
+PARITY_TOL = 1e-5
+SOLVE_KW = dict(max_iters=2000, eps_rel=1e-5, eps_abs=1e-7)
+DATA_KW = dict(m=64, n=8, seed=2)
+N_WORKERS = 2
+
+assert set(("local", "streaming", "shard_map", "cluster")) == set(EXECUTORS)
+
+
+def parity_problem(name: str):
+    """(ExecProblem, D, aux) for one parity matrix row."""
+    kw, rho = PARITY_CONFIGS[name]
+    prob = make_problem(name, **kw)
+    if rho is not None:
+        prob = dataclasses.replace(prob, rho=rho)
+    D, aux = synth_data(prob, **DATA_KW)
+    return prob, D, aux
+
+
+def rel_gap(x_ref, x) -> float:
+    """sup-norm gap scaled by the reference magnitude (floor 1.0)."""
+    x_ref = np.asarray(x_ref)
+    x = np.asarray(x).reshape(x_ref.shape)
+    return float(np.max(np.abs(x - x_ref))
+                 / max(1.0, float(np.max(np.abs(x_ref)))))
+
+
+# ---------------------------------------------------------------------------
+# per-topology file fixtures (imported by test_streaming / test_cluster)
+# ---------------------------------------------------------------------------
+
+def classification_fixture(N=4, m_per_node=300, n=24, seed=0):
+    """The node-stacked classification problem the streaming tests use."""
+    import jax
+
+    from repro.data.synthetic import classification_problem
+    return classification_problem(jax.random.PRNGKey(seed), N=N,
+                                  m_per_node=m_per_node, n=n)
+
+
+def cluster_problem(m=1200, n=20, seed=0):
+    """The flat logistic problem the cluster tests use."""
+    rng = np.random.default_rng(seed)
+    D = rng.standard_normal((m, n)).astype(np.float32)
+    aux = np.sign(rng.standard_normal((m,))).astype(np.float32)
+    return D, aux

@@ -21,17 +21,12 @@ from repro.core.prox import make_logistic
 from repro.core.unwrapped import UnwrappedADMM
 from repro.data.store import ShardedMatrixStore
 
+from exec_fixtures import cluster_problem as _problem
+
 jax.config.update("jax_platform_name", "cpu")
 
 TAU = 0.1
 TINY = dict(eps_rel=1e-9, eps_abs=1e-12)   # fixed-iteration parity runs
-
-
-def _problem(m=1200, n=20, seed=0):
-    rng = np.random.default_rng(seed)
-    D = rng.standard_normal((m, n)).astype(np.float32)
-    aux = np.sign(rng.standard_normal((m,))).astype(np.float32)
-    return D, aux
 
 
 @pytest.fixture(scope="module")
@@ -85,10 +80,14 @@ def test_error_feedback_unbiased_over_stream():
                                rtol=0, atol=1e-4)
 
 
-def test_shard_map_path_reexports_shared_impl():
+def test_shard_map_path_uses_shared_impl():
+    # repro.cluster.compress is the ONE canonical int8 EF module: the
+    # shard_map psum imports ef_compress from it directly, and the old
+    # underscored re-exports are gone (callers import the real names)
     from repro.core import distributed
-    assert distributed._quantize_int8 is compress.quantize_int8
-    assert distributed._dequantize_int8 is compress.dequantize_int8
+    assert distributed.ef_compress is compress.ef_compress
+    assert not hasattr(distributed, "_quantize_int8")
+    assert not hasattr(distributed, "_dequantize_int8")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,168 @@
+"""Backend-parity matrix: problem × topology × warm-start × resume.
+
+THE acceptance suite for the SolveExecutor contract (DESIGN.md §14):
+every registered problem must produce the same x (rel sup-norm gap
+≤ 1e-5) on all four topologies — local row blocks, out-of-core
+streaming, shard_map device mesh, and a 2-worker cluster — including
+the warm-start and checkpoint-resume legs, with zero per-topology
+problem code. Replaces the scattered per-topology parity tests; the
+shared problems/tolerances live in exec_fixtures so the per-topology
+files stay in sync.
+
+Run with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to
+exercise multi-shard shard_map (single-device it degenerates to a
+bitwise copy of local, which still checks the plumbing).
+"""
+import jax
+
+jax.config.update("jax_platform_name", "cpu")
+
+import numpy as np
+import pytest
+
+from exec_fixtures import (
+    EXECUTORS,
+    NEW_PROBLEMS,
+    PARITY_PROBLEMS,
+    PARITY_TOL,
+    SOLVE_KW,
+    N_WORKERS,
+    parity_problem,
+    rel_gap,
+)
+from repro.exec import fit_on_executor
+from repro.obs import Observability, read_jsonl
+
+WARM_ITERS = 30          # partial solve the warm-start leg seeds from
+PARTIAL = dict(max_iters=25, checkpoint_every=10)
+
+
+@pytest.fixture(scope="module")
+def ref_cache():
+    """Converged local solutions, one solve per problem for the whole
+    matrix (every parametrized case compares against this)."""
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            prob, D, aux = parity_problem(name)
+            r = fit_on_executor(prob, "local", D, aux, **SOLVE_KW)
+            cache[name] = np.asarray(r.x)
+        return cache[name]
+
+    return get
+
+
+@pytest.fixture(scope="module")
+def warm_x0():
+    """Partial-solve iterate every executor's warm leg starts from."""
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            prob, D, aux = parity_problem(name)
+            r = fit_on_executor(prob, "local", D, aux,
+                                max_iters=WARM_ITERS,
+                                eps_rel=1e-12, eps_abs=1e-15)
+            cache[name] = np.asarray(r.x)
+        return cache[name]
+
+    return get
+
+
+@pytest.fixture(scope="module")
+def warm_ref(warm_x0, ref_cache):
+    """Local warm-started solution — the parity reference for the warm
+    leg. Warm and cold follow different trajectories, so at eps_rel=1e-5
+    they stop at different approximations of the same optimum; backend
+    parity compares like trajectory with like, and a looser sanity bound
+    checks the warm path still lands on the cold optimum."""
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            prob, D, aux = parity_problem(name)
+            r = fit_on_executor(prob, "local", D, aux, x0=warm_x0(name),
+                                **SOLVE_KW)
+            x = np.asarray(r.x)
+            assert rel_gap(ref_cache(name), x) <= 100 * PARITY_TOL
+            cache[name] = x
+        return cache[name]
+
+    return get
+
+
+@pytest.fixture(scope="module")
+def resume_ref(ref_cache, tmp_path_factory):
+    """Local checkpoint+resume solution — the parity reference for the
+    resume leg (same like-for-like reasoning as ``warm_ref``)."""
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            base = tmp_path_factory.mktemp(f"resume_ref_{name}")
+            ckpt = str(base / "ckpt")
+            _fit(name, "local", base, checkpoint_dir=ckpt, **PARTIAL)
+            r = _fit(name, "local", base, checkpoint_dir=ckpt,
+                     resume=True, **SOLVE_KW)
+            x = np.asarray(r.x)
+            assert rel_gap(ref_cache(name), x) <= 100 * PARITY_TOL
+            cache[name] = x
+        return cache[name]
+
+    return get
+
+
+def _fit(name, executor, tmp_path, **kw):
+    prob, D, aux = parity_problem(name)
+    if executor == "cluster":
+        kw.setdefault("n_workers", N_WORKERS)
+        kw.setdefault("store_dir", str(tmp_path / "store"))
+    return fit_on_executor(prob, executor, D, aux, **kw)
+
+
+@pytest.mark.parametrize("executor", [e for e in EXECUTORS if e != "local"])
+@pytest.mark.parametrize("problem", PARITY_PROBLEMS)
+def test_cold_parity(problem, executor, ref_cache, tmp_path):
+    r = _fit(problem, executor, tmp_path, **SOLVE_KW)
+    gap = rel_gap(ref_cache(problem), r.x)
+    assert gap <= PARITY_TOL, f"{problem} on {executor}: gap {gap:.3e}"
+
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+@pytest.mark.parametrize("problem", NEW_PROBLEMS)
+def test_warm_start_parity(problem, executor, warm_x0, warm_ref, tmp_path):
+    """Warm-started from the same partial iterate, every executor must
+    land on the local warm-started x (local leg: determinism)."""
+    r = _fit(problem, executor, tmp_path, x0=warm_x0(problem), **SOLVE_KW)
+    gap = rel_gap(warm_ref(problem), r.x)
+    assert gap <= PARITY_TOL, f"{problem} warm on {executor}: gap {gap:.3e}"
+
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+@pytest.mark.parametrize("problem", NEW_PROBLEMS)
+def test_checkpoint_resume_parity(problem, executor, resume_ref, tmp_path):
+    """Kill after 25 iters, resume from the checkpoint, converge: every
+    executor must reach the local resumed x (local leg: determinism)."""
+    ckpt = str(tmp_path / "ckpt")
+    _fit(problem, executor, tmp_path, checkpoint_dir=ckpt, **PARTIAL)
+    r = _fit(problem, executor, tmp_path, checkpoint_dir=ckpt,
+             resume=True, **SOLVE_KW)
+    gap = rel_gap(resume_ref(problem), r.x)
+    assert gap <= PARITY_TOL, f"{problem} resume on {executor}: gap {gap:.3e}"
+
+
+@pytest.mark.parametrize("executor", ["local", "streaming", "shard_map"])
+def test_telemetry_stamps_executor(executor, tmp_path):
+    """Every telemetry record carries the executor name + resolved
+    engine backend, so mixed-topology runs stay attributable."""
+    prob, D, aux = parity_problem("logistic")
+    obs = Observability.create(str(tmp_path / "obs"))
+    fit_on_executor(prob, executor, D, aux, max_iters=5,
+                    eps_rel=1e-12, eps_abs=1e-15, obs=obs)
+    obs.finish()
+    recs = read_jsonl(str(tmp_path / "obs" / "telemetry.jsonl"))
+    assert recs, "no telemetry written"
+    for rec in recs:
+        assert rec["executor"] == executor
+        assert rec["backend"]       # resolved engine backend, non-empty

@@ -159,7 +159,7 @@ def test_registry_exposes_at_least_seven_problems():
 def test_registry_rejects_unknown_combo():
     D = jnp.zeros((1, 4, 2))
     with pytest.raises(ValueError, match="registered problems"):
-        fit("quantile", D, jnp.zeros((1, 4)))
+        fit("isotonic", D, jnp.zeros((1, 4)))
     with pytest.raises(ValueError, match="methods"):
         fit("ridge", D, jnp.zeros((1, 4)), method="consensus")
 

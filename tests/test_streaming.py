@@ -11,17 +11,17 @@ import pytest
 from repro.core.prox import make_hinge, make_logistic
 from repro.core.unwrapped import UnwrappedADMM
 from repro.data.store import ShardedMatrixStore, fingerprint_array
-from repro.data.synthetic import classification_problem
 from repro.engine import IterationEngine, StreamingEngine, autotune
 from repro.service.stats import SufficientStats
+
+from exec_fixtures import classification_fixture
 
 jax.config.update("jax_platform_name", "cpu")
 
 
 @pytest.fixture(scope="module")
 def classif():
-    return classification_problem(jax.random.PRNGKey(0), N=4,
-                                  m_per_node=300, n=24)
+    return classification_fixture(N=4, m_per_node=300, n=24)
 
 
 def _flat(classif):
