@@ -59,13 +59,15 @@ MODULES = {
     "streaming": "benchmarks.streaming_bench",  # out-of-core block streaming
     "sparse": "benchmarks.sparse_bench",      # block-CSR vs dense chunked
     "cluster": "benchmarks.cluster_bench",    # multi-process runtime
+    "service": "benchmarks.service_load",     # multi-tenant front end load
 }
 
 # modules that can emit a machine-readable result: module key -> default path
 JSON_MODULES = {"engine": "BENCH_engine.json",
                 "streaming": "BENCH_streaming.json",
                 "sparse": "BENCH_sparse.json",
-                "cluster": "BENCH_cluster.json"}
+                "cluster": "BENCH_cluster.json",
+                "service": "BENCH_service.json"}
 
 
 def main(argv=None) -> None:

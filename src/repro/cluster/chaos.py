@@ -176,17 +176,26 @@ class FaultInjector:
     (process faults fire at the first iteration >= their schedule point,
     wire faults only at the exact iteration, so a fault aimed at a
     window the target never saw does not detonate arbitrarily later).
+
+    ``data_plane`` names the frame types wire faults may touch.  The
+    cluster default is :data:`DATA_PLANE` (contrib/iter); the fit
+    service front end passes its own tags (fit/fit_result) so the SAME
+    injector and schedule grammar drive service-connection chaos while
+    control frames stay clean in both runtimes.
     """
 
-    __slots__ = ("enabled", "_events", "_fired", "_iteration")
+    __slots__ = ("enabled", "_events", "_fired", "_iteration",
+                 "_data_plane")
 
     def __init__(self, events: Iterable[FaultEvent] = (),
-                 enabled: Optional[bool] = None):
+                 enabled: Optional[bool] = None,
+                 data_plane: Sequence[str] = DATA_PLANE):
         self._events = tuple(sorted(events))
         self.enabled = (bool(self._events) if enabled is None
                         else bool(enabled))
         self._fired: set = set()
         self._iteration = -1
+        self._data_plane = tuple(data_plane)
 
     def set_iteration(self, k: int) -> None:
         self._iteration = int(k)
@@ -208,7 +217,7 @@ class FaultInjector:
         """(kind, param_ms) wire faults for a frame being sent now."""
         if not self.enabled:
             return ()
-        if msg_type not in DATA_PLANE:
+        if msg_type not in self._data_plane:
             return ()
         out = []
         for i, e in enumerate(self._events):
@@ -238,11 +247,13 @@ class FaultInjector:
 NOOP = FaultInjector(events=(), enabled=False)
 
 
-def make_injector(spec: Optional[str], target: str) -> FaultInjector:
+def make_injector(spec: Optional[str], target: str,
+                  data_plane: Sequence[str] = DATA_PLANE) -> FaultInjector:
     """Build a target's injector from a schedule spec string (the form
     shipped inside worker configs); ``None``/empty → the NOOP singleton."""
     if not spec:
         return NOOP
     sched = spec if isinstance(spec, ChaosSchedule) else ChaosSchedule.parse(spec)
     events = sched.for_target(target)
-    return FaultInjector(events) if events else NOOP
+    return (FaultInjector(events, data_plane=data_plane) if events
+            else NOOP)

@@ -59,6 +59,10 @@ class ConnectionClosed(Exception):
     """Peer went away (EOF / reset) — the transport-level death signal."""
 
 
+#: sentinel distinguishing "no per-accept override" from an explicit None
+_UNSET = object()
+
+
 class ByteCounter:
     """Per-message-type frame byte/count totals, backed by a
     :class:`~repro.obs.metrics.MetricsRegistry` (DESIGN.md §12): the
@@ -234,24 +238,50 @@ class Connection:
 
 class Listener:
     """Bound server socket (port 0 -> OS-assigned; workers report theirs
-    back to the coordinator at registration)."""
+    back to the coordinator at registration).
 
-    def __init__(self, host: str = "127.0.0.1", port: int = 0):
+    ``chaos`` / ``max_frame_bytes`` / ``frame_deadline_s`` set here become
+    the defaults every accepted :class:`Connection` inherits — the fit
+    service front end accepts from untrusted-ish clients and needs a much
+    smaller frame cap and a short frame-completion deadline (a slow-loris
+    client that sends half a header and stalls must be severed, not
+    allowed to pin a handler thread for the cluster default of 120 s)."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
+                 chaos=None,
+                 max_frame_bytes: int = MAX_FRAME_BYTES,
+                 frame_deadline_s: float = FRAME_DEADLINE_S):
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
         self._sock.listen(64)
         self.address: Tuple[str, int] = self._sock.getsockname()
+        self.chaos = chaos
+        self.max_frame_bytes = max_frame_bytes
+        self.frame_deadline_s = frame_deadline_s
 
     def accept(self, timeout: Optional[float] = None,
-               counter: Optional[ByteCounter] = None
+               counter: Optional[ByteCounter] = None, *,
+               chaos=_UNSET,
+               max_frame_bytes: Optional[int] = None,
+               frame_deadline_s: Optional[float] = None
                ) -> Optional[Connection]:
+        """Accept one connection; keyword overrides beat the listener
+        defaults per accepted connection (``chaos=None`` explicitly
+        disables injection for this connection even when the listener
+        carries an injector)."""
         self._sock.settimeout(timeout)
         try:
             sock, _ = self._sock.accept()
         except socket.timeout:
             return None
-        return Connection(sock, counter=counter)
+        return Connection(
+            sock, counter=counter,
+            chaos=self.chaos if chaos is _UNSET else chaos,
+            max_frame_bytes=(self.max_frame_bytes if max_frame_bytes is None
+                             else max_frame_bytes),
+            frame_deadline_s=(self.frame_deadline_s if frame_deadline_s is None
+                             else frame_deadline_s))
 
     def close(self):
         self._sock.close()

@@ -7,6 +7,14 @@ Registers a synthetic dataset once (ONE Gram pass), then drives a stream of
 fit requests — fresh linear-probe label vectors, or a lasso mu-path with
 ``--mu-path`` — through the micro-batching FitServer, and reports latency
 against the naive per-request lower bound plus the server's cost counters.
+
+``--port`` switches to the NETWORKED multi-tenant service (DESIGN.md
+§15): a :class:`~repro.service.frontend.FitFrontend` over TCP with
+admission control (``--max-queue``, ``--tenant-quota``), per-request
+deadlines (``--deadline-s``), and optional seeded chaos against the
+cold-solve backend (``--chaos-seed``). With ``--requests N`` it drives
+N fits from two loopback tenants and prints the terminal-status mix +
+latency; with ``--requests 0`` it serves until interrupted.
 """
 from __future__ import annotations
 
@@ -20,6 +28,81 @@ import numpy as np
 from repro.core.fit import fit
 from repro.service import FitRequest, FitServer
 from repro.service.batching import lasso_mu_path
+
+
+def _serve_networked(args):
+    from repro.cluster.chaos import FaultEvent, FaultInjector
+    from repro.service.frontend import (
+        SERVICE_DATA_PLANE,
+        FitFrontend,
+        FitServiceClient,
+    )
+
+    rng = np.random.default_rng(args.seed)
+    m, n = args.rows, args.features
+    D = rng.standard_normal((m, n)).astype(np.float32)
+    b = rng.standard_normal(m).astype(np.float32)
+
+    chaos = None
+    if args.chaos_seed is not None:
+        crng = np.random.default_rng(args.chaos_seed)
+        points = sorted(int(p) for p in crng.integers(
+            2, max(3, args.requests or 64), size=3))
+        chaos = FaultInjector(
+            [FaultEvent(p, "svc", "slow", 1500.0) for p in points],
+            data_plane=SERVICE_DATA_PLANE)
+        print(f"chaos: slow cold backend at request seq {points} "
+              f"(seed {args.chaos_seed})")
+
+    fe = FitFrontend(window=args.window, max_queue=args.max_queue,
+                     tenant_rate=args.tenant_quota,
+                     default_deadline_s=args.deadline_s,
+                     cold_budget_s=min(2.0, args.deadline_s),
+                     port=args.port, chaos=chaos)
+    host, port = fe.address
+    print(f"fit service listening on {host}:{port} "
+          f"(max_queue={args.max_queue}, "
+          f"tenant_quota={args.tenant_quota}, "
+          f"deadline_s={args.deadline_s})", flush=True)
+    try:
+        with FitServiceClient(fe.address, tenant="launcher") as setup:
+            t0 = time.time()
+            fp = setup.register(D, b)
+            print(f"registered {m:,} x {n} dataset in "
+                  f"{time.time()-t0:.2f}s (fingerprint {fp[:12]}...)",
+                  flush=True)
+        if not args.requests:
+            print("serving until interrupted (Ctrl-C)...", flush=True)
+            try:
+                while True:
+                    time.sleep(1.0)
+            except KeyboardInterrupt:
+                return
+        lat = []
+        statuses: dict = {}
+        t_run = time.time()
+        with FitServiceClient(fe.address, tenant="t0") as c0, \
+                FitServiceClient(fe.address, tenant="t1") as c1:
+            for i in range(args.requests):
+                c = (c0, c1)[i % 2]
+                problem = (args.problem if i % 3 else "logistic")
+                t0 = time.time()
+                kw = ({"mu": args.mu} if problem != "logistic" else {})
+                r = c.fit(problem, fp, iters=args.iters,
+                          deadline_s=args.deadline_s, timeout=120.0,
+                          **kw)
+                lat.append(time.time() - t0)
+                statuses[r["status"]] = statuses.get(r["status"], 0) + 1
+        dt = time.time() - t_run
+        lat_ms = np.asarray(lat) * 1e3
+        print(f"drove {args.requests} requests from 2 tenants in "
+              f"{dt:.2f}s: statuses {statuses}; latency p50 "
+              f"{np.percentile(lat_ms, 50):.1f} ms, p99 "
+              f"{np.percentile(lat_ms, 99):.1f} ms")
+        print("service counts:", fe.status_counts())
+        print("zero lost requests:", fe.zero_lost_requests())
+    finally:
+        fe.close()
 
 
 def main(argv=None):
@@ -36,7 +119,28 @@ def main(argv=None):
                     help="serve a lasso regularization path instead of "
                          "fresh-label probes")
     ap.add_argument("--seed", type=int, default=0)
+    net = ap.add_argument_group("networked service (--port)")
+    net.add_argument("--port", type=int, default=None,
+                     help="serve over TCP on this port (0 = OS-assigned) "
+                          "instead of driving the in-process server")
+    net.add_argument("--max-queue", type=int, default=256,
+                     help="bounded admission queue; beyond it requests "
+                          "are answered status=rejected with a "
+                          "retry-after hint")
+    net.add_argument("--tenant-quota", type=float, default=None,
+                     help="per-tenant token-bucket rate (requests/s); "
+                          "default unmetered")
+    net.add_argument("--deadline-s", type=float, default=30.0,
+                     help="default per-request deadline; expired "
+                          "requests are answered status=deadline")
+    net.add_argument("--chaos-seed", type=int, default=None,
+                     help="seed slow-cold-backend faults so the degrade "
+                          "path (status=degraded from cached stats) is "
+                          "observable")
     args = ap.parse_args(argv)
+
+    if args.port is not None:
+        return _serve_networked(args)
 
     rng = np.random.default_rng(args.seed)
     m, n = args.rows, args.features

@@ -7,6 +7,10 @@
   batching  — multi-RHS / mu-grid coalescing over one cached factor.
   server    — FitServer: micro-batching request loop, LRU factor cache,
               observable cost counters.
+  admission — token-bucket tenant quotas, bounded-queue load shedding,
+              cold-solve circuit breaker (DESIGN.md §15).
+  frontend  — FitFrontend: threaded TCP front end over the cluster
+              framing; multi-tenant, deadline-aware, degrade-not-fail.
 """
 from repro.service.stats import (
     SufficientStats,
@@ -33,11 +37,22 @@ from repro.service.server import (
     FitServer,
     ServerCounters,
 )
+from repro.service.admission import (
+    Admission,
+    AdmissionController,
+    CircuitBreaker,
+    TokenBucket,
+)
 
 __all__ = [
     "SufficientStats", "chol_downdate", "chol_update",
     "combine_fingerprints", "fingerprint_array", "GRAM_SOLVERS", "problems",
     "register_problem", "solve", "batched_gram_solve", "batched_quad_prox",
     "lasso_mu_path", "rhs_chunked", "FitRequest", "FitResponse", "FitServer",
-    "ServerCounters",
+    "ServerCounters", "Admission", "AdmissionController", "CircuitBreaker",
+    "TokenBucket",
 ]
+
+# FitFrontend / FitServiceClient import from repro.service.frontend —
+# deliberately NOT re-exported here: frontend pulls in the cluster
+# transport, and in-process FitServer users should not pay that import.

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 import time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -67,10 +68,14 @@ class FitResponse:
     request_id: int
     problem: str
     fingerprint: str
-    x: np.ndarray
+    x: Optional[np.ndarray]
     iters: int
     batch_size: int            # how many requests shared this solve
     from_cache: bool           # True iff no Gram pass was spent on this
+    # terminal status taxonomy (DESIGN.md §15): "ok" | "error" here;
+    # the networked front end adds "degraded" / "deadline" / "rejected"
+    status: str = "ok"
+    error: Optional[str] = None
 
 
 _LATENCY_HIST = "server.fit_latency_s"
@@ -98,6 +103,7 @@ class ServerCounters:
         "factor_cache_hits",
         "factor_cache_misses",
         "full_solves",         # non-gram-path fallbacks to registry.solve
+        "errors",              # requests answered status="error"
     )
 
     def __init__(self, registry: Optional[MetricsRegistry] = None):
@@ -149,12 +155,21 @@ class FitServer:
     ``window``: max queued requests before ``submit`` auto-flushes.
     ``factor_cache_size``: live (fingerprint, ridge) factors; least recently
     used factors are evicted first.
+
+    Thread safety: every mutation of the queue, the dataset registry,
+    and the factor LRU happens under one reentrant lock, so concurrent
+    ``submit``/``flush``/``ingest_block`` callers (the networked front
+    end's handler threads) can never lose a queued request, double-
+    answer one, or corrupt the LRU ordering. Group solves run under the
+    lock too — the server is a single logical solver; concurrency is
+    the front end's job, consistency is this class's.
     """
 
     def __init__(self, window: int = 16, factor_cache_size: int = 8):
         self.window = int(window)
         self.factor_cache_size = int(factor_cache_size)
         self.counters = ServerCounters()
+        self._lock = threading.RLock()
         self._datasets: Dict[str, _Dataset] = {}
         self._factors: "OrderedDict[Tuple[str, float], Array]" = OrderedDict()
         self._queue: List[FitRequest] = []
@@ -185,17 +200,28 @@ class FitServer:
                     f"rhs has {b.shape[0]} rows but data has {D.shape[0]}")
         stats = SufficientStats.from_data(D, b)
         self.counters.inc("gram_passes")
-        self._datasets[stats.fingerprint] = _Dataset(
-            D=D if keep_data else None, stats=stats,
-            b=b if keep_data else None)
+        with self._lock:
+            self._datasets[stats.fingerprint] = _Dataset(
+                D=D if keep_data else None, stats=stats,
+                b=b if keep_data else None)
         return stats.fingerprint
 
     def register_stats(self, stats: SufficientStats) -> str:
         """Adopt pre-reduced stats (e.g. merged from remote shards or
         checkpoint-restored): rhs reuse is gated by stats.fully_labeled,
         which travels with the stats through merge and checkpointing."""
-        self._datasets[stats.fingerprint] = _Dataset(D=None, stats=stats)
+        with self._lock:
+            self._datasets[stats.fingerprint] = _Dataset(D=None, stats=stats)
         return stats.fingerprint
+
+    def _dataset_for_edit(self, fingerprint: str) -> _Dataset:
+        ds = self._datasets.get(fingerprint)
+        if ds is None:
+            raise KeyError(
+                f"unknown dataset fingerprint {fingerprint[:12]}...; "
+                "register_dataset() first (or the dataset already moved "
+                "to a new fingerprint via ingest/retire)")
+        return ds
 
     def ingest_block(self, fingerprint: str, block_D: Array,
                      block_b: Optional[Array] = None) -> str:
@@ -204,21 +230,35 @@ class FitServer:
         Stats stream-update in O(k n^2); every live factor for the dataset
         rank-k *updates* in O(n^2 k) — no refactorization, and the dataset
         moves to its new content fingerprint.
+
+        Atomic: every derived object (stats, concatenated rows, updated
+        factors) is computed BEFORE the registry is touched, so a failing
+        block (shape mismatch, bad rhs) leaves the dataset serving under
+        its old fingerprint instead of silently dropping it.
         """
-        ds = self._datasets.pop(fingerprint)
-        block_D = jnp.asarray(block_D)
-        new_stats = ds.stats.update(block_D, block_b)
-        if ds.D is not None:
-            ds.D = jnp.concatenate([ds.D, block_D], axis=0)
-        if ds.b is not None and block_b is not None:
-            ds.b = jnp.concatenate([ds.b, jnp.asarray(block_b).reshape(-1)])
-        else:
-            ds.b = None           # raw rhs no longer aligns with the rows
-        self._rekey_factors(fingerprint, new_stats.fingerprint, block_D,
-                            chol_update)
-        self._datasets[new_stats.fingerprint] = _Dataset(
-            D=ds.D, stats=new_stats, b=ds.b)
-        return new_stats.fingerprint
+        with self._lock:
+            ds = self._dataset_for_edit(fingerprint)
+            block_D = jnp.asarray(block_D)
+            if block_D.ndim != 2 or block_D.shape[1] != ds.stats.n:
+                raise ValueError(
+                    f"ingest block shape {tuple(block_D.shape)} does not "
+                    f"match dataset width {ds.stats.n}")
+            new_stats = ds.stats.update(block_D, block_b)
+            new_D = (jnp.concatenate([ds.D, block_D], axis=0)
+                     if ds.D is not None else None)
+            if ds.b is not None and block_b is not None:
+                new_b = jnp.concatenate(
+                    [ds.b, jnp.asarray(block_b).reshape(-1)])
+            else:
+                new_b = None      # raw rhs no longer aligns with the rows
+            new_factors = self._rekeyed_factors(fingerprint, block_D,
+                                                chol_update)
+            # -- commit point: nothing below can fail ---------------------
+            self._commit_rekey(new_stats.fingerprint, new_factors)
+            del self._datasets[fingerprint]
+            self._datasets[new_stats.fingerprint] = _Dataset(
+                D=new_D, stats=new_stats, b=new_b)
+            return new_stats.fingerprint
 
     def retire_block(self, fingerprint: str, block_D: Array,
                      block_b: Optional[Array] = None) -> str:
@@ -226,78 +266,160 @@ class FitServer:
 
         Stats downdate; live factors rank-k *downdate*. The raw row cache
         (if any) is dropped — exact row removal is the stats' job.
-        """
-        ds = self._datasets.pop(fingerprint)
-        block_D = jnp.asarray(block_D)
-        new_stats = ds.stats.downdate(block_D, block_b)
-        self._rekey_factors(fingerprint, new_stats.fingerprint, block_D,
-                            chol_downdate)
-        self._datasets[new_stats.fingerprint] = _Dataset(
-            D=None, stats=new_stats)
-        return new_stats.fingerprint
 
-    def _rekey_factors(self, old_fp: str, new_fp: str, block_D: Array, op):
-        for (fp, ridge), L in list(self._factors.items()):
+        Atomic like :meth:`ingest_block`; additionally validates that the
+        downdate is well-posed (row count stays nonnegative, downdated
+        factors stay finite) before committing, since retiring rows that
+        were never ingested would silently poison G.
+        """
+        with self._lock:
+            ds = self._dataset_for_edit(fingerprint)
+            block_D = jnp.asarray(block_D)
+            if block_D.ndim != 2 or block_D.shape[1] != ds.stats.n:
+                raise ValueError(
+                    f"retire block shape {tuple(block_D.shape)} does not "
+                    f"match dataset width {ds.stats.n}")
+            if block_D.shape[0] > ds.stats.rows:
+                raise ValueError(
+                    f"cannot retire {block_D.shape[0]} rows from a "
+                    f"{ds.stats.rows}-row dataset")
+            new_stats = ds.stats.downdate(block_D, block_b)
+            new_factors = self._rekeyed_factors(fingerprint, block_D,
+                                                chol_downdate)
+            for (fp, ridge), L in new_factors.items():
+                # an indefinite downdate (rows never ingested) yields
+                # NaN/Inf in the hyperbolic rotations — detect it here,
+                # before the commit, instead of serving garbage factors
+                if not bool(jnp.isfinite(L).all()):
+                    raise ValueError(
+                        "downdate left the cached factor indefinite "
+                        f"(fingerprint {fp[:12]}..., ridge {ridge}) — "
+                        "the block was not previously ingested")
+            # -- commit point ---------------------------------------------
+            self._commit_rekey(new_stats.fingerprint, new_factors)
+            del self._datasets[fingerprint]
+            self._datasets[new_stats.fingerprint] = _Dataset(
+                D=None, stats=new_stats)
+            return new_stats.fingerprint
+
+    def _rekeyed_factors(self, old_fp: str, block_D: Array, op
+                         ) -> "OrderedDict[Tuple[str, float], Array]":
+        """Updated factors for every live (old_fp, ridge) key — computed
+        eagerly so the caller can validate them before committing."""
+        out: "OrderedDict[Tuple[str, float], Array]" = OrderedDict()
+        for (fp, ridge), L in self._factors.items():
             if fp == old_fp:
-                del self._factors[(fp, ridge)]
-                self._factors[(new_fp, ridge)] = op(L, block_D)
-                self.counters.inc("factor_updates")
+                out[(fp, ridge)] = op(L, block_D)
+        return out
+
+    def _commit_rekey(self, new_fp: str, new_factors):
+        """Swap pre-validated factors in under the dataset's new
+        fingerprint (pure dict surgery — cannot fail)."""
+        for (fp, ridge), L in new_factors.items():
+            del self._factors[(fp, ridge)]
+            self._factors[(new_fp, ridge)] = L
+            self.counters.inc("factor_updates")
 
     def stats_for(self, fingerprint: str) -> SufficientStats:
-        return self._datasets[fingerprint].stats
+        with self._lock:
+            return self._datasets[fingerprint].stats
 
     # -- factor cache -------------------------------------------------------
     def _factor(self, fingerprint: str, ridge: float) -> Array:
-        key = (fingerprint, float(ridge))
-        if key in self._factors:
-            self._factors.move_to_end(key)
-            self.counters.inc("factor_cache_hits")
-            return self._factors[key]
-        self.counters.inc("factor_cache_misses")
-        L = self._datasets[fingerprint].stats.factor(ridge=ridge)
-        self.counters.inc("factorizations")
-        self._factors[key] = L
-        while len(self._factors) > self.factor_cache_size:
-            self._factors.popitem(last=False)
-        return L
+        with self._lock:
+            key = (fingerprint, float(ridge))
+            if key in self._factors:
+                self._factors.move_to_end(key)
+                self.counters.inc("factor_cache_hits")
+                return self._factors[key]
+            self.counters.inc("factor_cache_misses")
+            L = self._datasets[fingerprint].stats.factor(ridge=ridge)
+            self.counters.inc("factorizations")
+            self._factors[key] = L
+            while len(self._factors) > self.factor_cache_size:
+                self._factors.popitem(last=False)
+            return L
 
     # -- request path -------------------------------------------------------
     def submit(self, request: FitRequest) -> List[FitResponse]:
         """Queue a request; auto-flush when the window fills."""
         self.counters.inc("requests")
-        self._submit_t[request.request_id] = time.perf_counter()
-        self._queue.append(request)
-        if len(self._queue) >= self.window:
-            return self.flush()
+        with self._lock:
+            self._submit_t[request.request_id] = time.perf_counter()
+            self._queue.append(request)
+            if len(self._queue) >= self.window:
+                return self.flush()
         return []
 
     def flush(self) -> List[FitResponse]:
-        """Coalesce the queue into per-(problem, dataset, params) batches."""
-        queue, self._queue = self._queue, []
-        groups: "OrderedDict[tuple, List[FitRequest]]" = OrderedDict()
-        for req in queue:
-            # ridge shares one factor per mu, so it groups by mu (None
-            # normalizes to the solver default); FASTA-path problems vmap
-            # over per-request mus and coalesce freely.
-            mu_key = ((req.mu if req.mu is not None else 1.0)
-                      if req.problem == "ridge" else None)
-            key = (req.problem, req.fingerprint, req.l2, req.iters, mu_key)
-            groups.setdefault(key, []).append(req)
-        out: List[FitResponse] = []
-        for reqs in groups.values():
-            out.extend(self._solve_group(reqs))
-        self.counters.inc("responses", len(out))
-        now = time.perf_counter()
-        for resp in out:
-            # warm = answered from cached stats (no Gram pass spent);
-            # requests that bypassed submit() (direct flush of a hand-
-            # built queue) have no stamp and observe nothing
-            t0 = self._submit_t.pop(resp.request_id, None)
-            if t0 is not None:
-                self.counters.observe_latency(
-                    "warm" if resp.from_cache else "cold", now - t0)
-        out.sort(key=lambda r: r.request_id)
-        return out
+        """Coalesce the queue into per-(problem, dataset, params) batches.
+
+        Failure containment: one bad group (unknown fingerprint, missing
+        mu/b, stats-only dataset asked for raw rows) is answered with
+        per-request ``status="error"`` responses and the REMAINING groups
+        still solve — the queue was already swapped out, so aborting
+        mid-flush would silently lose every sibling request's response.
+        """
+        with self._lock:
+            queue, self._queue = self._queue, []
+            groups: "OrderedDict[tuple, List[FitRequest]]" = OrderedDict()
+            for req in queue:
+                # ridge shares one factor per mu, so it groups by mu (None
+                # normalizes to the solver default); FASTA-path problems
+                # vmap over per-request mus and coalesce freely.
+                mu_key = ((req.mu if req.mu is not None else 1.0)
+                          if req.problem == "ridge" else None)
+                key = (req.problem, req.fingerprint, req.l2, req.iters,
+                       mu_key)
+                groups.setdefault(key, []).append(req)
+            out: List[FitResponse] = []
+            for reqs in groups.values():
+                try:
+                    out.extend(self._solve_group(reqs))
+                except Exception as e:          # noqa: BLE001 — isolate
+                    self.counters.inc("errors", len(reqs))
+                    err = f"{type(e).__name__}: {e}"
+                    out.extend(
+                        FitResponse(request_id=r.request_id,
+                                    problem=r.problem,
+                                    fingerprint=r.fingerprint, x=None,
+                                    iters=0, batch_size=len(reqs),
+                                    from_cache=False, status="error",
+                                    error=err)
+                        for r in reqs)
+            self.counters.inc("responses", len(out))
+            now = time.perf_counter()
+            for resp in out:
+                # warm = answered from cached stats (no Gram pass spent);
+                # requests that bypassed submit() (direct flush of a hand-
+                # built queue) have no stamp and observe nothing; error
+                # responses carry no latency sample (they would pollute
+                # the warm/cold split with failure-path timings)
+                t0 = self._submit_t.pop(resp.request_id, None)
+                if t0 is not None and resp.status == "ok":
+                    self.counters.observe_latency(
+                        "warm" if resp.from_cache else "cold", now - t0)
+            out.sort(key=lambda r: r.request_id)
+            return out
+
+    def solve_one(self, request: FitRequest) -> FitResponse:
+        """One synchronous solve OUTSIDE the micro-batch queue — the
+        network front end's cold/fallback path. Gram-path problems are
+        answered under the server lock (they are cached-factor fast);
+        full solves only hold the lock for the dataset lookup and run
+        the O(iters · m n) solver outside it, so a long cold solve can
+        never stall concurrent warm flushes. Raises on failure (the
+        caller owns error containment and breaker accounting)."""
+        if request.problem in registry.GRAM_SOLVERS:
+            with self._lock:
+                return self._solve_group([request])[0]
+        with self._lock:
+            if request.fingerprint not in self._datasets:
+                raise KeyError(
+                    f"unknown dataset fingerprint "
+                    f"{request.fingerprint[:12]}...; register_dataset() "
+                    "first")
+        return self._solve_full(request)
 
     def serve(self, requests: Sequence[FitRequest],
               window_s: float = 0.0) -> List[FitResponse]:

@@ -333,11 +333,14 @@ def test_server_full_solve_fallback():
 
 
 def test_server_rejects_l1_requests_without_mu():
+    # since the flush-poisoning isolation work, a bad group is answered
+    # with per-request error responses instead of raising out of flush()
     D, b = _data()
     srv = FitServer(window=1)
     fp = srv.register_dataset(D, b)
-    with pytest.raises(ValueError, match="no mu"):
-        srv.serve([FitRequest(problem="lasso", fingerprint=fp)])
+    out = srv.serve([FitRequest(problem="lasso", fingerprint=fp)])
+    assert len(out) == 1
+    assert out[0].status == "error" and "no mu" in out[0].error
 
 
 def test_server_full_solve_reuses_registered_labels():
@@ -359,8 +362,9 @@ def test_server_unlabeled_ingest_invalidates_registered_rhs():
     srv = FitServer(window=1)
     fp = srv.register_dataset(D[:250], b[:250])
     fp2 = srv.ingest_block(fp, D[250:])          # no labels for the block
-    with pytest.raises(ValueError, match="none was registered"):
-        srv.serve([FitRequest(problem="ridge", fingerprint=fp2, mu=1.0)])
+    out = srv.serve([FitRequest(problem="ridge", fingerprint=fp2, mu=1.0)])
+    assert out[0].status == "error"
+    assert "none was registered" in out[0].error
     # fresh-b requests still work: G is consistent, only c went stale
     resp = srv.serve([FitRequest(problem="ridge", fingerprint=fp2,
                                  b=np.asarray(b), mu=1.0)])
@@ -379,8 +383,9 @@ def test_register_stats_gates_rhs_on_full_labeling():
     assert not partial.fully_labeled
     srv = FitServer(window=1)
     fp = srv.register_stats(partial)
-    with pytest.raises(ValueError, match="none was registered"):
-        srv.serve([FitRequest(problem="ridge", fingerprint=fp, mu=1.0)])
+    out = srv.serve([FitRequest(problem="ridge", fingerprint=fp, mu=1.0)])
+    assert out[0].status == "error"
+    assert "none was registered" in out[0].error
     full = SufficientStats.from_data(D, b)
     assert full.fully_labeled
     fp2 = srv.register_stats(full)
@@ -410,8 +415,9 @@ def test_register_dataset_keeps_stacked_rhs_2d():
     np.testing.assert_allclose(np.asarray(srv.stats_for(fp).c),
                                np.asarray(D.T @ B), rtol=1e-4, atol=1e-3)
     # a stacked c is not a reusable single rhs
-    with pytest.raises(ValueError, match="none was registered"):
-        srv.serve([FitRequest(problem="ridge", fingerprint=fp, mu=1.0)])
+    out = srv.serve([FitRequest(problem="ridge", fingerprint=fp, mu=1.0)])
+    assert out[0].status == "error"
+    assert "none was registered" in out[0].error
     with pytest.raises(ValueError, match="rows"):
         srv.register_dataset(D, jnp.zeros((7,)))
 
@@ -442,3 +448,125 @@ def test_server_lru_eviction():
     assert len(srv._factors) == 2
     srv.serve([FitRequest(problem="ridge", fingerprint=fp, mu=1.0)])
     assert srv.counters.factorizations == 4     # mu=1.0 was evicted
+
+
+# ---------------------------------------------------------------------------
+# robustness satellites (DESIGN.md §15): thread safety, flush poisoning,
+# atomic ingest/retire
+# ---------------------------------------------------------------------------
+
+def test_server_concurrent_submits_lose_nothing():
+    """Many threads hammering submit() concurrently: every request gets
+    exactly one response, across auto-flushes and the final flush."""
+    import threading
+
+    D, b = _data()
+    srv = FitServer(window=8)
+    fp = srv.register_dataset(D, b)
+    n_threads, per_thread = 8, 25
+    reqs = [[FitRequest(problem="ridge", fingerprint=fp, mu=1.0)
+             for _ in range(per_thread)] for _ in range(n_threads)]
+    expected = {r.request_id for batch in reqs for r in batch}
+    collected = []
+    coll_lock = threading.Lock()
+
+    def worker(batch):
+        got = []
+        for r in batch:
+            got.extend(srv.submit(r))
+        with coll_lock:
+            collected.extend(got)
+
+    threads = [threading.Thread(target=worker, args=(reqs[i],))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    collected.extend(srv.flush())
+    got_ids = [r.request_id for r in collected]
+    assert len(got_ids) == len(expected)          # nothing lost
+    assert len(set(got_ids)) == len(got_ids)      # nothing double-answered
+    assert set(got_ids) == expected
+    assert all(r.status == "ok" for r in collected)
+    assert srv.counters.responses == n_threads * per_thread
+
+
+def test_flush_isolates_poisoned_groups():
+    """One bad group must not cost sibling groups their responses."""
+    D, b = _data()
+    srv = FitServer(window=64)
+    fp = srv.register_dataset(D, b)
+    good1 = FitRequest(problem="ridge", fingerprint=fp, mu=1.0)
+    bad_fp = FitRequest(problem="ridge", fingerprint="f" * 64, mu=1.0)
+    bad_mu = FitRequest(problem="lasso", fingerprint=fp)    # mu missing
+    good2 = FitRequest(problem="ridge", fingerprint=fp, mu=2.0)
+    for r in (good1, bad_fp, bad_mu, good2):
+        srv.submit(r)
+    out = {r.request_id: r for r in srv.flush()}
+    assert len(out) == 4
+    assert out[good1.request_id].status == "ok"
+    assert out[good2.request_id].status == "ok"
+    r1 = out[bad_fp.request_id]
+    assert r1.status == "error" and r1.x is None
+    assert "unknown dataset fingerprint" in r1.error
+    r2 = out[bad_mu.request_id]
+    assert r2.status == "error" and "no mu" in r2.error
+    assert srv.counters.errors == 2
+    assert srv.counters.responses == 4
+    # the good answers are real solves, not error-path leftovers
+    x_ref = np.linalg.solve(np.asarray(D.T @ D) + np.eye(16),
+                            np.asarray(D.T @ b))
+    np.testing.assert_allclose(out[good1.request_id].x, x_ref,
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ingest_block_failure_leaves_dataset_intact():
+    D, b = _data()
+    srv = FitServer()
+    fp = srv.register_dataset(D, b)
+    # warm a factor so the atomicity claim covers the factor cache too
+    srv.serve([FitRequest(problem="ridge", fingerprint=fp, mu=1.0)])
+    hits_before = srv.counters.factor_cache_hits
+    bad_block = np.ones((10, 7), np.float32)      # wrong width
+    with pytest.raises(ValueError, match="does not match dataset width"):
+        srv.ingest_block(fp, bad_block)
+    # old fingerprint still serves, factor still cached
+    out = srv.serve([FitRequest(problem="ridge", fingerprint=fp, mu=1.0)])
+    assert out[0].status == "ok"
+    assert srv.counters.factor_cache_hits == hits_before + 1
+
+
+def test_ingest_unknown_fingerprint_is_a_clear_error():
+    srv = FitServer()
+    with pytest.raises(KeyError, match="unknown dataset fingerprint"):
+        srv.ingest_block("a" * 64, np.ones((4, 3), np.float32))
+    with pytest.raises(KeyError, match="unknown dataset fingerprint"):
+        srv.retire_block("a" * 64, np.ones((4, 3), np.float32))
+
+
+def test_retire_rejects_more_rows_than_dataset():
+    D, b = _data(m=50)
+    srv = FitServer()
+    fp = srv.register_dataset(D, b)
+    with pytest.raises(ValueError, match="cannot retire"):
+        srv.retire_block(fp, np.ones((51, 16), np.float32))
+    assert srv.serve([FitRequest(problem="ridge", fingerprint=fp,
+                                 mu=1.0)])[0].status == "ok"
+
+
+def test_retire_never_ingested_block_detected_before_commit():
+    """Downdating by rows that were never ingested drives the factor
+    indefinite; the server must detect it and keep the old dataset."""
+    D, b = _data()
+    srv = FitServer()
+    fp = srv.register_dataset(D, b)
+    srv.serve([FitRequest(problem="ridge", fingerprint=fp, mu=1.0)])
+    alien = np.asarray(10.0 * D[:50])             # energy G never held
+    with pytest.raises(ValueError, match="not previously ingested"):
+        srv.retire_block(fp, alien)
+    out = srv.serve([FitRequest(problem="ridge", fingerprint=fp, mu=1.0)])
+    assert out[0].status == "ok"
+    x_ref = np.linalg.solve(np.asarray(D.T @ D) + np.eye(16),
+                            np.asarray(D.T @ b))
+    np.testing.assert_allclose(out[0].x, x_ref, rtol=1e-3, atol=1e-3)
