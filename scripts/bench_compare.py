@@ -1,0 +1,260 @@
+#!/usr/bin/env python
+"""Compare current BENCH_*.json against committed baselines.
+
+``python scripts/bench_compare.py [--baseline-ref HEAD] [--threshold 0.25]``
+
+The BENCH files record a perf trajectory, but until now nothing read it
+back — a regression only surfaced when a human eyeballed the JSON.  This
+tool diffs the BENCH files in the working tree (freshly produced by the
+quick benches) against the committed versions (``git show REF:FILE``, or
+``--baseline-dir``) and FAILS on a >``threshold`` regression of any
+gated series.
+
+Comparisons are only meaningful between runs of the same shape on the
+same machine, so two guards precede every diff:
+
+  * host fingerprint (the PR 6 ``host_meta()`` stamp): cpu_count,
+    platform, python, jax/jaxlib, backend must match — CI runners
+    cannot be compared against the workstation that committed the
+    baseline, so a mismatch SKIPS the file (exit 0) with a note;
+  * quick flag: a ``--quick`` run against a full-size baseline would
+    compare different workloads — also a skip.
+
+Gated series are wall-time/throughput numbers keyed by workload
+parameters (per-point ``us_per_iter`` by (m, n, backend), service
+latency percentiles, wire bytes per iteration).  Correctness gates
+(parity, zero-lost) stay where they are — in each bench's own
+``acceptance`` block, enforced by CI already.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from typing import Callable, Dict, List, Optional, Tuple
+
+# fields of host_meta() that must agree for a timing comparison to mean
+# anything (git_sha is excluded — that is exactly what differs)
+FINGERPRINT_FIELDS = ("cpu_count", "platform", "python", "jax", "jaxlib",
+                      "jax_backend")
+
+#: direction of goodness
+LOWER, HIGHER = "lower", "higher"
+
+Series = Dict[str, Tuple[float, str]]      # label -> (value, direction)
+
+
+def _point_key(point: dict, fields: Tuple[str, ...]) -> str:
+    return ",".join(f"{f}={point.get(f)}" for f in fields
+                    if f in point)
+
+
+def _from_points(doc: dict, fields: Tuple[str, ...],
+                 metrics: Dict[str, str]) -> Series:
+    out: Series = {}
+    for p in doc.get("points", []):
+        key = _point_key(p, fields)
+        for metric, direction in metrics.items():
+            v = p.get(metric)
+            if isinstance(v, (int, float)) and v > 0:
+                out[f"{metric}[{key}]"] = (float(v), direction)
+    return out
+
+
+def engine_series(doc: dict) -> Series:
+    return _from_points(doc, ("m", "n", "dtype", "backend"),
+                        {"us_per_iter": LOWER})
+
+
+def streaming_series(doc: dict) -> Series:
+    return _from_points(doc, ("m", "n", "budget_mb"),
+                        {"streaming_us_per_sweep": LOWER,
+                         "naive_us_per_sweep": LOWER})
+
+
+def sparse_series(doc: dict) -> Series:
+    return _from_points(doc, ("m", "n", "density"),
+                        {"sparse_us_per_iter": LOWER,
+                         "dense_us_per_iter": LOWER})
+
+
+def cluster_series(doc: dict) -> Series:
+    return _from_points(doc, ("workers", "compress"),
+                        {"us_per_iter": LOWER,
+                         "reduction_bytes_per_iter": LOWER,
+                         "broadcast_bytes_per_iter": LOWER})
+
+
+def service_series(doc: dict) -> Series:
+    out: Series = {}
+    warm = doc.get("warm_latency") or {}
+    for k in ("p50_ms", "p99_ms"):
+        v = warm.get(k)
+        if isinstance(v, (int, float)) and v > 0:
+            out[f"warm_latency.{k}"] = (float(v), LOWER)
+    v = doc.get("healthy_responses_per_s")
+    if isinstance(v, (int, float)) and v > 0:
+        out["healthy_responses_per_s"] = (float(v), HIGHER)
+    return out
+
+
+EXTRACTORS: Dict[str, Callable[[dict], Series]] = {
+    "BENCH_engine.json": engine_series,
+    "BENCH_streaming.json": streaming_series,
+    "BENCH_sparse.json": sparse_series,
+    "BENCH_cluster.json": cluster_series,
+    "BENCH_service.json": service_series,
+}
+
+
+def fingerprint(doc: dict) -> Optional[tuple]:
+    meta = doc.get("host_meta")
+    if not isinstance(meta, dict):
+        return None
+    return tuple(meta.get(f) for f in FINGERPRINT_FIELDS)
+
+
+def compare_docs(name: str, current: dict, baseline: dict,
+                 threshold: float) -> dict:
+    """Diff one bench file. Returns {skipped, reason, rows, regressions}."""
+    fp_cur, fp_base = fingerprint(current), fingerprint(baseline)
+    if fp_cur is None or fp_base is None or fp_cur != fp_base:
+        return {"file": name, "skipped": True,
+                "reason": "host fingerprint mismatch "
+                          f"({fp_base} -> {fp_cur})",
+                "rows": [], "regressions": 0}
+    if bool(current.get("quick")) != bool(baseline.get("quick")):
+        return {"file": name, "skipped": True,
+                "reason": "quick flag mismatch (different workloads)",
+                "rows": [], "regressions": 0}
+    extract = EXTRACTORS[name]
+    cur, base = extract(current), extract(baseline)
+    rows: List[dict] = []
+    regressions = 0
+    for label in sorted(set(cur) & set(base)):
+        new, direction = cur[label]
+        old, _ = base[label]
+        ratio = new / old
+        if direction == LOWER:
+            regressed = new > old * (1.0 + threshold)
+        else:
+            regressed = new < old * (1.0 - threshold)
+        regressions += bool(regressed)
+        rows.append({"series": label, "old": old, "new": new,
+                     "ratio": round(ratio, 4), "direction": direction,
+                     "regressed": regressed})
+    return {"file": name, "skipped": False, "reason": "",
+            "rows": rows, "regressions": regressions}
+
+
+def _load_baseline(name: str, ref: Optional[str],
+                   baseline_dir: Optional[str],
+                   repo: str) -> Optional[dict]:
+    if baseline_dir is not None:
+        path = os.path.join(baseline_dir, name)
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return json.load(f)
+    try:
+        out = subprocess.run(
+            ["git", "-C", repo, "show", f"{ref}:{name}"],
+            capture_output=True, text=True, check=True)
+    except (subprocess.CalledProcessError, OSError):
+        return None
+    try:
+        return json.loads(out.stdout)
+    except json.JSONDecodeError:
+        return None
+
+
+def run(current_dir: str = ".", baseline_ref: str = "HEAD",
+        baseline_dir: Optional[str] = None,
+        threshold: float = 0.25, files: Optional[List[str]] = None) -> dict:
+    """Programmatic entry point; returns the full comparison report."""
+    names = files or sorted(EXTRACTORS)
+    report = {"threshold": threshold, "files": [], "regressions": 0,
+              "compared": 0, "skipped": 0}
+    for name in names:
+        cur_path = os.path.join(current_dir, name)
+        if not os.path.exists(cur_path):
+            report["files"].append({"file": name, "skipped": True,
+                                    "reason": "no current file",
+                                    "rows": [], "regressions": 0})
+            report["skipped"] += 1
+            continue
+        with open(cur_path) as f:
+            current = json.load(f)
+        baseline = _load_baseline(name, baseline_ref, baseline_dir,
+                                  repo=current_dir)
+        if baseline is None:
+            report["files"].append({"file": name, "skipped": True,
+                                    "reason": "no baseline",
+                                    "rows": [], "regressions": 0})
+            report["skipped"] += 1
+            continue
+        res = compare_docs(name, current, baseline, threshold)
+        report["files"].append(res)
+        if res["skipped"]:
+            report["skipped"] += 1
+        else:
+            report["compared"] += 1
+            report["regressions"] += res["regressions"]
+    return report
+
+
+def _print_report(report: dict):
+    thr = report["threshold"]
+    for res in report["files"]:
+        if res["skipped"]:
+            print(f"SKIP {res['file']}: {res['reason']}")
+            continue
+        print(f"DIFF {res['file']} ({len(res['rows'])} gated series, "
+              f"threshold {thr:.0%}):")
+        for r in res["rows"]:
+            flag = "REGRESSION" if r["regressed"] else "ok"
+            arrow = "<=" if r["direction"] == LOWER else ">="
+            print(f"  {flag:>10}  {r['series']}: {r['old']:g} -> "
+                  f"{r['new']:g}  (x{r['ratio']:.3f}, want {arrow} "
+                  f"{'1+' if r['direction'] == LOWER else '1-'}{thr:g})")
+    print(f"compared {report['compared']} file(s), skipped "
+          f"{report['skipped']}, regressions: {report['regressions']}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail on >threshold regression of gated BENCH series "
+                    "vs the committed baselines (same host fingerprint "
+                    "required)")
+    ap.add_argument("--current-dir", default=".",
+                    help="directory holding the fresh BENCH_*.json")
+    ap.add_argument("--baseline-ref", default="HEAD",
+                    help="git ref providing baseline BENCH files")
+    ap.add_argument("--baseline-dir", default=None,
+                    help="read baselines from a directory instead of git")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="relative regression that fails (default 0.25)")
+    ap.add_argument("--files", nargs="*", default=None,
+                    help="subset of BENCH files to compare")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the report as JSON")
+    ap.add_argument("--no-fail", action="store_true",
+                    help="report regressions but exit 0")
+    args = ap.parse_args(argv)
+    report = run(current_dir=args.current_dir,
+                 baseline_ref=args.baseline_ref,
+                 baseline_dir=args.baseline_dir,
+                 threshold=args.threshold, files=args.files)
+    if args.json:
+        print(json.dumps(report, indent=2))
+    else:
+        _print_report(report)
+    if report["regressions"] and not args.no_fail:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,6 +29,7 @@ import threading
 import time
 from typing import Optional, Tuple
 
+from repro.obs.context import current_context
 from repro.obs.metrics import MetricsRegistry
 
 _LEN = struct.Struct(">Q")
@@ -127,6 +128,14 @@ class Connection:
         return self._sock.getpeername()
 
     def send(self, msg_type: str, **payload):
+        # Trace propagation (DESIGN.md §16): when a request-scoped
+        # TraceContext is active in this thread, stamp it into the frame
+        # as the optional "_ctx" field. Frames are plain dicts, so peers
+        # that predate the field ignore the extra key, and frames
+        # without it decode exactly as before — compatible both ways.
+        ctx = current_context()
+        if ctx is not None and "_ctx" not in payload:
+            payload["_ctx"] = ctx.to_wire()
         frame = pickle.dumps({"type": msg_type, **payload},
                              protocol=pickle.HIGHEST_PROTOCOL)
         copies = 1

@@ -54,16 +54,25 @@ def _serve_networked(args):
         print(f"chaos: slow cold backend at request seq {points} "
               f"(seed {args.chaos_seed})")
 
+    obs = None
+    if args.obs_dir is not None:
+        from repro.obs import Observability
+        obs = Observability(dir=args.obs_dir, process_name="frontend")
+
     fe = FitFrontend(window=args.window, max_queue=args.max_queue,
                      tenant_rate=args.tenant_quota,
                      default_deadline_s=args.deadline_s,
                      cold_budget_s=min(2.0, args.deadline_s),
-                     port=args.port, chaos=chaos)
+                     port=args.port, chaos=chaos, obs=obs,
+                     scrape_port=args.scrape_port)
     host, port = fe.address
     print(f"fit service listening on {host}:{port} "
           f"(max_queue={args.max_queue}, "
           f"tenant_quota={args.tenant_quota}, "
           f"deadline_s={args.deadline_s})", flush=True)
+    if fe.scrape is not None:
+        print(f"scrape endpoint: {fe.scrape.url('/metrics')}  "
+              f"(also /metrics.json /healthz /slo)", flush=True)
     try:
         with FitServiceClient(fe.address, tenant="launcher") as setup:
             t0 = time.time()
@@ -101,8 +110,14 @@ def _serve_networked(args):
               f"{np.percentile(lat_ms, 99):.1f} ms")
         print("service counts:", fe.status_counts())
         print("zero lost requests:", fe.zero_lost_requests())
+        slo = fe.slo_snapshot()
+        print("slo:", {o["name"]: (o["ok"], o.get("burn_rate"))
+                       for o in slo["objectives"]})
     finally:
         fe.close()
+        if obs is not None:
+            obs.finish()
+            print(f"observability artifacts in {args.obs_dir}", flush=True)
 
 
 def main(argv=None):
@@ -137,6 +152,13 @@ def main(argv=None):
                      help="seed slow-cold-backend faults so the degrade "
                           "path (status=degraded from cached stats) is "
                           "observable")
+    net.add_argument("--scrape-port", type=int, default=None,
+                     help="expose /metrics (Prometheus text), /healthz "
+                          "and /slo on this port (0 = OS-assigned)")
+    net.add_argument("--obs-dir", default=None,
+                     help="write metrics.json / trace.json / "
+                          "telemetry.jsonl + flight-recorder incidents "
+                          "into this run directory")
     args = ap.parse_args(argv)
 
     if args.port is not None:

@@ -21,12 +21,22 @@ summary (percentiles, bytes/iter, span hotspots).
 """
 from __future__ import annotations
 
+import atexit
 import json
 import os
+import signal
+import threading
 from typing import Optional
 
 import numpy as np
 
+from repro.obs.context import (          # noqa: F401  (re-exports)
+    TraceContext,
+    current_context,
+    new_trace,
+    use_context,
+)
+from repro.obs.flight import FlightRecorder, load_incident  # noqa: F401
 from repro.obs.metrics import (          # noqa: F401  (re-exports)
     Histogram,
     MetricsRegistry,
@@ -35,8 +45,16 @@ from repro.obs.metrics import (          # noqa: F401  (re-exports)
     snapshot_histograms,
     summarize_histogram,
 )
+from repro.obs.scrape import ScrapeServer, render_prometheus  # noqa: F401
+from repro.obs.slo import DEFAULT_OBJECTIVES, Objective, SLOTracker  # noqa: F401
 from repro.obs.telemetry import TelemetryWriter, jsonable, read_jsonl  # noqa: F401
-from repro.obs.trace import Tracer, load_trace, span_hotspots  # noqa: F401
+from repro.obs.trace import (  # noqa: F401
+    Tracer,
+    is_ancestor,
+    load_trace,
+    span_hotspots,
+    span_tree,
+)
 
 TELEMETRY_FILE = "telemetry.jsonl"
 METRICS_FILE = "metrics.json"
@@ -48,7 +66,8 @@ class Observability:
 
     def __init__(self, dir: Optional[str] = None,
                  process_name: str = "main",
-                 enabled: Optional[bool] = None):
+                 enabled: Optional[bool] = None,
+                 crash_flush: bool = True):
         self.dir = dir
         self.enabled = bool(dir) if enabled is None else bool(enabled)
         self.registry = MetricsRegistry()
@@ -59,6 +78,8 @@ class Observability:
             os.makedirs(dir, exist_ok=True)
             self.telemetry = TelemetryWriter(
                 os.path.join(dir, TELEMETRY_FILE))
+            if crash_flush:
+                self._install_crash_flush()
 
     @classmethod
     def create(cls, dir: str, process_name: str = "main") -> "Observability":
@@ -109,18 +130,57 @@ class Observability:
             self.record(**rec)
 
     # -- lifecycle -----------------------------------------------------------
-    def finish(self):
-        """Write metrics.json + trace.json and close the JSONL sink.
-        Idempotent; a later finish() re-exports the (grown) state."""
+    def _install_crash_flush(self):
+        """Crash-safe artifacts (DESIGN.md §16): flush on interpreter
+        exit and, when possible, on SIGTERM.
+
+        ``atexit`` covers clean-but-finish()-less exits; the SIGTERM
+        hook covers polite kills (it flushes, restores the default
+        handler, and re-raises so exit status stays conventional).  Only
+        installed from the main thread and only when SIGTERM is still at
+        its default — never steals a handler someone else set.  SIGKILL
+        cannot be caught; for that case telemetry flushes per line and
+        the readers tolerate torn tails (read_jsonl / load_trace).
+        """
+        atexit.register(self.finish)
+        if threading.current_thread() is not threading.main_thread():
+            return
+        try:
+            if signal.getsignal(signal.SIGTERM) is not signal.SIG_DFL:
+                return
+
+            def _flush_and_die(signum, frame):
+                try:
+                    self.finish()
+                finally:
+                    signal.signal(signum, signal.SIG_DFL)
+                    os.kill(os.getpid(), signum)
+
+            signal.signal(signal.SIGTERM, _flush_and_die)
+        except (ValueError, OSError):
+            pass  # exotic embedding (no signal support): atexit still holds
+
+    def flush(self):
+        """Write metrics.json + trace.json NOW without closing the
+        telemetry sink — the periodic checkpoint for long-running
+        serving processes (finish() remains the closing flush)."""
         if not self.enabled or self.dir is None:
             return
         with open(os.path.join(self.dir, METRICS_FILE), "w") as f:
             json.dump(jsonable(self.registry.snapshot()), f, indent=2)
             f.write("\n")
         self.tracer.export(os.path.join(self.dir, TRACE_FILE))
+
+    def finish(self):
+        """Write metrics.json + trace.json and close the JSONL sink.
+        Idempotent; a later finish() re-exports the (grown) state."""
+        if not self.enabled or self.dir is None:
+            return
+        self.flush()
         if self.telemetry is not None:
             self.telemetry.close()
             self.telemetry = None
+        atexit.unregister(self.finish)
 
 
 NOOP = Observability(dir=None, enabled=False)

@@ -63,10 +63,20 @@ class TelemetryWriter:
 
 
 def read_jsonl(path: str) -> List[dict]:
+    """Read a JSONL file, truncating at the first undecodable line.
+
+    A process killed mid-``write`` leaves at most one partial trailing
+    line; stopping at the first bad line keeps every complete record and
+    never raises for a torn tail (DESIGN.md §16 crash-safe artifacts).
+    """
     out = []
     with open(path) as f:
         for line in f:
             line = line.strip()
-            if line:
+            if not line:
+                continue
+            try:
                 out.append(json.loads(line))
+            except json.JSONDecodeError:
+                break
     return out

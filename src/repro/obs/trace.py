@@ -16,6 +16,17 @@ cross-process events align; durations (``dur``) come from
 Disabled fast path: ``span`` on a disabled tracer returns a reused no-op
 context manager — no event dict, no timestamp read, no allocation — so
 instrumented code costs one attribute check when observability is off.
+
+Trace-context integration (DESIGN.md §16): when a request-scoped
+:class:`~repro.obs.context.TraceContext` is active (contextvar), each
+span pushes a *child* context for its dynamic extent and stamps
+``trace_id``/``span_id``/``parent_id`` into its event args.  Nested
+spans therefore form a parent chain, and anything sent over the
+transport from inside a span carries that span's context — which is how
+a client span becomes the ancestor of a frontend/executor span in
+another process.  ``complete_at`` records a span retroactively from
+stored timestamps (queue wait: nobody is "in" the span while a request
+sits in the queue).
 """
 from __future__ import annotations
 
@@ -25,6 +36,8 @@ import os
 import threading
 import time
 from typing import List, Optional
+
+from repro.obs.context import TraceContext, current_context, use_context
 
 
 class _NullSpan:
@@ -41,7 +54,8 @@ _NULL_SPAN = _NullSpan()
 
 
 class _Span:
-    __slots__ = ("_tracer", "_name", "_attrs", "_t0_us", "_t0")
+    __slots__ = ("_tracer", "_name", "_attrs", "_t0_us", "_t0", "_ctx",
+                 "_cm")
 
     def __init__(self, tracer: "Tracer", name: str, attrs: dict):
         self._tracer = tracer
@@ -49,14 +63,39 @@ class _Span:
         self._attrs = attrs
 
     def __enter__(self):
+        parent = current_context()
+        if parent is not None:
+            # This span is a new node in the request's trace: push a child
+            # context so nested spans (and frames sent from inside) chain
+            # under it.
+            self._ctx = parent.child()
+            self._cm = use_context(self._ctx)
+            self._cm.__enter__()
+        else:
+            self._ctx = None
+            self._cm = None
         self._t0_us = time.time_ns() // 1000
         self._t0 = time.perf_counter()
         return self
 
     def __exit__(self, *exc):
         dur_us = (time.perf_counter() - self._t0) * 1e6
-        self._tracer._emit(self._name, self._t0_us, dur_us, self._attrs)
+        if self._cm is not None:
+            self._cm.__exit__(None, None, None)
+        attrs = self._attrs
+        if self._ctx is not None:
+            attrs = dict(attrs)
+            attrs["trace_id"] = self._ctx.trace_id
+            attrs["span_id"] = self._ctx.span_id
+            if self._ctx.parent_id is not None:
+                attrs["parent_id"] = self._ctx.parent_id
+        self._tracer._emit(self._name, self._t0_us, dur_us, attrs)
         return False
+
+    @property
+    def context(self) -> Optional[TraceContext]:
+        """The child TraceContext this span pushed (None untraced)."""
+        return self._ctx
 
 
 class Tracer:
@@ -96,6 +135,27 @@ class Tracer:
             return wrapper
 
         return deco
+
+    def complete_at(self, name: str, t0_us: int, dur_s: float,
+                    ctx: Optional[TraceContext] = None, **attrs):
+        """Record a complete span retroactively from stored timestamps.
+
+        Used for intervals with no live frame on any stack — queue wait
+        is the canonical one: the request sat in the pending map between
+        ``t0_us`` (wall-clock µs at enqueue) and now.  ``ctx`` parents
+        the emitted span under a request's trace; a fresh span id is
+        minted so sibling retro-spans don't collide.
+        """
+        if not self.enabled:
+            return
+        if ctx is not None:
+            node = ctx.child()
+            attrs = dict(attrs)
+            attrs["trace_id"] = node.trace_id
+            attrs["span_id"] = node.span_id
+            if node.parent_id is not None:
+                attrs["parent_id"] = node.parent_id
+        self._emit(name, int(t0_us), max(dur_s, 0.0) * 1e6, attrs)
 
     def instant(self, name: str, **attrs):
         if not self.enabled:
@@ -157,9 +217,77 @@ class Tracer:
 
 
 def load_trace(path: str) -> List[dict]:
+    """Load a trace.json; tolerates a truncated file (killed writer).
+
+    A SIGKILL mid-``export`` leaves a prefix of the JSON document on
+    disk.  Rather than fail, salvage every complete event object from
+    the ``traceEvents`` array — the crash-safe-artifacts contract
+    (DESIGN.md §16): partially-written artifacts still load.
+    """
     with open(path) as f:
-        doc = json.load(f)
+        text = f.read()
+    try:
+        doc = json.loads(text)
+    except json.JSONDecodeError:
+        return _recover_truncated_trace(text)
     return doc["traceEvents"] if isinstance(doc, dict) else doc
+
+
+def _recover_truncated_trace(text: str) -> List[dict]:
+    start = text.find("[")
+    if start < 0:
+        return []
+    dec = json.JSONDecoder()
+    events: List[dict] = []
+    pos = start + 1
+    n = len(text)
+    while pos < n:
+        while pos < n and text[pos] in ", \t\r\n":
+            pos += 1
+        if pos >= n or text[pos] == "]":
+            break
+        try:
+            ev, pos = dec.raw_decode(text, pos)
+        except json.JSONDecodeError:
+            break  # truncated mid-object: keep what we have
+        if isinstance(ev, dict):
+            events.append(ev)
+    return events
+
+
+def span_tree(events: List[dict]) -> dict:
+    """Index context-stamped spans: {span_id: event} for one trace set.
+
+    Helper for connectivity checks ("is the client span an ancestor of
+    the executor span?") over merged multi-process events.
+    """
+    by_id: dict = {}
+    for e in events:
+        if e.get("ph") != "X":
+            continue
+        args = e.get("args") or {}
+        sid = args.get("span_id")
+        if isinstance(sid, str):
+            by_id[sid] = e
+    return by_id
+
+
+def is_ancestor(events: List[dict], ancestor_span_id: str,
+                span_id: str) -> bool:
+    """True if ``ancestor_span_id`` is on ``span_id``'s parent chain
+    (walked through the stamped args of context-carrying spans)."""
+    by_id = span_tree(events)
+    seen = set()
+    cur = by_id.get(span_id)
+    while cur is not None:
+        pid = (cur.get("args") or {}).get("parent_id")
+        if pid == ancestor_span_id:
+            return True
+        if not isinstance(pid, str) or pid in seen:
+            return False
+        seen.add(pid)
+        cur = by_id.get(pid)
+    return False
 
 
 def span_hotspots(events: List[dict]) -> List[dict]:

@@ -33,6 +33,8 @@ import threading
 import time
 from typing import Dict, Optional
 
+from repro.obs.metrics import MetricsRegistry
+
 
 @dataclasses.dataclass(frozen=True)
 class Admission:
@@ -78,7 +80,9 @@ class AdmissionController:
 
     def __init__(self, max_queue: int = 256,
                  tenant_rate: Optional[float] = None,
-                 tenant_burst: Optional[float] = None):
+                 tenant_burst: Optional[float] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 max_labeled_tenants: int = 32):
         self.max_queue = int(max_queue)
         self.tenant_rate = tenant_rate
         self.tenant_burst = (float(tenant_burst) if tenant_burst is not None
@@ -87,13 +91,38 @@ class AdmissionController:
         self._lock = threading.Lock()
         self.admitted = 0
         self.rejected = 0
+        # Optional per-tenant labelled series (admission.admitted /
+        # admission.rejected / admission.tokens gauges) for the scrape
+        # endpoint. Tenant names come off the wire, so label cardinality
+        # is bounded: the first ``max_labeled_tenants`` distinct names
+        # get their own label, later ones collapse into "_other" — a
+        # hostile client inventing tenants cannot grow the registry.
+        self._registry = registry
+        self._max_labeled = int(max_labeled_tenants)
+        self._labeled: set = set()
+
+    def _label(self, tenant: str) -> str:
+        # caller holds the lock
+        if tenant in self._labeled:
+            return tenant
+        if len(self._labeled) < self._max_labeled:
+            self._labeled.add(tenant)
+            return tenant
+        return "_other"
 
     def admit(self, tenant: str, in_flight: int) -> Admission:
         """One decision: queue bound first (overload protection beats
         fairness), then the tenant's bucket."""
         with self._lock:
+            reg = self._registry
+            label = self._label(tenant) if reg is not None else tenant
+            if reg is not None:
+                reg.set_gauge("admission.queue_depth", in_flight)
             if in_flight >= self.max_queue:
                 self.rejected += 1
+                if reg is not None:
+                    reg.inc("admission.rejected", tenant=label,
+                            reason="queue_full")
                 # the backlog drains at the service rate; a full queue's
                 # retry hint is proportional to how deep the caller
                 # would have been, floored so clients do not hammer
@@ -106,11 +135,25 @@ class AdmissionController:
                     bucket = self._buckets[tenant] = TokenBucket(
                         self.tenant_rate, self.tenant_burst)
                 adm = bucket.try_take()
+                if reg is not None:
+                    reg.set_gauge("admission.tokens", bucket.tokens,
+                                  tenant=label)
                 if not adm.ok:
                     self.rejected += 1
+                    if reg is not None:
+                        reg.inc("admission.rejected", tenant=label,
+                                reason="quota")
                     return adm
             self.admitted += 1
+            if reg is not None:
+                reg.inc("admission.admitted", tenant=label)
             return Admission(ok=True)
+
+    def bucket_levels(self) -> Dict[str, float]:
+        """{tenant -> current token level} (cardinality-capped names)."""
+        with self._lock:
+            return {self._label(t): b.tokens
+                    for t, b in self._buckets.items()}
 
     def snapshot(self) -> dict:
         with self._lock:

@@ -37,10 +37,11 @@ backend, which is how the load benchmark proves the degrade path.
 from __future__ import annotations
 
 import itertools
+import os
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -52,7 +53,15 @@ from repro.cluster.transport import (
     Listener,
     connect,
 )
+from repro.obs import Observability
+from repro.obs.context import TraceContext, current_context, new_trace, \
+    use_context
+from repro.obs.flight import FlightRecorder
+from repro.obs.flight import NOOP as FLIGHT_NOOP
 from repro.obs.metrics import MetricsRegistry
+from repro.obs.scrape import ScrapeServer
+from repro.obs.slo import DEFAULT_OBJECTIVES, Objective, SLOTracker
+from repro.obs.trace import Tracer
 from repro.service import registry
 from repro.service.admission import AdmissionController, CircuitBreaker
 from repro.service.server import FitRequest, FitResponse, FitServer
@@ -72,16 +81,19 @@ class _Pending:
     terminal response" a structural property rather than a hope."""
 
     __slots__ = ("req", "tenant", "rid", "conn", "deadline", "enqueue_t",
-                 "_done", "_lock")
+                 "enqueue_wall_us", "ctx", "_done", "_lock")
 
     def __init__(self, req: FitRequest, tenant: str, rid: int,
-                 conn: Connection, deadline: Optional[float]):
+                 conn: Connection, deadline: Optional[float],
+                 ctx: Optional[TraceContext] = None):
         self.req = req
         self.tenant = tenant
         self.rid = rid
         self.conn = conn
         self.deadline = deadline          # absolute monotonic, or None
         self.enqueue_t = time.monotonic()
+        self.enqueue_wall_us = time.time_ns() // 1000
+        self.ctx = ctx                    # request's wire TraceContext
         self._done = False
         self._lock = threading.Lock()
 
@@ -116,25 +128,64 @@ class FitFrontend:
                  idle_timeout_s: float = 60.0,
                  frame_deadline_s: float = 5.0,
                  max_frame_bytes: int = 64 << 20,
-                 chaos: Optional[FaultInjector] = None):
+                 chaos: Optional[FaultInjector] = None,
+                 obs: Optional[Observability] = None,
+                 scrape_port: Optional[int] = None,
+                 slo_objectives: Optional[Sequence[Objective]] = None,
+                 slo_window_s: float = 600.0,
+                 flight: Optional[FlightRecorder] = None):
         self.server = server or FitServer(window=window)
         self.window = int(window)
         self.flush_interval_s = float(flush_interval_s)
         self.default_deadline_s = float(default_deadline_s)
         self.cold_budget_s = cold_budget_s
         self.chaos = chaos
+        # Live observability plane (DESIGN.md §16). The metrics registry
+        # is ALWAYS real — status_counts()/zero_lost_requests() are
+        # service accounting, not optional telemetry — but when an
+        # enabled Observability is handed in, the service counts into
+        # ITS registry so metrics.json / the scrape endpoint carry the
+        # serving series, and its tracer records the request spans.
+        self.obs = obs
+        if obs is not None:
+            self.metrics = obs.registry
+            self.tracer = obs.tracer
+        else:
+            self.metrics = MetricsRegistry()
+            self.tracer = Tracer(enabled=False)
+        if flight is not None:
+            self.flight = flight
+        elif obs is not None and obs.enabled and obs.dir is not None:
+            self.flight = FlightRecorder(
+                dir=os.path.join(obs.dir, "incidents"),
+                process_name="frontend")
+        else:
+            self.flight = FLIGHT_NOOP
+        self.slo = SLOTracker(window_s=slo_window_s)
+        self.slo_objectives: Tuple[Objective, ...] = (
+            tuple(slo_objectives) if slo_objectives is not None
+            else DEFAULT_OBJECTIVES)
         self.admission = AdmissionController(
             max_queue=max_queue, tenant_rate=tenant_rate,
-            tenant_burst=tenant_burst)
+            tenant_burst=tenant_burst, registry=self.metrics)
         self.breaker = CircuitBreaker(failure_threshold=breaker_threshold,
                                       reset_after_s=breaker_reset_s)
-        self.metrics = MetricsRegistry()
         self.counter = ByteCounter(self.metrics)
         self.listener = Listener(host, port, chaos=chaos,
                                  max_frame_bytes=max_frame_bytes,
                                  frame_deadline_s=frame_deadline_s)
         self.address: Tuple[str, int] = self.listener.address
         self.idle_timeout_s = float(idle_timeout_s)
+        self._t_start = time.monotonic()
+        # live scrape endpoint (/metrics, /healthz, /slo) — optional;
+        # port 0 asks the OS for one (see self.scrape.address)
+        self.scrape: Optional[ScrapeServer] = None
+        if scrape_port is not None:
+            self.scrape = ScrapeServer(
+                snapshot_fn=self.metrics_snapshot,
+                health_fn=self.health,
+                slo_fn=self.slo_snapshot,
+                host=host, port=int(scrape_port))
 
         self._cv = threading.Condition()
         self._pending: List[_Pending] = []
@@ -221,7 +272,9 @@ class FitFrontend:
                 "server": self.server.counters.snapshot(),
                 "admission": self.admission.snapshot(),
                 "breaker": self.breaker.snapshot(),
-                "frontend": self.status_counts()})
+                "frontend": self.status_counts(),
+                "slo": self.slo_snapshot(),
+                "flight": self.flight.snapshot()})
         elif mtype == "ping":
             self._safe_send(conn, "pong", rid=rid)
         else:
@@ -250,6 +303,18 @@ class FitFrontend:
     # -- admission -----------------------------------------------------------
     def _admit_fit(self, conn: Connection, msg: dict, rid: int,
                    tenant: str):
+        # Re-activate the request's wire TraceContext (if the client
+        # sent one) for the dynamic extent of the admission decision:
+        # the admit span becomes a child of the client's span, and the
+        # context rides the _Pending into queue-wait / solve spans.
+        ctx = TraceContext.from_wire(msg.get("_ctx"))
+        with use_context(ctx):
+            with self.tracer.span("frontend.admit", tenant=tenant,
+                                  rid=rid):
+                self._admit_fit_inner(conn, msg, rid, tenant, ctx)
+
+    def _admit_fit_inner(self, conn: Connection, msg: dict, rid: int,
+                         tenant: str, ctx: Optional[TraceContext]):
         self.metrics.inc("service.fit_seen", tenant=tenant)
         with self._cv:
             in_flight = len(self._pending) + len(self._cold_inflight)
@@ -257,6 +322,11 @@ class FitFrontend:
         if not adm.ok:
             self.metrics.inc("service.responses", status="rejected")
             self.metrics.inc("service.rejected", reason=adm.reason)
+            self.slo.record("rejected")
+            self.tracer.instant("frontend.rejected", tenant=tenant,
+                                reason=adm.reason)
+            self.flight.note("reject", tenant=tenant, rid=rid,
+                             reason=adm.reason)
             self._safe_send(conn, "fit_result", rid=rid,
                             status="rejected", x=None, iters=0,
                             batch_size=0, from_cache=False,
@@ -272,7 +342,9 @@ class FitFrontend:
         dl = msg.get("deadline_s", None)
         dl = self.default_deadline_s if dl is None else float(dl)
         deadline = (time.monotonic() + dl) if dl > 0 else None
-        p = _Pending(req, tenant, rid, conn, deadline)
+        p = _Pending(req, tenant, rid, conn, deadline, ctx=ctx)
+        self.flight.note("admit", tenant=tenant, rid=rid,
+                         problem=req.problem)
         with self._cv:
             self._fit_seq += 1
             if self.chaos is not None:
@@ -288,14 +360,31 @@ class FitFrontend:
                  retry_after_s: Optional[float] = None) -> bool:
         if not p.claim():
             return False
+        latency_s = time.monotonic() - p.enqueue_t
+        warm = p.req.problem in registry.GRAM_SOLVERS
         self.metrics.inc("service.responses", status=status)
-        self.metrics.observe("service.queue_wait_s",
-                             time.monotonic() - p.enqueue_t)
-        self._safe_send(p.conn, "fit_result", rid=p.rid, status=status,
-                        x=None if x is None else np.asarray(x),
-                        iters=int(iters), batch_size=int(batch_size),
-                        from_cache=bool(from_cache), error=error,
-                        retry_after_s=retry_after_s)
+        self.metrics.observe("service.queue_wait_s", latency_s)
+        self.slo.record(status, latency_s=latency_s, warm=warm)
+        self.flight.note("respond", status=status, tenant=p.tenant,
+                         rid=p.rid, latency_s=round(latency_s, 6),
+                         **({"trace_id": p.ctx.trace_id}
+                            if p.ctx is not None else {}))
+        # the terminal frame carries the request context back (p.ctx
+        # re-activated so transport stamps _ctx; solver thread has none)
+        with use_context(p.ctx):
+            self._safe_send(p.conn, "fit_result", rid=p.rid, status=status,
+                            x=None if x is None else np.asarray(x),
+                            iters=int(iters), batch_size=int(batch_size),
+                            from_cache=bool(from_cache), error=error,
+                            retry_after_s=retry_after_s)
+        if status in ("error", "deadline"):
+            # post-incident debugging trigger (DESIGN.md §16): dump the
+            # flight ring around any request that died
+            self.flight.incident(
+                f"status_{status}", tenant=p.tenant, rid=p.rid,
+                error=error,
+                **({"trace_id": p.ctx.trace_id}
+                   if p.ctx is not None else {}))
         return True
 
     def _respond_from(self, p: _Pending, r: FitResponse):
@@ -312,8 +401,14 @@ class FitFrontend:
                         b=p.req.b,
                         mu=p.req.mu if p.req.mu is not None else 1.0,
                         iters=1)
+        self.flight.note("degrade", tenant=p.tenant, rid=p.rid, why=why,
+                         **({"trace_id": p.ctx.trace_id}
+                            if p.ctx is not None else {}))
         try:
-            r = self.server.solve_one(fb)
+            with use_context(p.ctx):
+                with self.tracer.span("frontend.degrade", why=why,
+                                      tenant=p.tenant):
+                    r = self.server.solve_one(fb)
             if r.status != "ok":
                 raise RuntimeError(r.error or "fallback failed")
             self.metrics.inc("service.degraded", why=why)
@@ -365,14 +460,26 @@ class FitFrontend:
             self._respond(p, "error", error="service shutting down")
 
     def _dispatch_batch(self, batch: List[_Pending]):
+        # close out each request's queue-wait interval: a retroactive
+        # span (nobody was "in" it) parented under the request context,
+        # plus the dispatch_wait histogram the trace tests reconcile
+        now = time.monotonic()
+        for p in batch:
+            wait_s = now - p.enqueue_t
+            self.metrics.observe("service.dispatch_wait_s", wait_s)
+            self.tracer.complete_at("frontend.queue_wait",
+                                    p.enqueue_wall_us, wait_s,
+                                    ctx=p.ctx, tenant=p.tenant)
         warm = [p for p in batch if p.req.problem in registry.GRAM_SOLVERS]
         cold = [p for p in batch if p.req.problem not in
                 registry.GRAM_SOLVERS]
         if warm:
             resps: List[FitResponse] = []
-            for p in warm:
-                resps.extend(self.server.submit(p.req))
-            resps.extend(self.server.flush())
+            with self.tracer.span("frontend.warm_flush",
+                                  batch=len(warm)):
+                for p in warm:
+                    resps.extend(self.server.submit(p.req))
+                resps.extend(self.server.flush())
             by_id = {r.request_id: r for r in resps}
             for p in warm:
                 r = by_id.get(p.req.request_id)
@@ -395,16 +502,25 @@ class FitFrontend:
         if self.cold_budget_s is not None:
             b = time.monotonic() + self.cold_budget_s
             budget = b if budget is None else min(budget, b)
-        fut = self._cold_pool.submit(self._cold_solve, p.req)
+        fut = self._cold_pool.submit(self._cold_solve, p.req, p.ctx)
         with self._cv:
             self._cold_inflight.append((p, fut, budget))
 
-    def _cold_solve(self, req: FitRequest) -> FitResponse:
-        if self.chaos is not None:
-            for kind, param in self.chaos.process_actions(self._fit_seq):
-                if kind == "slow":
-                    time.sleep(param / 1e3)
-        return self.server.solve_one(req)
+    def _cold_solve(self, req: FitRequest,
+                    ctx: Optional[TraceContext] = None) -> FitResponse:
+        # contextvars do not follow work into pool threads, so the
+        # request context is passed explicitly and re-activated here;
+        # the executor span (chaos stall included — the timeline should
+        # SHOW the injected slowness) chains under the client's span.
+        with use_context(ctx):
+            with self.tracer.span("frontend.cold_solve",
+                                  problem=req.problem):
+                if self.chaos is not None:
+                    for kind, param in self.chaos.process_actions(
+                            self._fit_seq):
+                        if kind == "slow":
+                            time.sleep(param / 1e3)
+                return self.server.solve_one(req)
 
     def _poll_cold(self) -> int:
         with self._cv:
@@ -430,16 +546,75 @@ class FitFrontend:
                 # breaker stays untouched
                 self._respond(p, "error", error=f"{type(e).__name__}: {e}")
             except Exception as e:        # noqa: BLE001 — backend failure
-                self.breaker.record_failure()
+                self._breaker_failure(why=f"{type(e).__name__}: {e}")
                 self.metrics.inc("service.cold_failures")
                 self._respond(p, "error", error=f"{type(e).__name__}: {e}")
         for p in timed_out:
-            self.breaker.record_failure()
+            self._breaker_failure(why="cold budget blown")
             self.metrics.inc("service.cold_budget_blown")
             self._respond_degraded(p, "cold solve blew its budget")
         return len(done) + len(timed_out)
 
+    def _breaker_failure(self, why: str):
+        """Record a cold-backend failure; a closed→open transition (a
+        trip) is an incident trigger — dump the flight ring."""
+        before = self.breaker.trips
+        self.breaker.record_failure()
+        if self.breaker.trips > before:
+            self.metrics.inc("service.breaker_trips")
+            self.tracer.instant("breaker.trip", why=why)
+            self.flight.note("breaker", state="open", why=why)
+            self.flight.incident("breaker_trip", why=why,
+                                 failures=self.breaker.failure_threshold)
+
     # -- observability / lifecycle -------------------------------------------
+    def metrics_snapshot(self) -> dict:
+        """One merged registry snapshot for the scrape endpoint: the
+        service/admission series, the shared FitServer's ``server.*``
+        series, live gauges (queue depth, breaker, connections), and the
+        current SLO gauges — what a Prometheus scrape should see."""
+        reg = MetricsRegistry()
+        reg.merge(self.metrics.snapshot())
+        if self.server.counters.registry is not self.metrics:
+            reg.merge(self.server.counters.registry.snapshot())
+        with self._cv:
+            reg.set_gauge("service.queue_depth", len(self._pending))
+            reg.set_gauge("service.cold_inflight", len(self._cold_inflight))
+            reg.set_gauge("service.connections", len(self._conns))
+        for tenant, tokens in self.admission.bucket_levels().items():
+            reg.set_gauge("admission.tokens", tokens, tenant=tenant)
+        b = self.breaker.snapshot()
+        reg.set_gauge("breaker.open", 1.0 if b["state"] == "open" else 0.0)
+        reg.set_gauge("breaker.failures", b["failures"])
+        reg.set_gauge("breaker.trips", b["trips"])
+        reg.set_gauge("service.uptime_s",
+                      round(time.monotonic() - self._t_start, 3))
+        self.slo.export_gauges(reg, objectives=self.slo_objectives,
+                               external={"zero_lost":
+                                         self.zero_lost_requests()})
+        return reg.snapshot()
+
+    def health(self) -> dict:
+        """Liveness summary for /healthz."""
+        with self._cv:
+            in_flight = len(self._pending) + len(self._cold_inflight)
+            conns = len(self._conns)
+        return {
+            "status": "stopping" if self._stop.is_set() else "ok",
+            "address": list(self.address),
+            "uptime_s": round(time.monotonic() - self._t_start, 3),
+            "in_flight": in_flight,
+            "connections": conns,
+            "breaker": self.breaker.snapshot(),
+            "admission": self.admission.snapshot(),
+        }
+
+    def slo_snapshot(self) -> dict:
+        """Current SLO evaluation (rolling window) for /slo."""
+        return self.slo.evaluate(
+            self.slo_objectives,
+            external={"zero_lost": self.zero_lost_requests()})
+
     def status_counts(self) -> Dict[str, int]:
         """{terminal status -> count} plus bookkeeping totals."""
         out = {s: int(v) for s, v in
@@ -468,6 +643,8 @@ class FitFrontend:
         self._stop.set()
         for t in self._threads:
             t.join(timeout=5.0)
+        if self.scrape is not None:
+            self.scrape.close()
         self.listener.close()
         with self._cv:
             conns = list(self._conns.values())
@@ -495,12 +672,20 @@ class FitServiceClient:
     ``result`` expose the pipelined form the load generator uses."""
 
     def __init__(self, address: Tuple[str, int], tenant: str = "t0",
-                 timeout: float = 10.0, chaos=None, retries: int = 2):
+                 timeout: float = 10.0, chaos=None, retries: int = 2,
+                 tracer: Optional[Tracer] = None):
         self.conn = connect(address, timeout=timeout, chaos=chaos,
                             retries=retries)
         self.tenant = tenant
+        # optional client-side tracer: each fit mints a TraceContext and
+        # records a client span; transport ships the context in-frame so
+        # the frontend's spans chain under it (DESIGN.md §16)
+        self.tracer = tracer
         self._rid = itertools.count(1)
         self._buffer: Dict[int, dict] = {}
+
+    def _traced(self) -> bool:
+        return self.tracer is not None and self.tracer.enabled
 
     def _send(self, mtype: str, **payload) -> int:
         rid = next(self._rid)
@@ -548,15 +733,33 @@ class FitServiceClient:
                   mu=None, l2: float = 0.0, C: float = 1.0,
                   delta: float = 1.0, iters: int = 1000,
                   deadline_s: Optional[float] = None) -> int:
-        return self._send("fit", problem=problem, fingerprint=fingerprint,
-                          b=None if b is None else np.asarray(b), mu=mu,
-                          l2=l2, C=C, delta=delta, iters=iters,
-                          deadline_s=deadline_s)
+        send = lambda: self._send(  # noqa: E731
+            "fit", problem=problem, fingerprint=fingerprint,
+            b=None if b is None else np.asarray(b), mu=mu,
+            l2=l2, C=C, delta=delta, iters=iters, deadline_s=deadline_s)
+        if not self._traced():
+            return send()
+        # mint a trace unless the caller already opened one (sync fit()
+        # wraps this in a request-spanning client span)
+        mint = current_context() is None
+        with use_context(new_trace() if mint else None):
+            with self.tracer.span("client.submit", tenant=self.tenant,
+                                  problem=problem):
+                return send()
 
     def fit(self, problem: str, fingerprint: str,
             timeout: float = 30.0, **kw) -> dict:
-        rid = self.fit_async(problem, fingerprint, **kw)
-        return self.result(rid, timeout=timeout)
+        if not self._traced():
+            rid = self.fit_async(problem, fingerprint, **kw)
+            return self.result(rid, timeout=timeout)
+        # one client span covering submit → terminal response; the span's
+        # context crosses the wire inside the fit frame, so every
+        # frontend/executor span of this request is its descendant
+        with use_context(new_trace()):
+            with self.tracer.span("client.fit", tenant=self.tenant,
+                                  problem=problem):
+                rid = self.fit_async(problem, fingerprint, **kw)
+                return self.result(rid, timeout=timeout)
 
     def counters(self, timeout: float = 10.0) -> dict:
         return self.result(self._send("counters"), timeout=timeout)
